@@ -1,0 +1,7 @@
+"""Benchmark harness — one module per paper table/figure (dpBento §5–§8).
+
+Each bench module declares a measurement BOX (the paper's declarative job
+description) and is executed by ``benchmarks.run`` through the framework's
+Runner, exactly the workflow of paper Fig. 3. Results land in
+``results/bench/<figure>.csv`` and a combined CSV goes to stdout.
+"""

@@ -1,0 +1,212 @@
+"""Per-figure measurement boxes (paper Figs. 4–15 → our TPU-adapted tasks).
+
+Every entry is a plain dict in the box JSON schema — the same text a user
+would put in a ``.json`` file — so the harness exercises the declarative
+path end-to-end. Parameter lists here are trimmed for CPU wall-clock sanity
+(the full spaces live in each task's ``param_space`` and can be swept with
+``python -m repro.core.runner <box.json>``).
+"""
+from __future__ import annotations
+
+# fig id -> box dict. Order matters: run.py executes in this order.
+FIGURES: dict[str, dict] = {
+    # ---- §5.1 compute: primitive arithmetic (Fig. 4) ----------------------
+    "fig4_arithmetic": {
+        "name": "fig4_arithmetic",
+        "tasks": [
+            {
+                "task": "compute",
+                "params": {
+                    "data_type": ["int8", "int32", "bfloat16", "float32"],
+                    "operation": ["add", "sub", "mul", "div", "matmul"],
+                },
+                "metrics": ["ops_per_s", "min_latency_us"],
+            }
+        ],
+    },
+    # ---- §5.1 compute: string ops (Fig. 5) ---------------------------------
+    "fig5_strings": {
+        "name": "fig5_strings",
+        "tasks": [
+            {
+                "task": "strings",
+                "params": {
+                    "width": ["str10", "str64", "str256", "str1024"],
+                    "operation": ["cmp", "cat", "xfrm"],
+                },
+                "metrics": ["ops_per_s"],
+            }
+        ],
+    },
+    # ---- §5.2 hardware acceleration (Fig. 6) -------------------------------
+    # DPU ASIC accelerators → Pallas/MXU kernels vs plain jnp ("SIMD on CPU"),
+    # plus int8 quantization as the compression analogue.
+    "fig6_accelerators": {
+        "name": "fig6_accelerators",
+        "tasks": [
+            {
+                "task": "pallas_accel",
+                "params": {
+                    "workload": ["attention", "gmm", "filter_agg"],
+                    "size": ["small", "medium", "large"],
+                    "impl": ["kernel", "jnp"],
+                },
+                "metrics": ["ops_per_s", "avg_latency_us"],
+            },
+            {
+                "task": "quantize",
+                "params": {
+                    "operation": ["quantize", "dequantize", "roundtrip"],
+                    "payload": ["64KB", "1MB", "16MB"],
+                },
+                "metrics": ["bandwidth_gb_s", "avg_latency_us"],
+            },
+        ],
+    },
+    # ---- §5.3 memory (Figs. 7 + 8) ------------------------------------------
+    "fig7_memory": {
+        "name": "fig7_memory",
+        "tasks": [
+            {
+                "task": "memory",
+                "params": {
+                    "object_size": ["16KB", "4MB", "1GB"],
+                    "pattern": ["sequential", "random"],
+                    "operation": ["read", "write"],
+                    "lanes": [1],
+                },
+                "metrics": ["ops_per_s", "bandwidth_gb_s"],
+            }
+        ],
+    },
+    "fig8_memory_scaling": {
+        "name": "fig8_memory_scaling",
+        "tasks": [
+            {
+                "task": "memory",
+                "params": {
+                    "object_size": ["16KB"],
+                    "pattern": ["random"],
+                    "operation": ["read"],
+                    "lanes": [1, 4, 16],
+                },
+                "metrics": ["ops_per_s"],
+            }
+        ],
+    },
+    # ---- §6.1 storage (Figs. 9 + 10) ----------------------------------------
+    "fig9_storage_throughput": {
+        "name": "fig9_storage_throughput",
+        "tasks": [
+            {
+                "task": "storage",
+                "params": {
+                    "io_type": ["h2d", "d2h", "ckpt_write", "ckpt_read"],
+                    "access_size": ["256KB", "4MB", "64MB"],
+                    "depth": [4],
+                },
+                "metrics": ["bandwidth_gb_s"],
+            }
+        ],
+    },
+    "fig10_storage_latency": {
+        "name": "fig10_storage_latency",
+        "tasks": [
+            {
+                "task": "storage",
+                "params": {
+                    "io_type": ["h2d", "d2h", "ckpt_write", "ckpt_read"],
+                    "access_size": ["8KB", "4MB"],
+                    "depth": [1],
+                },
+                "metrics": ["avg_latency_us", "p99_latency_us"],
+            }
+        ],
+    },
+    # ---- §6.2 network (Figs. 11 + 12) ---------------------------------------
+    # TCP stack → default XLA collective schedule; RDMA → hand shard_map.
+    "fig11_network_xla": {
+        "name": "fig11_network_xla",
+        "tasks": [
+            {
+                "task": "network",
+                "params": {
+                    "collective": ["all_reduce", "all_gather", "ppermute"],
+                    "payload": ["32KB", "1MB", "32MB"],
+                    "schedule": ["xla"],
+                },
+                "metrics": ["bandwidth_gb_s", "avg_latency_us", "p99_latency_us"],
+            }
+        ],
+    },
+    "fig12_network_shardmap": {
+        "name": "fig12_network_shardmap",
+        "tasks": [
+            {
+                "task": "network",
+                "params": {
+                    "collective": ["all_reduce", "all_gather", "ppermute"],
+                    "payload": ["32KB", "1MB", "32MB"],
+                    "schedule": ["shardmap"],
+                },
+                "metrics": ["bandwidth_gb_s", "avg_latency_us", "p99_latency_us"],
+            }
+        ],
+    },
+    # ---- §7.1 predicate pushdown (Fig. 13) ----------------------------------
+    "fig13_pushdown": {
+        "name": "fig13_pushdown",
+        "tasks": [
+            {
+                "task": "pushdown",
+                "params": {
+                    "scale": ["0.01", "0.1"],
+                    "selectivity": [0.01, 0.1, 0.5],
+                    "plan": ["baseline", "pushdown", "pushdown_kernel"],
+                },
+                "metrics": ["items_per_s"],
+            }
+        ],
+    },
+    # ---- §7.2 index offloading (Fig. 14) ------------------------------------
+    "fig14_index": {
+        "name": "fig14_index",
+        "tasks": [
+            {
+                "task": "index_offload",
+                "params": {
+                    "scale": ["1M"],
+                    "operation": ["read", "write"],
+                    "pattern": ["uniform", "skewed"],
+                    "split_ratio": [0.0, 0.1, 0.3],
+                    "lanes": [1],
+                },
+                "metrics": ["ops_per_s"],
+            }
+        ],
+    },
+    # ---- §8 full system (Fig. 15) -------------------------------------------
+    "fig15_dbms": {
+        "name": "fig15_dbms",
+        "tasks": [
+            {
+                "task": "dbms",
+                "params": {
+                    "scale": ["0.001", "0.01", "0.1"],
+                    "query": ["q1", "q6", "q12"],
+                    "mode": ["cold", "hot"],
+                },
+                "metrics": ["avg_latency_us", "items_per_s"],
+            },
+            {
+                "task": "app_step",
+                "params": {
+                    "arch": ["olmo-1b", "mamba2-2.7b", "kimi-k2-1t-a32b"],
+                    "kind": ["train", "decode"],
+                    "mode": ["hot"],
+                },
+                "metrics": ["avg_latency_us", "items_per_s"],
+            },
+        ],
+    },
+}

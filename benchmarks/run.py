@@ -1,0 +1,98 @@
+"""Benchmark orchestrator: run every paper-figure box through the framework.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.run                # all figures
+  PYTHONPATH=src python -m benchmarks.run --only fig13_pushdown fig15_dbms
+  PYTHONPATH=src python -m benchmarks.run --iters 5 --warmup 2
+  PYTHONPATH=src python -m benchmarks.run --list
+
+Per figure: expand the box (paper §3.3), execute, write
+results/bench/<figure>.csv, and echo `figure,task,params...,metric,value`
+lines to stdout — the combined CSV consumed by bench_output.txt.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+from benchmarks.figures import FIGURES
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def run_figure(fig: str, runner, out_dir: Path) -> tuple[list[dict], list[dict]]:
+    from repro.core.box import Box
+
+    box = Box.from_dict(FIGURES[fig])
+    res = runner.run_box(box)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{fig}.csv").write_text(res.csv())
+    return res.rows, res.errors
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="benchmarks.run")
+    p.add_argument("--only", nargs="*", default=None, help="figure ids to run")
+    p.add_argument("--iters", type=int, default=3)
+    p.add_argument("--warmup", type=int, default=1)
+    p.add_argument("--out", default=str(RESULTS))
+    p.add_argument("--list", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.list:
+        for fig, box in FIGURES.items():
+            n = sum(
+                1
+                for t in box["tasks"]
+                for _ in _expand_count(t.get("params", {}))
+            )
+            print(f"{fig}: {n} tests over {[t['task'] for t in box['tasks']]}")
+        return 0
+
+    figs = args.only or list(FIGURES)
+    unknown = set(figs) - set(FIGURES)
+    if unknown:
+        p.error(f"unknown figures {sorted(unknown)}; known: {sorted(FIGURES)}")
+
+    from repro.core.runner import Runner
+
+    runner = Runner(platform={"name": "cpu-host"}, iters=args.iters, warmup=args.warmup)
+    out_dir = Path(args.out)
+    all_errors = []
+    print("figure,task,params,metric,value")
+    t_start = time.time()
+    for fig in figs:
+        t0 = time.time()
+        rows, errors = run_figure(fig, runner, out_dir)
+        all_errors.extend({**e, "figure": fig} for e in errors)
+        for row in rows:
+            task = row.get("task", "?")
+            params = ";".join(
+                f"{k[6:]}={row[k]}" for k in sorted(row) if k.startswith("param:")
+            )
+            for k, v in row.items():
+                if k == "task" or k.startswith("param:"):
+                    continue
+                print(f"{fig},{task},{params},{k},{v}")
+        print(
+            f"# {fig}: {len(rows)} rows in {time.time() - t0:.1f}s "
+            f"({len(errors)} errors)",
+            file=sys.stderr,
+        )
+    print(f"# total {time.time() - t_start:.1f}s", file=sys.stderr)
+    for e in all_errors:
+        print(f"ERROR {e['figure']}/{e['task']} {e['params']}: {e['error']}", file=sys.stderr)
+    return 1 if all_errors else 0
+
+
+def _expand_count(params: dict):
+    import itertools
+
+    lists = [v if isinstance(v, list) else [v] for v in params.values()] or [[None]]
+    return itertools.product(*lists)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,54 @@
+"""Quickstart: declare a measurement box, run it, read the report.
+
+This is the paper's Fig. 2 user journey end-to-end: a JSON box naming two
+tasks — a network microbenchmark and predicate pushdown — executed by the
+framework (prepare → run per expanded test → report), printed as a table.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from __future__ import annotations
+
+import json
+
+from repro.core import Box, Runner
+
+# The exact shape a user would put in a .json file (paper Fig. 2).
+BOX_JSON = json.dumps(
+    {
+        "name": "quickstart",
+        "tasks": [
+            {
+                "task": "network",
+                "params": {"collective": ["all_reduce"], "payload": ["1MB"],
+                           "schedule": ["xla", "shardmap"]},
+                "metrics": ["p50_latency_us", "p99_latency_us", "bandwidth_gb_s"],
+            },
+            {
+                "task": "pushdown",
+                "params": {"scale": ["0.01"], "selectivity": [0.01],
+                           "plan": ["baseline", "pushdown"]},
+                "metrics": ["items_per_s"],
+            },
+        ],
+    }
+)
+
+
+def main() -> int:
+    box = Box.from_json(BOX_JSON)
+    print(f"box {box.name!r}: {box.total_tests()} tests")
+    runner = Runner(platform={"name": "cpu-host"}, iters=3, warmup=1)
+    result = runner.run_box(box)
+    print(result.markdown())
+    if result.errors:
+        for e in result.errors:
+            print("ERROR", e["task"], e["error"])
+        return 1
+    # the dpBento clean step is explicit (paper §3.3 step 6):
+    runner.clean()
+    print("cleaned.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

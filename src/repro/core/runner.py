@@ -1,0 +1,136 @@
+"""Runner: executes a box end-to-end (paper §3.3, Fig. 3).
+
+Workflow per task: (1) prepare once for all of the task's tests, (2) run each
+expanded parameter combination sequentially, caching intermediate results in
+the context log, (3) report. `clean` is deliberately NOT invoked after each
+task — boxes may share prepared state — and is exposed as an explicit call /
+CLI, mirroring the paper's design.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import traceback
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any
+
+from repro.core import registry, report
+from repro.core.box import Box
+from repro.core.task import TaskContext, TestResult
+
+
+@dataclass
+class RunnerResult:
+    box: str
+    platform: str
+    rows: list[dict[str, Any]] = field(default_factory=list)
+    results: list[TestResult] = field(default_factory=list)
+    errors: list[dict[str, str]] = field(default_factory=list)
+
+    def csv(self) -> str:
+        return report.to_csv(self.rows)
+
+    def markdown(self) -> str:
+        return report.to_markdown(self.rows)
+
+
+class Runner:
+    def __init__(
+        self,
+        platform: dict[str, Any] | None = None,
+        iters: int = 5,
+        warmup: int = 2,
+        fail_fast: bool = False,
+    ):
+        self.platform = dict(platform or {"name": "default"})
+        self.iters = iters
+        self.warmup = warmup
+        self.fail_fast = fail_fast
+        # Contexts persist across boxes so prepare is shared; cleaned explicitly.
+        self._contexts: dict[str, TaskContext] = {}
+        self._prepared: set[str] = set()
+
+    def _ctx(self, task_name: str) -> TaskContext:
+        if task_name not in self._contexts:
+            self._contexts[task_name] = TaskContext(
+                platform=self.platform, iters=self.iters, warmup=self.warmup
+            )
+        return self._contexts[task_name]
+
+    def run_box(self, box: Box) -> RunnerResult:
+        out = RunnerResult(box=box.name, platform=self.platform.get("name", "default"))
+        for spec in box.tasks:
+            task = registry.get(spec.task)
+            task.validate_params(spec.params)
+            ctx = self._ctx(task.name)
+            if task.name not in self._prepared:
+                task.prepare(ctx)  # (1) prepare once per task
+                self._prepared.add(task.name)
+            metrics = spec.metrics or task.default_metrics
+            for params in spec.expand():  # (2) sequential test execution
+                try:
+                    out.results.append(task.execute_test(ctx, params, metrics))
+                except Exception as e:  # noqa: BLE001 - report, keep going
+                    if self.fail_fast:
+                        raise
+                    out.errors.append(
+                        {"task": task.name, "params": json.dumps(params, default=str),
+                         "error": f"{type(e).__name__}: {e}",
+                         "traceback": traceback.format_exc()}
+                    )
+            # (3) report from accumulated results of this task
+            task_results = [r for r in out.results if r.task == task.name]
+            out.rows.extend(task.report(ctx, task_results))
+        return out
+
+    def clean(self, task_name: str | None = None) -> None:
+        """Explicit cleanup (paper step 6) — restores pre-benchmark state."""
+        names = [task_name] if task_name else list(self._prepared)
+        for name in names:
+            task = registry.get(name)
+            task.clean(self._ctx(name))
+            self._prepared.discard(name)
+            self._contexts.pop(name, None)
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(prog="repro.core.runner", description="Run a dpBento box")
+    p.add_argument("box", nargs="?", help="path to box JSON")
+    p.add_argument("--iters", type=int, default=5)
+    p.add_argument("--warmup", type=int, default=2)
+    p.add_argument("--format", choices=("csv", "md"), default="csv")
+    p.add_argument("--out", default=None, help="write report here instead of stdout")
+    p.add_argument("--clean", action="store_true", help="clean all tasks and exit")
+    p.add_argument("--list-tasks", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.list_tasks:
+        for name in registry.known_tasks():
+            t = registry.get(name)
+            print(f"{name}: params={sorted(t.param_space)} metrics={t.default_metrics}")
+        return 0
+    if args.clean:
+        r = Runner()
+        for name in registry.known_tasks():
+            r.clean(name)
+        print("cleaned all tasks")
+        return 0
+    if not args.box:
+        p.error("box path required")
+    box = Box.load(args.box)
+    runner = Runner(iters=args.iters, warmup=args.warmup)
+    res = runner.run_box(box)
+    text = res.csv() if args.format == "csv" else res.markdown()
+    if args.out:
+        Path(args.out).write_text(text)
+    else:
+        sys.stdout.write(text)
+    for err in res.errors:
+        print(f"ERROR {err['task']} {err['params']}: {err['error']}", file=sys.stderr)
+    return 1 if res.errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Wall-clock measurement harness for jitted callables.
+
+Blocks on all output leaves; runs warmup iterations first so compile time
+never pollutes samples (dpBento's `prepare` phase compiles, `run` measures).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+
+
+def block(tree: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def measure(
+    fn: Callable[..., Any],
+    *args: Any,
+    iters: int = 5,
+    warmup: int = 2,
+    min_time_s: float = 0.0,
+) -> list[float]:
+    """Return per-iteration wall times in seconds (post-warmup)."""
+    for _ in range(warmup):
+        block(fn(*args))
+    times: list[float] = []
+    total = 0.0
+    i = 0
+    while i < iters or total < min_time_s:
+        t0 = time.perf_counter()
+        block(fn(*args))
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        total += dt
+        i += 1
+        if i > 10000:  # safety valve
+            break
+    return times

@@ -1,0 +1,3 @@
+from repro.engine.table import Table, concat
+
+__all__ = ["Table", "concat"]

@@ -1,0 +1,96 @@
+"""Deterministic TPC-H-like synthetic data (lineitem / orders).
+
+Scale factor 1 ~= 6M lineitem rows, matching TPC-H row-count scaling.
+Column value distributions follow the TPC-H spec shapes (uniform quantities
+1..50, prices around 900..105000 scaled, discount 0..0.10, dates over ~7
+years, l_returnflag/linestatus categoricals) so selectivities of the paper's
+predicates carry over. Everything derives from a PRNGKey — no files, fully
+reproducible, generated directly on device (sharded when run under a mesh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine.table import Table
+
+LINEITEM_ROWS_PER_SF = 6_001_215
+ORDERS_ROWS_PER_SF = 1_500_000
+
+# dictionary-encoded categoricals
+RETURNFLAG = ("A", "N", "R")
+LINESTATUS = ("F", "O")
+SHIPMODE = ("AIR", "FOB", "MAIL", "RAIL", "REG AIR", "SHIP", "TRUCK")
+ORDERPRIORITY = ("1-URGENT", "2-HIGH", "3-MEDIUM", "4-NOT SPECIFIED", "5-LOW")
+
+DATE_EPOCH_DAYS = 8035  # 1992-01-01 in days-since-1970
+DATE_RANGE_DAYS = 2526  # through 1998-12-01
+
+
+def lineitem(
+    key: jax.Array,
+    scale: float = 0.01,
+    rows: int | None = None,
+    num_orders: int | None = None,
+) -> Table:
+    """TPC-H lineitem columns used by Q1/Q6/Q12-pattern queries.
+
+    ``l_orderkey`` is drawn from ``[0, num_orders)`` so that joining against an
+    ``orders`` table generated with the matching row count preserves FK
+    integrity.  When ``rows`` overrides the scale-derived count, the order
+    count follows the spec's ~4:1 lineitem:orders ratio unless given.
+    """
+    n = rows if rows is not None else max(int(LINEITEM_ROWS_PER_SF * scale), 1024)
+    if num_orders is None:
+        num_orders = max(n // 4, 256) if rows is not None else max(int(ORDERS_ROWS_PER_SF * scale), 256)
+    ks = jax.random.split(key, 10)
+    quantity = jax.random.randint(ks[0], (n,), 1, 51).astype(jnp.float32)
+    extendedprice = jax.random.uniform(ks[1], (n,), jnp.float32, 900.0, 105000.0)
+    discount = jnp.round(jax.random.uniform(ks[2], (n,), jnp.float32, 0.0, 0.10) * 100) / 100
+    tax = jnp.round(jax.random.uniform(ks[3], (n,), jnp.float32, 0.0, 0.08) * 100) / 100
+    shipdate = jax.random.randint(ks[4], (n,), DATE_EPOCH_DAYS, DATE_EPOCH_DAYS + DATE_RANGE_DAYS)
+    commitdate = shipdate + jax.random.randint(ks[5], (n,), -60, 60)
+    receiptdate = shipdate + jax.random.randint(ks[6], (n,), 1, 31)
+    returnflag = jax.random.randint(ks[7], (n,), 0, len(RETURNFLAG))
+    linestatus = (shipdate > DATE_EPOCH_DAYS + 1460).astype(jnp.int32)  # correlated, as in spec
+    orderkey = jax.random.randint(ks[8], (n,), 0, num_orders)
+    shipmode = jax.random.randint(ks[9], (n,), 0, len(SHIPMODE))
+    return Table(
+        {
+            "l_quantity": quantity,
+            "l_extendedprice": extendedprice,
+            "l_discount": discount,
+            "l_tax": tax,
+            "l_shipdate": shipdate.astype(jnp.float32),
+            "l_commitdate": commitdate.astype(jnp.float32),
+            "l_receiptdate": receiptdate.astype(jnp.float32),
+            "l_returnflag": returnflag.astype(jnp.int32),
+            "l_linestatus": linestatus,
+            "l_orderkey": orderkey.astype(jnp.int32),
+            "l_shipmode": shipmode.astype(jnp.int32),
+        }
+    )
+
+
+def orders(key: jax.Array, scale: float = 0.01, rows: int | None = None) -> Table:
+    n = rows if rows is not None else max(int(ORDERS_ROWS_PER_SF * scale), 256)
+    ks = jax.random.split(key, 4)
+    orderkey = jnp.arange(n, dtype=jnp.int32)
+    custkey = jax.random.randint(ks[0], (n,), 0, max(n // 10, 16))
+    totalprice = jax.random.uniform(ks[1], (n,), jnp.float32, 850.0, 560000.0)
+    orderdate = jax.random.randint(ks[2], (n,), DATE_EPOCH_DAYS, DATE_EPOCH_DAYS + DATE_RANGE_DAYS)
+    priority = jax.random.randint(ks[3], (n,), 0, len(ORDERPRIORITY))
+    return Table(
+        {
+            "o_orderkey": orderkey,
+            "o_custkey": custkey.astype(jnp.int32),
+            "o_totalprice": totalprice,
+            "o_orderdate": orderdate.astype(jnp.float32),
+            "o_orderpriority": priority.astype(jnp.int32),
+        }
+    )
+
+
+def date(year: int, month: int = 1, day: int = 1) -> float:
+    """Approximate days-since-1970 for predicate constants (spec-grade)."""
+    return float((year - 1970) * 365.2425 + (month - 1) * 30.44 + (day - 1))

@@ -1,0 +1,100 @@
+"""TPC-H-pattern queries over the mini engine (the paper's DBMS workload).
+
+Q1  — scan-heavy group-by aggregate over lineitem;
+Q6  — the predicate-pushdown filter+aggregate (also the Pallas filter_agg
+      kernel's workload);
+Q12 — join lineitem x orders + grouped conditional counts.
+
+Each query is a jit-able Table -> dict[str, Array] function; benchmarks
+compare host-style execution vs pushdown-style (see tasks/pushdown.py) and
+Pallas-accelerated variants.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import datagen, ops
+from repro.engine.table import Table
+
+
+def q1(lineitem: Table, delta_days: float = 90.0) -> dict[str, jax.Array]:
+    """Pricing summary report: 6 (returnflag x linestatus) groups."""
+    cutoff = datagen.date(1998, 12, 1) - delta_days
+    mask = lineitem["l_shipdate"] <= cutoff
+    keys = lineitem["l_returnflag"] * 2 + lineitem["l_linestatus"]  # 6 groups
+    disc_price = lineitem["l_extendedprice"] * (1.0 - lineitem["l_discount"])
+    charge = disc_price * (1.0 + lineitem["l_tax"])
+    agg = ops.group_aggregate(
+        keys,
+        {
+            "sum_qty": lineitem["l_quantity"],
+            "sum_base_price": lineitem["l_extendedprice"],
+            "sum_disc_price": disc_price,
+            "sum_charge": charge,
+            "sum_disc": lineitem["l_discount"],
+        },
+        mask,
+        num_groups=6,
+    )
+    cnt = jnp.maximum(agg["count"], 1.0)
+    agg["avg_qty"] = agg["sum_qty"] / cnt
+    agg["avg_price"] = agg["sum_base_price"] / cnt
+    agg["avg_disc"] = agg["sum_disc"] / cnt
+    return agg
+
+
+def q6(lineitem: Table, year: int = 1994, discount: float = 0.06, qty: float = 24.0):
+    """Forecasting revenue change: one filtered product-sum."""
+    lo = datagen.date(year)
+    hi = datagen.date(year + 1)
+    mask = ops.filter_mask(
+        lineitem,
+        lambda t: ops.pred_between(t["l_shipdate"], lo, hi),
+        lambda t: ops.pred_between(t["l_discount"], discount - 0.011, discount + 0.011),
+        lambda t: t["l_quantity"] < qty,
+    )
+    revenue = ops.masked_sum(lineitem["l_extendedprice"] * lineitem["l_discount"], mask)
+    return {"revenue": revenue, "rows": ops.masked_count(mask)}
+
+
+def q6_columns(lineitem: Table, year: int = 1994, discount: float = 0.06, qty: float = 24.0):
+    """Q6 reshaped for the fused Pallas filter_agg kernel: a [4, N] column
+    block + bounds. quantity < qty folds into a between(0, qty) bound by
+    packing quantity as filter-col-1; the discount band becomes the c0 bound
+    after swapping roles (two range predicates exactly fit the kernel; the
+    third is pre-masked into the value column — documented junk-free)."""
+    lo = datagen.date(year)
+    hi = datagen.date(year + 1)
+    qmask = lineitem["l_quantity"] < qty
+    value = jnp.where(qmask, lineitem["l_extendedprice"], 0.0)
+    cols = jnp.stack(
+        [lineitem["l_shipdate"], lineitem["l_discount"], value, lineitem["l_discount"]]
+    )
+    return cols, (lo, hi, discount - 0.011, discount + 0.011)
+
+
+def q12(lineitem: Table, orders: Table, year: int = 1994):
+    """Shipping modes & order priority: join + grouped conditional counts."""
+    lo = datagen.date(year)
+    hi = datagen.date(year + 1)
+    joined = ops.fk_index_join(lineitem, "l_orderkey", orders, "o_orderkey", ("o_orderpriority",))
+    mask = ops.filter_mask(
+        joined,
+        lambda t: ops.pred_in(t["l_shipmode"], (2, 5)),  # MAIL, SHIP
+        lambda t: t["l_commitdate"] < t["l_receiptdate"],
+        lambda t: t["l_shipdate"] < t["l_commitdate"],
+        lambda t: ops.pred_between(t["l_receiptdate"], lo, hi),
+    )
+    high = (joined["o_orderpriority"] <= 1) & mask  # 1-URGENT, 2-HIGH
+    low = (joined["o_orderpriority"] > 1) & mask
+    agg = ops.group_aggregate(
+        joined["l_shipmode"],
+        {"high_line_count": high.astype(jnp.float32), "low_line_count": low.astype(jnp.float32)},
+        mask,
+        num_groups=len(datagen.SHIPMODE),
+    )
+    return agg
+
+
+QUERIES = {"q1": q1, "q6": q6, "q12": q12}

@@ -1,0 +1,81 @@
+"""Columnar tables for the mini query engine (the DuckDB analogue).
+
+A Table is a frozen mapping column-name -> jnp array, all the same length.
+Variable-length strings don't exist on TPU; dictionary-encoded categoricals
+(int32 codes) and fixed-point decimals (scaled int64 / f32) stand in, which
+matches how columnar engines physically store them anyway.
+
+Tables are pytrees, so they jit, shard (rows over ("pod","data")), and
+donate like any other JAX value.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Iterator, Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class Table:
+    columns: dict[str, jax.Array]
+
+    def __post_init__(self):
+        lens = {k: v.shape[0] for k, v in self.columns.items()}
+        if len(set(lens.values())) > 1:
+            raise ValueError(f"ragged columns: {lens}")
+
+    # -- pytree --------------------------------------------------------------
+    def tree_flatten(self):
+        names = sorted(self.columns)
+        return [self.columns[n] for n in names], names
+
+    @classmethod
+    def tree_unflatten(cls, names, leaves):
+        obj = object.__new__(cls)
+        object.__setattr__(obj, "columns", dict(zip(names, leaves)))
+        return obj
+
+    # -- accessors -------------------------------------------------------------
+    def __getitem__(self, name: str) -> jax.Array:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    @property
+    def num_rows(self) -> int:
+        return next(iter(self.columns.values())).shape[0] if self.columns else 0
+
+    @property
+    def names(self) -> list[str]:
+        return sorted(self.columns)
+
+    def nbytes(self) -> int:
+        return sum(v.size * v.dtype.itemsize for v in self.columns.values())
+
+    # -- construction ----------------------------------------------------------
+    def with_columns(self, **cols: jax.Array) -> "Table":
+        return Table({**self.columns, **cols})
+
+    def select(self, *names: str) -> "Table":
+        return Table({n: self.columns[n] for n in names})
+
+    def take(self, idx: jax.Array) -> "Table":
+        return Table({n: jnp.take(c, idx, axis=0) for n, c in self.columns.items()})
+
+    def slice_rows(self, start: int, size: int) -> "Table":
+        return Table(
+            {n: jax.lax.dynamic_slice_in_dim(c, start, size, 0) for n, c in self.columns.items()}
+        )
+
+    def __repr__(self) -> str:
+        cols = ", ".join(f"{n}:{c.dtype}" for n, c in sorted(self.columns.items()))
+        return f"Table[{self.num_rows} rows]({cols})"
+
+
+def concat(tables: list[Table]) -> Table:
+    names = tables[0].names
+    return Table({n: jnp.concatenate([t[n] for t in tables]) for n in names})

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels (validated interpret=True on CPU) + pure-jnp oracles.
+
+Public API lives in repro.kernels.ops: flash_attention, decode_attention,
+ssd_intra, gmm, filter_agg — each with a use_pallas=False oracle path.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,118 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+Each op auto-selects interpret mode off-TPU (the kernels VALIDATE on CPU via
+the interpreter and TARGET TPU), pads awkward shapes up to tile multiples,
+and exposes a `use_pallas=False` escape hatch that routes to the ref oracle
+— the models use that flag so CPU smoke tests and TPU runs share one code
+path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.filter_scan import filter_agg as _filter_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.moe_gmm import gmm as _gmm_kernel
+from repro.kernels.ssd_scan import ssd_intra as _ssd_kernel
+
+
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    n = x.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return x, n
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads), n
+
+
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "use_pallas"))
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 512, block_k: int = 512,
+    use_pallas: bool = True,
+):
+    """[B, Sq, Hq, dh] x [B, Sk, Hkv, dh]^2 -> [B, Sq, Hq, dh]."""
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    bq = min(block_q, q.shape[1])
+    bk = min(block_k, k.shape[1])
+    if q.shape[1] % bq or k.shape[1] % bk:  # ragged tails -> oracle
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return _flash_kernel(
+        q, k, v, causal=causal, block_q=bq, block_k=bk, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "use_pallas"))
+def decode_attention(q, k, v, kv_len, *, block_k: int = 512, use_pallas: bool = True):
+    """q [B, Hq, dh], cache [B, S, Hkv, dh], kv_len [B] -> [B, Hq, dh]."""
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k, v, kv_len)
+    k_p, s0 = _pad_to(k, 1, min(block_k, k.shape[1]))
+    v_p, _ = _pad_to(v, 1, min(block_k, v.shape[1]))
+    return _decode_kernel(
+        q, k_p, v_p, kv_len.astype(jnp.int32), block_k=block_k, interpret=_interpret()
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_intra(x, bmat, cmat, dt, a, *, chunk: int = 128, use_pallas: bool = True):
+    """Intra-chunk SSD; see kernels/ssd_scan.py. Falls back to a vmapped oracle."""
+    if not use_pallas:
+        b, s, h, p = x.shape
+        q = min(chunk, s)
+        nc = s // q
+        xr = x.reshape(b * nc, q, h, p) if False else None  # noqa - clarity below
+        def one(args):
+            xc, bc, cc, dtc = args
+            return ref.ssd_intra_ref(xc[None], bc[None], cc[None], dtc[None], a)
+        ys, sts = [], []
+        for c in range(nc):
+            sl = slice(c * q, (c + 1) * q)
+            y, st = ref.ssd_intra_ref(x[:, sl], bmat[:, sl], cmat[:, sl], dt[:, sl], a)
+            ys.append(y)
+            sts.append(st)
+        return jnp.concatenate(ys, 1), jnp.stack(sts, 1)
+    return _ssd_kernel(x, bmat, cmat, dt, a, chunk=chunk, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d", "use_pallas"))
+def gmm(lhs, rhs, *, block_c: int = 256, block_f: int = 256, block_d: int = 512,
+        use_pallas: bool = True):
+    """[E, C, d] x [E, d, f] -> [E, C, f]."""
+    if not use_pallas:
+        return ref.gmm_ref(lhs, rhs)
+    e, c, d = lhs.shape
+    f = rhs.shape[-1]
+    bc, bf, bd = min(block_c, c), min(block_f, f), min(block_d, d)
+    if c % bc or f % bf or d % bd:
+        return ref.gmm_ref(lhs, rhs)
+    return _gmm_kernel(lhs, rhs, block_c=bc, block_f=bf, block_d=bd, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "use_pallas"))
+def filter_agg(cols, lo, hi, lo2, hi2, *, block_n: int = 16384, use_pallas: bool = True):
+    """Fused filter+aggregate; returns [2] (sum, count)."""
+    if not use_pallas:
+        return ref.filter_agg_ref(cols, lo, hi, lo2, hi2)
+    cols_p, n0 = _pad_to(cols, 1, min(block_n, cols.shape[1]))
+    if cols_p.shape != cols.shape:
+        # padded rows must fail the predicate: fill filter cols with +inf
+        pad = cols_p.shape[1] - cols.shape[1]
+        filler = jnp.full((4, pad), jnp.finfo(jnp.float32).max, cols.dtype)
+        cols_p = jnp.concatenate([cols, filler], axis=1)
+    return _filter_kernel(cols_p, lo, hi, lo2, hi2, block_n=block_n, interpret=_interpret())

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel. The kernels must match these
+(assert_allclose in tests/test_kernels.py over shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+def flash_attention_ref(
+    q: jax.Array,  # [B, Sq, Hq, dh]
+    k: jax.Array,  # [B, Sk, Hkv, dh]
+    v: jax.Array,  # [B, Sk, Hkv, dh]
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    """f32 softmax attention with GQA head grouping. Output [B, Sq, Hq, dh]."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    s = s * (dh**-0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool), k.shape[1] - sq)
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, hq, dh).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,  # [B, Hq, dh] — one query token per sequence
+    k: jax.Array,  # [B, S, Hkv, dh]
+    v: jax.Array,  # [B, S, Hkv, dh]
+    kv_len: jax.Array,  # [B] int32 — valid cache length per sequence
+) -> jax.Array:
+    b, hq, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, dh)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * (dh**-0.5)
+    valid = jnp.arange(s)[None] < kv_len[:, None]  # [B, S]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+def ssd_intra_ref(
+    x: jax.Array,  # [B, Q, H, P] — one chunk
+    bmat: jax.Array,  # [B, Q, N]
+    cmat: jax.Array,  # [B, Q, N]
+    dt: jax.Array,  # [B, Q, H] (post-softplus, f32)
+    a: jax.Array,  # [H] (negative)
+) -> tuple[jax.Array, jax.Array]:
+    """Intra-chunk SSD: returns (y [B, Q, H, P] f32, chunk_state [B, H, P, N] f32)."""
+    bsz, q, h, p = x.shape
+    dta = dt.astype(jnp.float32) * a.astype(jnp.float32)  # [B,Q,H]
+    lcum = jnp.cumsum(dta, axis=1)
+    l_last = lcum[:, -1]  # [B,H]
+    cb = jnp.einsum("bqn,bkn->bqk", cmat, bmat, preferred_element_type=jnp.float32)
+    decay = jnp.exp(lcum[:, :, None, :] - lcum[:, None, :, :])  # [B,Q,K,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, :, :, None], decay, 0.0)
+    m = cb[..., None] * decay * dt[:, None, :, :].astype(jnp.float32)  # [B,Q,K,H]
+    y = jnp.einsum("bqkh,bkhp->bqhp", m, x.astype(jnp.float32))
+    seg = jnp.exp(l_last[:, None, :] - lcum) * dt.astype(jnp.float32)  # [B,Q,H]
+    state = jnp.einsum("bkh,bkn,bkhp->bhpn", seg, bmat.astype(jnp.float32), x.astype(jnp.float32))
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+def gmm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Grouped (per-expert) matmul: [E, C, d] x [E, d, f] -> [E, C, f]."""
+    return jnp.einsum("ecd,edf->ecf", lhs, rhs, preferred_element_type=jnp.float32).astype(
+        lhs.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+def filter_agg_ref(
+    cols: jax.Array,  # [4, N] f32: (key, lo-col, hi-col, value) layout per op
+    lo: jax.Array,  # scalar predicate bounds on cols[0]
+    hi: jax.Array,
+    lo2: jax.Array,  # bounds on cols[1]
+    hi2: jax.Array,
+) -> jax.Array:
+    """Fused scan+filter+aggregate (TPC-H Q6 pattern):
+    sum(cols[2] * cols[3]) where lo <= cols[0] < hi and lo2 <= cols[1] < hi2.
+    Returns [2]: (sum, count)."""
+    c0, c1, c2, c3 = cols
+    mask = (c0 >= lo) & (c0 < hi) & (c1 >= lo2) & (c1 < hi2)
+    s = jnp.sum(jnp.where(mask, c2.astype(jnp.float32) * c3.astype(jnp.float32), 0.0))
+    n = jnp.sum(mask.astype(jnp.float32))
+    return jnp.stack([s, n])

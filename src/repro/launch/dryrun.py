@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: inputs are
+ShapeDtypeStructs (zero allocation), `jax.jit(step).lower(...).compile()`
+must succeed on the single-pod (16,16) and multi-pod (2,16,16) meshes, and
+the compiled artifact yields memory_analysis / cost_analysis / the HLO the
+roofline reads.
+
+Results are cached as JSON under results/dryrun/<mesh>/<arch>/<cell>.json;
+re-runs skip completed cells (--force to redo).
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --cell train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--sharding <profile>]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import SHAPES, all_archs, cells_for, get_arch  # noqa: E402
+from repro.launch import roofline as rf  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    batch_pspecs,
+    logical_rules,
+    make_production_mesh,
+    named,
+    zero1_specs,
+)
+from repro.models.model import Model, input_specs  # noqa: E402
+from repro.optim import make_optimizer, make_schedule, state_logical_specs  # noqa: E402
+from repro.runtime.train_loop import make_train_step  # noqa: E402
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = (
+        "argument_size_in_bytes", "output_size_in_bytes", "temp_size_in_bytes",
+        "generated_code_size_in_bytes", "host_argument_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+
+
+def lower_cell(
+    arch: str,
+    cell_name: str,
+    mesh,
+    *,
+    sharding_profile: str = "base",
+    unroll: bool = True,
+    overrides: dict | None = None,
+):
+    """Returns (lowered, aux) for the cell's step function on `mesh`."""
+    import dataclasses
+
+    cfg = get_arch(arch)
+    # Unroll the layer scan so XLA cost analysis counts every layer (loop
+    # bodies are otherwise costed once); sharding/compile success is
+    # unaffected — the unrolled module is what production would run anyway.
+    # The multi-pod pass only proves the sharding compiles (the roofline
+    # table is single-pod), so it keeps the scan for compile speed.
+    cfg = dataclasses.replace(cfg, unroll_layers=unroll, **(overrides or {}))
+    cell = SHAPES[cell_name]
+    rules = logical_rules(cfg, mesh, cell)
+    if sharding_profile != "base":
+        from repro.launch import profiles
+
+        rules = profiles.apply(sharding_profile, cfg, mesh, cell, rules)
+    model = Model(cfg)
+    aparams = model.abstract_params()
+    pspecs = named(mesh, rules.tree_specs(model.param_specs()))
+    bspecs = named(mesh, batch_pspecs(cfg, cell, rules))
+    abatch = input_specs(cfg, cell)
+
+    if cell.kind == "train":
+        opt = make_optimizer(cfg.optimizer)
+        astate = opt.abstract_init(aparams)
+        slogical = state_logical_specs(opt, model.param_specs(), aparams)
+        sspecs = named(mesh, zero1_specs(slogical, astate, rules, mesh))
+        schedule = make_schedule("warmup_cosine", peak_lr=3e-4, warmup_steps=100, total_steps=10_000)
+        import contextlib
+
+        from repro.models import transformer as tfm_mod
+
+        hook_ctx = contextlib.nullcontext()
+        top_hook = None
+        if cfg.zero3_gather:
+            from repro.launch.mesh import zero3_gather_hook
+
+            all_specs = model.param_specs()
+            # body params: gathered per-layer INSIDE the scan (at-use, the
+            # ZeRO-3 dataflow); strip the "layers" stacking axis from specs.
+            body_logical = jax.tree_util.tree_map(
+                lambda axes: tuple(axes[1:]),
+                all_specs["body"],
+                is_leaf=lambda v: isinstance(v, tuple) and all(a is None or isinstance(a, str) for a in v),
+            )
+            hook_ctx = tfm_mod.layer_param_hook(zero3_gather_hook(rules, body_logical, mesh))
+            # non-body params (embed/lm_head/first/final_norm): gathered once
+            top_specs = {k: v for k, v in all_specs.items() if k != "body"}
+            sub_hook = zero3_gather_hook(rules, top_specs, mesh)
+
+            def top_hook(params):
+                sub = sub_hook({k: params[k] for k in top_specs})
+                return {**params, **sub}
+
+        step_fn = make_train_step(model, opt, schedule, param_hook=top_hook)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(pspecs, sspecs, bspecs, None),
+            out_shardings=(pspecs, sspecs, None),
+            donate_argnums=(0, 1),
+        )
+        with mesh, hook_ctx:
+            lowered = jitted.lower(aparams, astate, abatch, jax.ShapeDtypeStruct((), jnp.int32))
+        return lowered, {"cfg": cfg, "cell": cell}
+
+    # serving cells: cache is an input (abstract — no allocation)
+    acache = model.init_cache(cell.global_batch, cell.seq_len, abstract=True)
+    cspecs = named(mesh, rules.tree_specs(model.cache_specs()))
+    if cell.kind == "prefill":
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        jitted = jax.jit(
+            prefill_step,
+            in_shardings=(pspecs, bspecs, cspecs),
+            out_shardings=(None, cspecs),
+            donate_argnums=(2,),
+        )
+        with mesh:
+            lowered = jitted.lower(aparams, abatch, acache)
+        return lowered, {"cfg": cfg, "cell": cell}
+
+    # decode
+    def decode_step(params, batch, cache, index):
+        return model.decode(params, batch, cache, index)
+
+    jitted = jax.jit(
+        decode_step,
+        in_shardings=(pspecs, bspecs, cspecs, None),
+        out_shardings=(None, cspecs),
+        donate_argnums=(2,),
+    )
+    with mesh:
+        lowered = jitted.lower(
+            aparams, abatch, acache, jax.ShapeDtypeStruct((), jnp.int32)
+        )
+    return lowered, {"cfg": cfg, "cell": cell}
+
+
+def run_cell(
+    arch: str,
+    cell_name: str,
+    mesh_kind: str,
+    *,
+    out_dir: Path = RESULTS,
+    force: bool = False,
+    sharding_profile: str = "base",
+    overrides: dict | None = None,
+    unroll: bool | None = None,
+    verbose: bool = True,
+) -> dict:
+    tag = f"{mesh_kind}/{arch}/{cell_name}"
+    suffix = "" if sharding_profile == "base" else f".{sharding_profile}"
+    if overrides:
+        suffix += "." + "-".join(f"{k}={v}" for k, v in sorted(overrides.items()))
+    if unroll is None:
+        unroll = mesh_kind != "multipod"
+    if not unroll and mesh_kind != "multipod":
+        suffix += ".scan"
+    out_path = out_dir / mesh_kind / arch / f"{cell_name}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    n_chips = mesh.size
+    t0 = time.time()
+    lowered, aux = lower_cell(
+        arch, cell_name, mesh,
+        sharding_profile=sharding_profile, unroll=unroll, overrides=overrides,
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    mf = rf.model_flops(aux["cfg"], aux["cell"])
+    roof = rf.analyze(cost, hlo, n_chips=n_chips, model_flops_total=mf)
+    mem = _memory_stats(compiled)
+
+    result = {
+        "arch": arch,
+        "cell": cell_name,
+        "mesh": mesh_kind,
+        "n_chips": n_chips,
+        "unrolled": unroll,
+        "sharding_profile": sharding_profile,
+        "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "roofline": roof.to_dict(),
+        "status": "ok",
+    }
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=1))
+    if verbose:
+        dom = roof.bottleneck
+        print(
+            f"[ok] {tag}{suffix}: compile {t_compile:.1f}s  "
+            f"compute {roof.compute_s*1e3:.2f}ms  memory {roof.memory_s*1e3:.2f}ms  "
+            f"collective {roof.collective_s*1e3:.2f}ms  <-{dom}  "
+            f"useful {roof.useful_flops_ratio:.2f}",
+            flush=True,
+        )
+    return result
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description="multi-pod dry-run")
+    p.add_argument("--arch", default=None)
+    p.add_argument("--cell", default=None)
+    p.add_argument("--mesh", choices=("pod", "multipod", "both"), default="pod")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--force", action="store_true")
+    p.add_argument("--sharding", default="base", help="sharding profile (perf iterations)")
+    p.add_argument(
+        "--set", action="append", default=[], metavar="KEY=VALUE",
+        help="ArchConfig override, e.g. --set remat=dots --set moe_groups=16",
+    )
+    p.add_argument(
+        "--scan", action="store_true",
+        help="keep the layer scan (fast compile proxy for perf iterations)",
+    )
+    p.add_argument("--out", default=str(RESULTS))
+    args = p.parse_args(argv)
+
+    overrides: dict = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    archs = all_archs() if (args.all or args.arch is None) else [args.arch]
+
+    failures = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            cfg = get_arch(arch)
+            cells = cells_for(cfg) if args.cell is None else [args.cell]
+            for cell in cells:
+                try:
+                    run_cell(
+                        arch, cell, mesh_kind,
+                        out_dir=Path(args.out), force=args.force,
+                        sharding_profile=args.sharding,
+                        overrides=overrides or None,
+                        unroll=(False if args.scan else None),
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append((mesh_kind, arch, cell, f"{type(e).__name__}: {e}"))
+                    print(f"[FAIL] {mesh_kind}/{arch}/{cell}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print("  ", *f)
+        return 1
+    print("\nall dry-run cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,45 @@
+"""Named sharding profiles — the knobs the §Perf hillclimb turns.
+
+`base` is the paper-faithful default (logical_rules). Each profile mutates
+the rules table; dryrun --sharding <name> lowers the same cell under the
+variant so before/after roofline terms are directly comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.launch.mesh import Rules, logical_rules
+
+
+def apply(name: str, cfg, mesh, cell, rules: Rules) -> Rules:
+    if name == "base":
+        return rules
+    table = dict(rules.table)
+    if name == "no_fsdp":  # replicate params over data (memory for collectives)
+        table["embed"] = None
+    elif name == "fsdp":  # force FSDP even when cfg.fsdp is False
+        has_pod = "pod" in mesh.axis_names
+        table["embed"] = ("pod", "data") if has_pod else ("data",)
+    elif name == "seq_model":  # cache sequence over model only
+        table["cache_seq"] = ("model",)
+    elif name == "seq_data_model":  # cache sequence over data+model
+        has_pod = "pod" in mesh.axis_names
+        d = ("pod", "data") if has_pod else ("data",)
+        table["cache_seq"] = d + ("model",)
+        table["batch"] = None
+    elif name == "expert_tp":  # force per-expert d_ff sharding
+        table["experts"] = None
+        table["expert_ff"] = "model"
+    elif name == "vocab_data":  # shard vocab over data instead of model
+        table["vocab"] = "data"
+    elif name == "replicated_vocab":
+        table["vocab"] = None
+    else:
+        raise ValueError(f"unknown sharding profile {name!r}")
+    return Rules(table)
+
+
+PROFILES = (
+    "base", "no_fsdp", "fsdp", "seq_model", "seq_data_model",
+    "expert_tp", "vocab_data", "replicated_vocab",
+)

@@ -1,0 +1,114 @@
+"""Assemble the roofline table from results/dryrun/*.json.
+
+Per (arch × cell × mesh × profile) row:
+  compute_s / memory_s / collective_s  — the three roofline terms (§Roofline)
+  bottleneck                            — the dominant term
+  mfu_bound — MODEL_FLOPS/(chips·peak) / max(term): the MFU the step would
+              achieve if it ran exactly at its roofline-limiting term; this
+              is the "roofline fraction" the perf loop drives up.
+  useful    — MODEL_FLOPS / (HLO_FLOPs·chips): compiled-compute efficiency
+              (catches remat/recompute waste).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.report [--mesh pod] [--format md|csv]
+  PYTHONPATH=src python -m repro.launch.report --profiles   # perf iterations
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch import roofline as rf
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def load_rows(root: Path = RESULTS, mesh: str | None = None) -> list[dict]:
+    rows = []
+    for p in sorted(root.glob("*/*/*.json")):
+        d = json.loads(p.read_text())
+        if mesh and d["mesh"] != mesh:
+            continue
+        r = d["roofline"]
+        chips = d["n_chips"]
+        ideal_s = r["model_flops_total"] / (chips * rf.PEAK_FLOPS)
+        worst = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        variant = d.get("sharding_profile", "base")
+        if d.get("overrides"):
+            variant += "+" + ",".join(f"{k}={v}" for k, v in sorted(d["overrides"].items()))
+        if not d.get("unrolled", True) and d["mesh"] != "multipod":
+            variant += " (scan)"
+        rows.append(
+            {
+                "arch": d["arch"],
+                "cell": d["cell"],
+                "mesh": d["mesh"],
+                "profile": variant,
+                "chips": chips,
+                "compute_ms": r["compute_s"] * 1e3,
+                "memory_ms": r["memory_s"] * 1e3,
+                "collective_ms": r["collective_s"] * 1e3,
+                "bottleneck": r["bottleneck"],
+                "mfu_bound": (ideal_s / worst) if worst > 0 else 0.0,
+                "useful": r["useful_flops_ratio"],
+                "model_tflops": r["model_flops_total"] / 1e12,
+                "hbm_gb_per_dev": r["bytes_per_device"] / 1e9,
+                "wire_gb_per_dev": r["wire_bytes_per_device"] / 1e9,
+                "compile_s": d.get("compile_s", 0.0),
+            }
+        )
+    return rows
+
+
+_CELL_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def to_markdown(rows: list[dict]) -> str:
+    rows = sorted(rows, key=lambda r: (r["arch"], _CELL_ORDER.get(r["cell"], 9), r["profile"]))
+    hdr = (
+        "| arch | cell | profile | compute ms | memory ms | collective ms | "
+        "bottleneck | MFU-bound | useful |"
+    )
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['cell']} | {r['profile']} | "
+            f"{r['compute_ms']:.2f} | {r['memory_ms']:.2f} | {r['collective_ms']:.2f} | "
+            f"{r['bottleneck']} | {r['mfu_bound']:.3f} | {r['useful']:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def to_csv(rows: list[dict]) -> str:
+    if not rows:
+        return ""
+    keys = list(rows[0])
+    out = [",".join(keys)]
+    for r in rows:
+        out.append(",".join(f"{r[k]:.4f}" if isinstance(r[k], float) else str(r[k]) for k in keys))
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(prog="repro.launch.report")
+    p.add_argument("--mesh", default=None, choices=(None, "pod", "multipod"))
+    p.add_argument("--format", default="md", choices=("md", "csv"))
+    p.add_argument("--profiles", action="store_true", help="only non-base profiles + their base")
+    p.add_argument("--baseline-only", action="store_true", help="only unrolled base cells")
+    p.add_argument("--root", default=str(RESULTS))
+    args = p.parse_args(argv)
+
+    rows = load_rows(Path(args.root), mesh=args.mesh)
+    if args.baseline_only:
+        rows = [r for r in rows if r["profile"] == "base"]
+    if args.profiles:
+        keyed = {(r["arch"], r["cell"], r["mesh"]) for r in rows if r["profile"] != "base"}
+        rows = [r for r in rows if (r["arch"], r["cell"], r["mesh"]) in keyed]
+    print(to_markdown(rows) if args.format == "md" else to_csv(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,171 @@
+"""Roofline-term extraction from compiled (dry-run) artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on the
+TARGET hardware (TPU v5e):
+
+  compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory     = HLO_bytes_per_device / HBM_BW
+  collective = wire_bytes_per_device / ICI_BW
+
+HLO_FLOPs/bytes come from compiled.cost_analysis() (the partitioned
+per-device module). Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute and convert each to ring-algorithm wire bytes:
+
+  all-reduce      2*(n-1)/n * |buf|     (reduce-scatter + all-gather phases)
+  all-gather      (n-1)/n  * |result|
+  reduce-scatter  (n-1)    * |result|   (operand = n*|result| through links)
+  all-to-all      (n-1)/n  * |buf|
+  collective-permute       |buf|
+
+where n is the replica-group size parsed from the op's replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any
+
+# -- TPU v5e target constants (per chip) -------------------------------------
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.-]+\s*=\s*(?P<shape>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(",
+    re.MULTILINE,
+)
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[dims] occurrence in a shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [n_groups, group_size]<=[total]
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default when groups elided
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: int = 0
+    result_bytes: int = 0
+    wire_bytes: float = 0.0
+
+
+def parse_collectives(hlo_text: str) -> dict[str, CollectiveStats]:
+    """Per-op-kind totals over the (per-device) HLO module."""
+    out: dict[str, CollectiveStats] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        # `^\s*` can consume the preceding newline, so locate the end of the
+        # op line from m.end() (inside the line), not m.start().
+        eol = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start() : eol if eol != -1 else len(hlo_text)]
+        rb = _shape_bytes(m.group("shape"))
+        if op == "all-reduce" and m.group("start"):
+            pass  # -start carries the shape; -done lines don't match (no "(" pattern on result)
+        n = _group_size(line)
+        if op == "all-reduce":
+            wire = 2 * (n - 1) / n * rb
+        elif op == "all-gather":
+            wire = (n - 1) / n * rb
+        elif op == "reduce-scatter":
+            wire = (n - 1) * rb
+        elif op == "all-to-all":
+            wire = (n - 1) / n * rb
+        else:  # collective-permute
+            wire = float(rb)
+        s = out.setdefault(op, CollectiveStats())
+        s.count += 1
+        s.result_bytes += rb
+        s.wire_bytes += wire
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    collectives: dict[str, Any]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_total: float = 0.0
+    useful_flops_ratio: float = 0.0  # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    cost: dict[str, float],
+    hlo_text: str,
+    *,
+    n_chips: int,
+    model_flops_total: float = 0.0,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    colls = parse_collectives(hlo_text)
+    wire = sum(s.wire_bytes for s in colls.values())
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = wire / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    ratio = model_flops_total / (flops * n_chips) if flops > 0 else 0.0
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        wire_bytes_per_device=wire,
+        collectives={k: dataclasses.asdict(v) for k, v in colls.items()},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_total=model_flops_total,
+        useful_flops_ratio=ratio,
+    )
+
+
+def model_flops(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference)."""
+    n_active = cfg.n_active_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * cell.global_batch

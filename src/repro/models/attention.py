@@ -1,0 +1,228 @@
+"""Grouped-query attention: train/prefill (blockwise causal) + cached decode.
+
+Layout conventions (TPU-friendly):
+  activations  x        [B, S, d_model]
+  projections  wq       [d_model, Hq, dh]     logical ("embed", "heads", "head_dim")
+               wk, wv   [d_model, Hkv, dh]    logical ("embed", "kv_heads", "head_dim")
+               wo       [Hq, dh, d_model]     logical ("heads", "head_dim", "embed")
+  KV cache     k, v     [B, S_max, Hkv, dh]   logical ("batch", "cache_seq", "kv_heads", "head_dim")
+
+Hq is sharded over the "model" mesh axis (tensor parallelism); Hkv is
+replicated when Hkv < model-axis size (GQA kv=8 vs 16-way TP), so each TP
+shard holds every KV head and its own slice of query heads — attention then
+needs no cross-shard communication except the wo all-reduce.
+
+Prefill uses a query-block scan (flash-attention memory behaviour in pure
+jnp: O(block x S) live scores instead of O(S x S)). The Pallas flash kernel
+(kernels/flash_attention.py) is a drop-in for the aligned-size fast path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, apply_positional, truncated_normal
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps softmax NaN-free on fully masked rows
+
+# Query-block length for the prefill scan. Sequences at or below this are
+# done in one block (CPU smoke tests take that path).
+DEFAULT_Q_BLOCK = 1024
+
+
+def init_attention(cfg, key, dtype, cross: bool = False) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    scale = d**-0.5
+    return {
+        "wq": truncated_normal(kq, (d, hq, dh), scale, dtype),
+        "wk": truncated_normal(kk, (d, hkv, dh), scale, dtype),
+        "wv": truncated_normal(kv, (d, hkv, dh), scale, dtype),
+        "wo": truncated_normal(ko, (hq, dh, d), (hq * dh) ** -0.5, dtype),
+    }
+
+
+def attention_specs(cfg, cross: bool = False) -> Params:
+    """Mirror of init_attention: logical axis names per parameter."""
+    return {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention over grouped heads.
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q [B, Sq, Hkv, G, dh], k [B, Sk, Hkv, dh] -> scores [B, Hkv, G, Sq, Sk] (f32)."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_values(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p [B, Hkv, G, Sq, Sk] (f32), v [B, Sk, Hkv, dh] -> [B, Sq, Hkv, G, dh]."""
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(p.dtype))
+
+
+def _split_heads(x: jax.Array, hkv: int) -> jax.Array:
+    """[B, S, Hq, dh] -> [B, S, Hkv, G, dh]."""
+    b, s, hq, dh = x.shape
+    return x.reshape(b, s, hkv, hq // hkv, dh)
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single-block reference attention.
+
+    q [B, Sq, Hkv, G, dh]; k, v [B, Sk, Hkv, dh]. `q_offset` is the absolute
+    position of q's first token (for causal masking against a longer k).
+    `kv_len` masks out cache slots >= kv_len (decode with a ring/linear cache).
+    """
+    dh = q.shape[-1]
+    scores = _gqa_scores(q, k) * (dh**-0.5)  # [B, Hkv, G, Sq, Sk] f32
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    sq, sk = scores.shape[-2], scores.shape[-1]
+    # q_offset / kv_len may be scalars or per-sequence [B] vectors (slot serving)
+    mask = None
+    if causal:
+        off = jnp.reshape(jnp.asarray(q_offset), (-1, 1, 1))  # [B or 1, 1, 1]
+        qpos = jnp.arange(sq)[None, :, None] + off  # [B?, Sq, 1]
+        kpos = jnp.arange(sk)[None, None, :]
+        mask = qpos >= kpos  # [B?, Sq, Sk]
+    if kv_len is not None:
+        kl = jnp.reshape(jnp.asarray(kv_len), (-1, 1, 1))
+        valid = jnp.arange(sk)[None, None, :] < kl  # [B?, 1, Sk]
+        valid = jnp.broadcast_to(valid, (valid.shape[0], sq, sk))
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return _gqa_values(p, v)
+
+
+def blockwise_attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_block: int = DEFAULT_Q_BLOCK,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Query-block scanned attention: memory O(q_block x Sk), not O(Sq x Sk).
+
+    Equal results to `attend` (same masking); used for long prefill. The scan
+    carries nothing — each block is independent — so XLA frees score buffers
+    between iterations.
+    """
+    b, sq, hkv, g, dh = q.shape
+    if sq <= q_block or sq % q_block != 0:
+        return attend(q, k, v, causal=causal, softcap=softcap)
+    nblk = sq // q_block
+    qb = q.reshape(b, nblk, q_block, hkv, g, dh)
+
+    def body(_, args):
+        i, qi = args  # qi [B, q_block, Hkv, G, dh]
+        out = attend(qi, k, v, causal=causal, q_offset=i * q_block, softcap=softcap)
+        return None, out
+
+    _, ob = jax.lax.scan(body, None, (jnp.arange(nblk), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(ob, 0, 1).reshape(b, sq, hkv, g, dh)
+
+
+# ---------------------------------------------------------------------------
+# Module-level apply: projections + rope + attention + output.
+def apply_attention(
+    cfg,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    kv_cache: dict[str, jax.Array] | None = None,
+    cache_index: jax.Array | None = None,
+    kv_override: tuple[jax.Array, jax.Array] | None = None,
+    q_block: int = DEFAULT_Q_BLOCK,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    """Attention sub-layer.
+
+    Modes:
+      * train/prefill: kv_cache None (or filled at positions 0..S) — blockwise causal.
+      * decode: kv_cache given + cache_index (scalar int32, next slot) — S == 1
+        (or a small chunk); new k/v written at cache_index, attends to cache.
+      * cross-attention: kv_override = (k, v) precomputed from encoder output;
+        kv_cache ignored; causal=False.
+
+    Returns (output [B, S, d_model], updated kv_cache or None).
+    """
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))  # [B,S,Hq,dh]
+
+    if kv_override is not None:
+        k, v = kv_override
+        q = apply_positional(cfg, q, positions) if cfg.rope != "none" else q
+    else:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))  # [B,S,Hkv,dh]
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        q = apply_positional(cfg, q, positions)
+        k = apply_positional(cfg, k, positions)
+
+    new_cache = None
+    if kv_cache is not None and kv_override is None:
+        # Write new K/V into the cache, attend to the cache prefix. cache_index
+        # may be a scalar (lockstep decode/prefill) or [B] (per-slot serving).
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        idx = cache_index if cache_index is not None else jnp.int32(0)
+        if jnp.ndim(idx) == 0:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
+        else:
+            upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))
+            ck = upd(ck, k.astype(ck.dtype), idx)
+            cv = upd(cv, v.astype(cv.dtype), idx)
+        new_cache = {"k": ck, "v": cv}
+        qg = _split_heads(q, hkv)
+        out = attend(
+            qg, ck.astype(x.dtype), cv.astype(x.dtype),
+            causal=True, q_offset=idx, kv_len=idx + s, softcap=0.0,
+        )
+    else:
+        qg = _split_heads(q, hkv)
+        out = blockwise_attend(qg, k, v, causal=causal, q_block=q_block)
+
+    out = out.reshape(b, s, hq, dh).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention K/V precompute (encoder-decoder): done once per request.
+def cross_kv(cfg, p: Params, enc_out: jax.Array) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def attention_flops(cfg, batch: int, sq: int, sk: int, decode: bool = False) -> int:
+    """Model FLOPs of one attention layer (projections + scores + values)."""
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    proj = 2 * batch * sq * d * dh * (hq + 2 * hkv) + 2 * batch * sq * hq * dh * d
+    qk = 2 * batch * hq * sq * sk * dh
+    pv = 2 * batch * hq * sq * sk * dh
+    if not decode:  # causal halves the realized score work
+        qk //= 2
+        pv //= 2
+    return proj + qk + pv

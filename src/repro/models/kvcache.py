@@ -1,0 +1,112 @@
+"""Decode caches: per-layer KV (attention) and SSM/conv state (Mamba2).
+
+The cache is a pytree mirroring the layer stack so it scans with the layers:
+stacked leading dim [n_repeats, ...] for the scanned body plus a list for
+the unscanned first_k_dense layers. `init_cache` builds zeros (or
+ShapeDtypeStructs when `abstract=True`, which the dry-run uses — no
+allocation), `cache_specs` mirrors logical sharding axes.
+
+KV layout [B, S_max, Hkv, dh]: batch over ("pod","data"), S_max over
+"model" ("cache_seq") — kv_heads (8) do not divide a 16-way model axis, so
+sharding the sequence keeps the 16-way split collective-free on update
+(dynamic_update_slice on a sharded dim lowers to a masked local update) and
+turns decode attention into a flash-decoding-style partial softmax that the
+SPMD partitioner completes with a tiny all-reduce of (max, sum) terms.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerKind
+
+
+def layer_kinds(cfg: ArchConfig) -> list[LayerKind]:
+    return [LayerKind("attn", "dense")] * cfg.first_k_dense + list(cfg.pattern)
+
+
+def _attn_cache(cfg, batch: int, max_len: int, dtype, abstract: bool, stack: int | None):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if stack is not None:
+        shape = (stack,) + shape
+    mk = (lambda s: jax.ShapeDtypeStruct(s, dtype)) if abstract else (lambda s: jnp.zeros(s, dtype))
+    return {"k": mk(shape), "v": mk(shape)}
+
+
+def _ssm_cache(cfg, batch: int, dtype, abstract: bool, stack: int | None):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    s1 = (batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+    s2 = (batch, cfg.ssm_conv - 1, conv_ch)
+    if stack is not None:
+        s1, s2 = (stack,) + s1, (stack,) + s2
+    mk = (lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract else (lambda s, d: jnp.zeros(s, d))
+    return {"ssm": mk(s1, jnp.float32), "conv": mk(s2, dtype)}
+
+
+def init_cache(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+    *,
+    abstract: bool = False,
+) -> dict[str, Any]:
+    """Cache pytree: {"first": [per-layer dicts], "body": {pattern-pos: stacked}}."""
+    reps = cfg.n_repeats
+    first = [
+        _attn_cache(cfg, batch, max_len, dtype, abstract, None) for _ in range(cfg.first_k_dense)
+    ]
+    body: dict[str, Any] = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind.mixer == "attn":
+            body[f"l{i}"] = _attn_cache(cfg, batch, max_len, dtype, abstract, reps)
+        else:
+            body[f"l{i}"] = _ssm_cache(cfg, batch, dtype, abstract, reps)
+    cache: dict[str, Any] = {"first": first, "body": body}
+    if cfg.encoder_decoder:
+        # cross-attention K/V computed once from encoder output at prefill
+        cross_shape = (reps, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        mk = (lambda s: jax.ShapeDtypeStruct(s, dtype)) if abstract else (lambda s: jnp.zeros(s, dtype))
+        cache["cross"] = {"k": mk(cross_shape), "v": mk(cross_shape)}
+    return cache
+
+
+def cache_specs(cfg: ArchConfig) -> dict[str, Any]:
+    """Logical axes per cache leaf, mirroring init_cache structure."""
+    attn = {
+        "k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+    attn_stacked = {
+        "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+    ssm_stacked = {
+        "ssm": ("layers", "batch", "ssm_heads", None, None),
+        "conv": ("layers", "batch", None, "conv_ch"),
+    }
+    first = [attn for _ in range(cfg.first_k_dense)]
+    body = {
+        f"l{i}": (attn_stacked if kind.mixer == "attn" else ssm_stacked)
+        for i, kind in enumerate(cfg.pattern)
+    }
+    out: dict[str, Any] = {"first": first, "body": body}
+    if cfg.encoder_decoder:
+        out["cross"] = {
+            "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        }
+    return out
+
+
+def cache_bytes(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16) -> int:
+    """Total cache footprint (for capacity planning / roofline notes)."""
+    leaves = jax.tree_util.tree_leaves(
+        init_cache(cfg, batch, max_len, dtype, abstract=True),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return sum(
+        int(jnp.prod(jnp.array(l.shape))) * jnp.dtype(l.dtype).itemsize for l in leaves
+    )

@@ -1,0 +1,119 @@
+"""Shared model layers: norms, rotary embeddings (RoPE / M-RoPE), MLPs, init."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def truncated_normal(key, shape, scale: float, dtype) -> jax.Array:
+    x = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms — accumulate in fp32, return in input dtype.
+def init_norm(cfg, key, dim: int, dtype) -> Params:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.ones((dim,), dtype)}
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+    if cfg.norm == "nonparametric_ln":
+        return {}
+    raise ValueError(cfg.norm)
+
+
+def apply_norm(cfg, p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+    # (non-)parametric LayerNorm
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm":
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def gated_rmsnorm(scale: jax.Array, x: jax.Array, z: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Mamba2's norm: RMSNorm(x * silu(z)). fp32 accumulation."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings.
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """[head_dim//2] inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., S, H, D]; positions [..., S] (int). Rotates pairs (x_i, x_{i+D/2})."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)  # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, D/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, D/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions: jax.Array, theta: float, sections: tuple[int, int, int]
+) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions [3, ..., S] (t/h/w ids);
+    `sections` partitions the D/2 frequency slots across the three id streams."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)  # [D/2]
+    # sel[j] in {0,1,2}: which position stream drives frequency slot j.
+    sel = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=d // 2)
+    pos = jnp.moveaxis(jnp.take(positions, sel, axis=0), 0, -1)  # [..., S, D/2]
+    ang = pos.astype(jnp.float32) * inv
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_positional(cfg, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.rope == "rope":
+        return apply_rope(x, positions, cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return x  # "none"
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN.
+def init_mlp(cfg, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    if cfg.act == "swiglu":
+        wi = truncated_normal(k1, (d, 2, f), d**-0.5, dtype)
+    else:
+        wi = truncated_normal(k1, (d, f), d**-0.5, dtype)
+    wo = truncated_normal(k2, (f, d), f**-0.5, dtype)
+    return {"wi": wi, "wo": wo}
+
+
+def apply_mlp(cfg, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        h = jnp.einsum("...d,dcf->...cf", x, p["wi"].astype(x.dtype))
+        gate, up = h[..., 0, :], h[..., 1, :]
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wi"].astype(x.dtype))
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))

@@ -1,0 +1,177 @@
+"""Unified model facade: one API over decoder-only / hybrid / SSM / enc-dec.
+
+    model = Model(cfg)
+    params = model.init(rng)                  # or jax.eval_shape(model.init, rng)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch, cache)
+    logits, cache = model.decode(params, batch, cache, index)
+
+`input_specs(cfg, cell)` builds ShapeDtypeStruct stand-ins for every input of
+the step function selected by the shape cell (train_step for train cells,
+serve prefill/decode for inference cells) — the multi-pod dry-run lowers
+against exactly these, no allocation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import encdec as encdec_mod
+from repro.models import kvcache
+from repro.models import transformer as tfm
+from repro.models.layers import Params
+
+
+def _positions(cfg: ArchConfig, batch: int, seq: int, offset=0) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset  # [1, S] broadcasts over B
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))  # text-mode t/h/w ids coincide
+    return pos
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- parameters ----------------------------------------------------------
+    def init(self, key) -> Params:
+        dtype = jnp.dtype(self.cfg.param_dtype)
+        if self.cfg.encoder_decoder:
+            return encdec_mod.init_encdec(self.cfg, key, dtype)
+        return tfm.init_transformer(self.cfg, key, dtype)
+
+    def param_specs(self) -> Params:
+        if self.cfg.encoder_decoder:
+            return encdec_mod.encdec_specs(self.cfg)
+        return tfm.transformer_specs(self.cfg)
+
+    def abstract_params(self) -> Params:
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params: Params, batch: dict[str, jax.Array]):
+        if self.cfg.encoder_decoder:
+            return encdec_mod.encdec_loss(self.cfg, params, batch)
+        return tfm.lm_loss(self.cfg, params, batch)
+
+    # -- serving -------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int, *, abstract: bool = False):
+        return kvcache.init_cache(
+            self.cfg, batch, max_len, jnp.dtype(self.cfg.compute_dtype), abstract=abstract
+        )
+
+    def cache_specs(self):
+        return kvcache.cache_specs(self.cfg)
+
+    def prefill(self, params: Params, batch: dict[str, jax.Array], cache: dict[str, Any]):
+        """Fill the cache from a prompt; returns (last-position logits, cache)."""
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            src_pos = jnp.arange(batch["frames"].shape[1], dtype=jnp.int32)[None]
+            enc_out = encdec_mod.encode(cfg, params, batch["frames"], src_pos)
+            cross = encdec_mod.build_cross_cache(cfg, params, enc_out)
+            cache = dict(cache)
+            cache["cross"] = cross
+            tgt = batch["tgt_tokens"]
+            tgt_pos = jnp.arange(tgt.shape[1], dtype=jnp.int32)[None]
+            logits, new_cache = encdec_mod.decode_step(
+                cfg, params, tgt, tgt_pos, cross, cache, jnp.int32(0)
+            )
+            new_cache = {**cache, **(new_cache or {}), "cross": cross}
+            return logits[:, -1], new_cache
+        inputs = batch["inputs"]
+        bsz, seq = inputs.shape[0], inputs.shape[1]
+        pos = batch.get("positions")
+        if pos is None:
+            pos = _positions(cfg, bsz, seq)
+        logits, new_cache, _ = tfm.forward(
+            cfg, params, inputs, pos, cache=cache, cache_index=jnp.int32(0), decode=False
+        )
+        return logits[:, -1], new_cache
+
+    def decode(
+        self,
+        params: Params,
+        batch: dict[str, jax.Array],
+        cache: dict[str, Any],
+        index: jax.Array,
+    ):
+        """One decode step at cache slot `index`; returns (logits [B, V], cache)."""
+        cfg = self.cfg
+        if cfg.encoder_decoder:
+            tokens = batch["tokens"]
+            pos = jnp.broadcast_to(index, (tokens.shape[0], 1)).astype(jnp.int32)
+            logits, new_cache = encdec_mod.decode_step(
+                cfg, params, tokens, pos, cache["cross"], cache, index
+            )
+            new_cache = {**cache, **(new_cache or {})}
+            return logits[:, -1], new_cache
+        inputs = batch["tokens"]
+        bsz = inputs.shape[0]
+        if jnp.ndim(index) == 0:
+            pos = jnp.broadcast_to(index, (bsz, 1)).astype(jnp.int32)
+        else:  # per-slot positions (continuous batching)
+            pos = index[:, None].astype(jnp.int32)
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, bsz, 1))
+        logits, new_cache, _ = tfm.forward(
+            cfg, params, inputs, pos, cache=cache, cache_index=index, decode=True
+        )
+        return logits[:, -1], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs (ShapeDtypeStruct, never allocated).
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, cell: ShapeCell) -> dict[str, Any]:
+    """Inputs of the step function the cell exercises.
+
+    train  -> arguments of train_step's batch
+    prefill-> batch for `prefill` (cache provided separately via cache specs)
+    decode -> batch for `decode`
+    """
+    b, s = cell.global_batch, cell.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    i32 = jnp.int32
+    if cell.kind == "train":
+        if cfg.encoder_decoder:
+            return {
+                "frames": _sds((b, s, cfg.d_model), cdt),
+                "tgt_tokens": _sds((b, s), i32),
+                "labels": _sds((b, s), i32),
+            }
+        inp = (
+            _sds((b, s), i32) if cfg.embed_inputs else _sds((b, s, cfg.d_model), cdt)
+        )
+        pos_shape = (3, b, s) if cfg.rope == "mrope" else (b, s)
+        return {"inputs": inp, "labels": _sds((b, s), i32), "positions": _sds(pos_shape, i32)}
+    if cell.kind == "prefill":
+        if cfg.encoder_decoder:
+            return {"frames": _sds((b, s, cfg.d_model), cdt), "tgt_tokens": _sds((b, s), i32)}
+        inp = _sds((b, s), i32) if cfg.embed_inputs else _sds((b, s, cfg.d_model), cdt)
+        pos_shape = (3, b, s) if cfg.rope == "mrope" else (b, s)
+        return {"inputs": inp, "positions": _sds(pos_shape, i32)}
+    # decode: one new token against a cache of length cell.seq_len
+    if cfg.encoder_decoder or cfg.embed_inputs:
+        return {"tokens": _sds((b, 1), i32)}
+    return {"tokens": _sds((b, 1, cfg.d_model), cdt)}
+
+
+def batch_like(specs: dict[str, Any], key=None) -> dict[str, jax.Array]:
+    """Materialize small concrete inputs matching a spec tree (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out = {}
+    for name, sd in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sd.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sd.shape, 0, 128, sd.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sd.shape, sd.dtype) * 0.02
+    return out

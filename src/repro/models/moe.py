@@ -1,0 +1,180 @@
+"""Top-k mixture-of-experts with sort-based capacity dispatch.
+
+Dispatch strategy (TPU-native, no giant one-hot tensors):
+  1. router logits -> top-k (expert_id, prob) per token;
+  2. flatten (token, k) slots, stable-sort by expert id;
+  3. position-within-expert = slot rank - expert segment start (from a
+     bincount/cumsum), so each slot maps to a fixed buffer address
+     expert_id * capacity + position; slots beyond capacity are DROPPED
+     (scatter mode "drop"), matching capacity-factor routing semantics;
+  4. scatter tokens into a contiguous buffer [E, C, d], run a dense
+     per-expert einsum [E, C, d] x [E, d, f] (MXU-shaped), gather back and
+     combine weighted by router probs.
+
+Junk-FLOPs ratio is exactly the capacity factor (default 1.25): the buffer
+is (cf x used slots) big. Sharding:
+  * EP  (E % model-axis == 0): buffer + expert weights sharded on the
+    expert dim over "model"; combine is a psum the SPMD partitioner inserts.
+  * expert-TP (E < model-axis, e.g. grok-1 8e/16-way): expert weights
+    sharded on d_ff instead; every shard processes all experts on its d_ff
+    slice. Buffer is replicated over "model".
+
+The choice is recorded per-arch by `expert_sharding(cfg, n_model_shards)`.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, truncated_normal
+
+
+def init_moe(cfg, key, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    kr, ki, ko, ks = jax.random.split(key, 4)
+    p = {
+        "router": truncated_normal(kr, (d, e), d**-0.5, jnp.float32),  # router in f32
+        "wi": truncated_normal(ki, (e, d, 2, f), d**-0.5, dtype),  # gate+up stacked
+        "wo": truncated_normal(ko, (e, f, d), f**-0.5, dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff * cfg.n_shared_experts
+        p["shared_wi"] = truncated_normal(ks, (d, 2, fs), d**-0.5, dtype)
+        p["shared_wo"] = truncated_normal(ks, (fs, d), fs**-0.5, dtype)
+    return p
+
+
+def moe_specs(cfg) -> Params:
+    p = {
+        "router": ("embed", None),
+        "wi": ("experts", "embed", None, "expert_ff"),
+        "wo": ("experts", "expert_ff", "embed"),
+    }
+    if cfg.n_shared_experts:
+        p["shared_wi"] = ("embed", None, "mlp")
+        p["shared_wo"] = ("mlp", "embed")
+    return p
+
+
+def expert_sharding(cfg, n_model_shards: int) -> str:
+    """'ep' if the expert dim divides the model axis, else 'tp' (d_ff split)."""
+    if cfg.n_experts and cfg.n_experts % n_model_shards == 0:
+        return "ep"
+    return "tp"
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    """Per-expert buffer slots; multiple of 8 for clean TPU tiling."""
+    c = int(cfg.capacity_factor * n_tokens * cfg.experts_per_token / max(cfg.n_experts, 1))
+    return max(8, -(-c // 8) * 8)
+
+
+# ---------------------------------------------------------------------------
+def route(cfg, router_w: jax.Array, x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x [T, d] -> (expert_ids [T, k], probs [T, k], aux_loss scalar).
+
+    Softmax-then-topk with probs renormalized over the chosen k. Aux loss is
+    the standard load-balance term (mean_prob x mean_assignment x E).
+    """
+    logits = x.astype(jnp.float32) @ router_w  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.experts_per_token)  # [T, k]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    # load-balance aux loss
+    e = cfg.n_experts
+    me = jnp.mean(probs, axis=0)  # [E] mean router prob
+    assign = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    fe = assign / top_i.size  # fraction of slots per expert
+    aux = e * jnp.sum(me * fe)
+    return top_i, top_p, aux
+
+
+def dispatch_indices(
+    expert_ids: jax.Array, n_experts: int, cap: int
+) -> tuple[jax.Array, jax.Array]:
+    """expert_ids [T, k] -> (slot_addr [T*k], token_idx [T*k]) in sorted order.
+
+    slot_addr = expert * cap + position-within-expert; addresses with
+    position >= cap are mapped out-of-range so scatter/gather drop them.
+    """
+    t, k = expert_ids.shape
+    flat = expert_ids.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat, stable=True)  # slots sorted by expert
+    sorted_e = flat[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat].add(1)
+    starts = jnp.cumsum(counts) - counts  # exclusive prefix
+    pos = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e]
+    addr = jnp.where(pos < cap, sorted_e * cap + pos, n_experts * cap)  # OOB -> dropped
+    token_idx = order // k
+    return addr, token_idx
+
+
+def apply_moe(cfg, p: Params, x: jax.Array, cap: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, d] -> (y [B, S, d], aux_loss). SwiGLU experts.
+
+    With cfg.moe_groups > 1 the tokens are split into G groups along the
+    (data-sharded) batch dim and dispatched independently (vmap), so the
+    scatter/gather address a per-group buffer [G, E, C/G, d] whose leading
+    dim inherits the batch sharding — routing stays shard-local.
+    """
+    b, s, d = x.shape
+    g = max(cfg.moe_groups, 1)
+    if g > 1 and b % g == 0:
+        xg = x.reshape(g, (b // g) * s, d)
+        if cfg.moe_group_axis:
+            from jax.sharding import PartitionSpec as P
+
+            xg = jax.lax.with_sharding_constraint(xg, P(cfg.moe_group_axis))
+        yg, aux = jax.vmap(lambda xi: _moe_tokens(cfg, p, xi))(xg)
+        if cfg.moe_group_axis:
+            yg = jax.lax.with_sharding_constraint(yg, P(cfg.moe_group_axis))
+        y = yg.reshape(b * s, d)
+        aux = jnp.mean(aux)
+    else:
+        y, aux = _moe_tokens(cfg, p, x.reshape(b * s, d), cap)
+
+    if cfg.n_shared_experts:
+        xt = x.reshape(b * s, d)
+        hs = jnp.einsum("td,dgf->tgf", xt, p["shared_wi"].astype(xt.dtype))
+        hs = jax.nn.silu(hs[..., 0, :]) * hs[..., 1, :]
+        y = y + jnp.einsum("tf,fd->td", hs, p["shared_wo"].astype(xt.dtype))
+
+    return y.reshape(b, s, d), aux
+
+
+def _moe_tokens(cfg, p: Params, xt: jax.Array, cap: int | None = None) -> tuple[jax.Array, jax.Array]:
+    """Routed-expert path over flat tokens xt [T, d] -> (y [T, d], aux)."""
+    t, d = xt.shape
+    cap = cap or capacity(t, cfg)
+
+    ids, probs, aux = route(cfg, p["router"], xt)
+    addr, token_idx = dispatch_indices(ids, cfg.n_experts, cap)
+
+    # Scatter tokens into the expert buffer [E*C, d]; OOB addresses dropped.
+    buf = jnp.zeros((cfg.n_experts * cap, d), xt.dtype)
+    buf = buf.at[addr].set(xt[token_idx], mode="drop")
+    buf = buf.reshape(cfg.n_experts, cap, d)
+
+    # Dense per-expert SwiGLU: [E, C, d] x [E, d, 2, f] -> [E, C, 2, f]
+    h = jnp.einsum("ecd,edgf->ecgf", buf, p["wi"].astype(xt.dtype))
+    h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(xt.dtype))  # [E, C, d]
+    out = out.reshape(cfg.n_experts * cap, d)
+
+    # Gather per-slot results and combine with router probs.
+    y_slot = jnp.take(out, jnp.clip(addr, 0, out.shape[0] - 1), axis=0)
+    y_slot = jnp.where((addr < out.shape[0])[:, None], y_slot, 0.0)
+    w_slot = probs.reshape(-1)[jnp.argsort(ids.reshape(-1), stable=True)]  # same sorted order
+    y = jnp.zeros((t, d), xt.dtype).at[token_idx].add(y_slot * w_slot[:, None].astype(xt.dtype))
+    return y, aux
+
+
+def moe_flops(cfg, n_tokens: int) -> int:
+    """Active-parameter FLOPs per MoE layer (routed + shared)."""
+    d, f = cfg.d_model, cfg.d_ff
+    routed = 2 * n_tokens * cfg.experts_per_token * 3 * d * f
+    shared = 2 * n_tokens * cfg.n_shared_experts * 3 * d * f
+    router = 2 * n_tokens * d * cfg.n_experts
+    return routed + shared + router

@@ -1,0 +1,240 @@
+"""Mamba2 / SSD (state-space duality) mixer.
+
+TPU adaptation: the SSD *chunked* form is used for train/prefill — within a
+chunk the recurrence is computed as a small causal attention-like matmul
+(MXU-shaped), across chunks a [B, H, P, N] state is carried by lax.scan —
+and the O(1)-state recurrent form is used for decode. ngroups = 1 (B and C
+shared across heads), matching the Mamba2 defaults for these sizes.
+
+Shapes:
+  d_inner = expand * d_model,  H = d_inner / head_dim (P = head_dim), N = ssm_state
+  wz, wx   [d_model, d_inner]          logical ("embed", "inner")
+  wB, wC   [d_model, N]                logical ("embed", None)
+  wdt      [d_model, H]                logical ("embed", "ssm_heads")
+  conv_w   [K, d_inner + 2N]           depthwise causal conv, K = ssm_conv
+  A_log, D, dt_bias [H]
+  out_proj [d_inner, d_model]          logical ("inner", "embed")
+
+The inner dim (H x P) is sharded over "model"; B/C (state dim N) are
+replicated, so the chunk scan needs no cross-shard communication and the
+out_proj all-reduce is the only collective — same pattern as attention.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, gated_rmsnorm, truncated_normal
+
+
+def init_ssm(cfg, key, dtype) -> Params:
+    d, di, n, h, k = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_conv
+    keys = jax.random.split(key, 7)
+    conv_ch = di + 2 * n
+    return {
+        "wz": truncated_normal(keys[0], (d, di), d**-0.5, dtype),
+        "wx": truncated_normal(keys[1], (d, di), d**-0.5, dtype),
+        "wB": truncated_normal(keys[2], (d, n), d**-0.5, dtype),
+        "wC": truncated_normal(keys[3], (d, n), d**-0.5, dtype),
+        "wdt": truncated_normal(keys[4], (d, h), d**-0.5, dtype),
+        "conv_w": truncated_normal(keys[5], (k, conv_ch), k**-0.5, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        # A in (-~16, -~0.5): init log-uniform as in the paper
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": truncated_normal(keys[6], (di, d), di**-0.5, dtype),
+    }
+
+
+def ssm_specs(cfg) -> Params:
+    return {
+        "wz": ("embed", "inner"),
+        "wx": ("embed", "inner"),
+        "wB": ("embed", None),
+        "wC": ("embed", None),
+        "wdt": ("embed", "ssm_heads"),
+        "conv_w": (None, "conv_ch"),
+        "conv_b": ("conv_ch",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm_scale": ("inner",),
+        "out_proj": ("inner", "embed"),
+    }
+
+
+# ---------------------------------------------------------------------------
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel [K, C]. silu activation."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):  # K is 4: unrolled taps beat a conv op for depthwise on TPU
+        out = out + pad[:, i : i + xbc.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _project(cfg, p: Params, u: jax.Array):
+    """u [B, S, d] -> z, xc, B, C, dt (conv applied to x/B/C jointly)."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = u @ p["wz"].astype(u.dtype)  # [B,S,di]
+    x = u @ p["wx"].astype(u.dtype)
+    bmat = u @ p["wB"].astype(u.dtype)  # [B,S,N]
+    cmat = u @ p["wC"].astype(u.dtype)
+    dt_raw = u @ p["wdt"].astype(u.dtype)  # [B,S,H]
+    xbc = jnp.concatenate([x, bmat, cmat], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _split_xbc(cfg, xbc: jax.Array):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return xbc[..., :di], xbc[..., di : di + n], xbc[..., di + n :]
+
+
+def ssd_chunked(
+    cfg,
+    x: jax.Array,  # [B, S, H, P]
+    bmat: jax.Array,  # [B, S, N]
+    cmat: jax.Array,  # [B, S, N]
+    dt: jax.Array,  # [B, S, H]  (post-softplus)
+    a: jax.Array,  # [H]  (negative; A = -exp(A_log))
+    init_state: jax.Array | None = None,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """SSD chunked scan. Returns (y [B, S, H, P], final_state [B, H, P, N]).
+
+    All decay math in f32; matmuls take the input dtype on the B/C/x sides
+    with f32 accumulation.
+    """
+    b, s, h, pdim = x.shape
+    n = bmat.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    pad = (-s) % q
+    if pad:
+        # Zero-pad to a chunk multiple. dt=0 at padded steps means decay
+        # exp(dt*a)=1 and zero state/output contribution, so results over the
+        # real prefix (and the carried state) are exact; padded rows are cut.
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, bmat, cmat, dt = zpad(x), zpad(bmat), zpad(cmat), zpad(dt)
+    sp = s + pad
+    nc = sp // q
+
+    xc = x.reshape(b, nc, q, h, pdim)
+    bc = bmat.reshape(b, nc, q, n)
+    cc = cmat.reshape(b, nc, q, n)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+
+    dta = dtc * a.astype(jnp.float32)  # [B,nc,Q,H] log-decay per step (<= 0)
+    lcum = jnp.cumsum(dta, axis=2)  # inclusive within-chunk cumulative log decay
+    l_last = lcum[:, :, -1]  # [B,nc,H]
+
+    # intra-chunk: attention-like causal matmul
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc, preferred_element_type=jnp.float32)
+    decay = jnp.exp(lcum[:, :, :, None, :] - lcum[:, :, None, :, :])  # [B,nc,Q,K,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    m = cb[..., None] * decay * dtc[:, :, None, :, :]  # [B,nc,Q,K,H]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m, xc.astype(jnp.float32))
+
+    # per-chunk outgoing state: sum_k exp(l_last - l_k) dt_k B_k (x) x_k
+    seg = jnp.exp(l_last[:, :, None, :] - lcum) * dtc  # [B,nc,Q,H]
+    s_chunk = jnp.einsum("bckh,bckn,bckhp->bchpn", seg, bc.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence over nc chunks
+    state0 = (
+        jnp.zeros((b, h, pdim, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        s_c, ll = inp  # [B,H,P,N], [B,H]
+        state_in = state
+        state = jnp.exp(ll)[:, :, None, None] * state + s_c
+        return state, state_in
+
+    (final_state, states_in) = jax.lax.scan(
+        step, state0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(l_last, 1, 0))
+    )
+    states_in = jnp.moveaxis(states_in, 0, 1)  # [B,nc,H,P,N] state entering each chunk
+
+    # inter-chunk contribution: C_q . state_in, decayed to position q
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cc.astype(jnp.float32), states_in)
+    y_inter = y_inter * jnp.exp(lcum)[..., None]  # [B,nc,Q,H,1]
+
+    y = (y_intra + y_inter).reshape(b, sp, h, pdim)
+    if pad:
+        y = y[:, :s]
+    return y, final_state
+
+
+def apply_ssm(
+    cfg,
+    p: Params,
+    u: jax.Array,  # [B, S, d_model]
+    *,
+    state: dict[str, jax.Array] | None = None,
+    decode: bool = False,
+) -> tuple[jax.Array, dict[str, jax.Array] | None]:
+    """Mamba2 block. Train/prefill when decode=False (state optionally carried
+    in/out for chunked prefill); single-token recurrent step when decode=True.
+
+    state = {"ssm": [B,H,P,N] f32, "conv": [B,K-1,conv_ch]}
+    """
+    h, pdim, n = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    bsz, s, _ = u.shape
+    z, xbc_raw, dt_raw = _project(cfg, p, u)
+    a = -jnp.exp(p["A_log"])  # [H]
+
+    new_state = None
+    if decode:
+        assert s == 1, "decode expects one token"
+        conv_st = state["conv"]  # [B, K-1, C]
+        window = jnp.concatenate([conv_st, xbc_raw], axis=1)  # [B,K,C]
+        xbc = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+            + p["conv_b"].astype(jnp.float32)
+        ).astype(u.dtype)[:, None]
+        x, bmat, cmat = _split_xbc(cfg, xbc)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+        xh = x[:, 0].reshape(bsz, h, pdim).astype(jnp.float32)
+        ssm_st = state["ssm"].astype(jnp.float32)  # [B,H,P,N]
+        decay = jnp.exp(dt * a)  # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt, bmat[:, 0].astype(jnp.float32), xh)
+        ssm_st = decay[:, :, None, None] * ssm_st + upd
+        y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), ssm_st)
+        y = y + p["D"][None, :, None] * xh
+        y = y.reshape(bsz, 1, cfg.d_inner).astype(u.dtype)
+        new_state = {"ssm": ssm_st, "conv": window[:, 1:]}
+    else:
+        xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+        x, bmat, cmat = _split_xbc(cfg, xbc)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+        xh = x.reshape(bsz, s, h, pdim)
+        init = state["ssm"] if state is not None else None
+        y, fin = ssd_chunked(cfg, xh, bmat, cmat, dt, a, init)
+        y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(bsz, s, cfg.d_inner).astype(u.dtype)
+        if state is not None:
+            k = cfg.ssm_conv
+            new_state = {"ssm": fin, "conv": xbc_raw[:, s - (k - 1) :, :]}
+
+    y = gated_rmsnorm(p["norm_scale"], y, z)
+    return y @ p["out_proj"].astype(u.dtype), new_state
+
+
+def ssm_flops(cfg, batch: int, s: int, decode: bool = False) -> int:
+    """Model FLOPs of one SSD layer."""
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    proj = 2 * batch * s * d * (2 * di + 2 * n + h) + 2 * batch * s * di * d
+    if decode:
+        scan = 2 * batch * s * (di * n * 3)  # state update + readout
+    else:
+        q = min(cfg.ssm_chunk, s)
+        intra = 2 * batch * s * q * (n + di)  # CB^T + M.x per position
+        inter = 2 * batch * s * di * n * 2  # state build + readout
+        scan = intra + inter
+    return proj + scan

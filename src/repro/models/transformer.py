@@ -1,0 +1,343 @@
+"""Decoder-only transformer stack: scan-over-layers, hybrid patterns, MoE.
+
+The repeating layer unit (cfg.pattern) is scanned with stacked parameters
+[n_repeats, ...] — one XLA compilation of the body regardless of depth
+(80-layer qwen2-vl compiles the same body once). `first_k_dense` leading
+layers (Kimi-K2 style) run unscanned. Remat policy per cfg.remat:
+  none — store all; dots — save matmul outputs, recompute elementwise;
+  full — recompute the whole block on the backward pass.
+
+Blocks are pre-norm residual: x += mixer(norm(x)); x += ffn(norm(x)).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerKind
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    Params,
+    apply_mlp,
+    apply_norm,
+    init_mlp,
+    init_norm,
+    truncated_normal,
+)
+
+
+# ---------------------------------------------------------------------------
+# One block = mixer + ffn with pre-norms.
+def init_block(cfg: ArchConfig, kind: LayerKind, key, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {"norm1": init_norm(cfg, k1, cfg.d_model, dtype)}
+    if kind.mixer == "attn":
+        p["attn"] = attn_mod.init_attention(cfg, k2, dtype)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(cfg, k2, dtype)
+    if kind.ffn != "none":
+        p["norm2"] = init_norm(cfg, k3, cfg.d_model, dtype)
+        if kind.ffn == "moe":
+            p["moe"] = moe_mod.init_moe(cfg, k4, dtype)
+        else:
+            p["mlp"] = init_mlp(cfg, k4, dtype)
+    return p
+
+
+def block_specs(cfg: ArchConfig, kind: LayerKind) -> Params:
+    norm = {"scale": ("embed",)} if cfg.norm == "rmsnorm" else (
+        {} if cfg.norm == "nonparametric_ln" else {"scale": ("embed",), "bias": ("embed",)}
+    )
+    p: Params = {"norm1": dict(norm)}
+    if kind.mixer == "attn":
+        p["attn"] = attn_mod.attention_specs(cfg)
+    else:
+        p["ssm"] = ssm_mod.ssm_specs(cfg)
+    if kind.ffn != "none":
+        p["norm2"] = dict(norm)
+        if kind.ffn == "moe":
+            p["moe"] = moe_mod.moe_specs(cfg)
+        else:
+            p["mlp"] = {"wi": ("embed", None, "mlp") if cfg.act == "swiglu" else ("embed", "mlp"),
+                        "wo": ("mlp", "embed")}
+    return p
+
+
+def apply_block(
+    cfg: ArchConfig,
+    kind: LayerKind,
+    p: Params,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: dict[str, jax.Array] | None = None,
+    cache_index: jax.Array | None = None,
+    decode: bool = False,
+) -> tuple[jax.Array, dict[str, jax.Array] | None, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    if kind.mixer == "attn":
+        y, new_cache = attn_mod.apply_attention(
+            cfg, p["attn"], h, positions, causal=True, kv_cache=cache, cache_index=cache_index
+        )
+    else:
+        y, new_cache = ssm_mod.apply_ssm(cfg, p["ssm"], h, state=cache, decode=decode)
+    x = x + y
+    if kind.ffn != "none":
+        h = apply_norm(cfg, p["norm2"], x)
+        if kind.ffn == "moe":
+            y, aux = moe_mod.apply_moe(cfg, p["moe"], h)
+        else:
+            y = apply_mlp(cfg, p["mlp"], h)
+        x = x + y
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Full stack.
+def init_transformer(cfg: ArchConfig, key, dtype) -> Params:
+    keys = jax.random.split(key, 6)
+    p: Params = {}
+    if cfg.embed_inputs:
+        p["embed"] = truncated_normal(keys[0], (cfg.padded_vocab, cfg.d_model), cfg.d_model**-0.5, dtype)
+    p["first"] = [
+        init_block(cfg, LayerKind("attn", "dense"), k, dtype)
+        for k in jax.random.split(keys[1], max(cfg.first_k_dense, 1))[: cfg.first_k_dense]
+    ]
+    reps = cfg.n_repeats
+    body: Params = {}
+    for i, kind in enumerate(cfg.pattern):
+        ks = jax.random.split(jax.random.fold_in(keys[2], i), reps)
+        body[f"l{i}"] = jax.vmap(lambda k: init_block(cfg, kind, k, dtype))(ks)
+    p["body"] = body
+    p["final_norm"] = init_norm(cfg, keys[3], cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = truncated_normal(keys[4], (cfg.d_model, cfg.padded_vocab), cfg.d_model**-0.5, dtype)
+    return p
+
+
+def transformer_specs(cfg: ArchConfig) -> Params:
+    def stack(spec_tree):
+        return jax.tree_util.tree_map(
+            lambda axes: ("layers",) + tuple(axes), spec_tree,
+            is_leaf=lambda v: isinstance(v, tuple),
+        )
+
+    p: Params = {}
+    if cfg.embed_inputs:
+        p["embed"] = ("vocab", "embed")
+    p["first"] = [block_specs(cfg, LayerKind("attn", "dense")) for _ in range(cfg.first_k_dense)]
+    p["body"] = {f"l{i}": stack(block_specs(cfg, kind)) for i, kind in enumerate(cfg.pattern)}
+    norm = {"scale": ("embed",)} if cfg.norm == "rmsnorm" else (
+        {} if cfg.norm == "nonparametric_ln" else {"scale": ("embed",), "bias": ("embed",)}
+    )
+    p["final_norm"] = norm
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("embed", "vocab")
+    return p
+
+
+def embed_tokens(cfg: ArchConfig, p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return jnp.take(p["embed"], tokens, axis=0).astype(dtype)
+
+
+def logits_from_hidden(cfg: ArchConfig, p: Params, x: jax.Array) -> jax.Array:
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype), preferred_element_type=jnp.float32)
+    if cfg.logit_softcap > 0.0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# Per-layer parameter transform applied inside the scan body (explicit
+# ZeRO-3 at-use weight gathering). Set via `layer_param_hook`; None = off.
+_LAYER_PARAM_HOOK = None
+
+
+class layer_param_hook:
+    """Context manager installing a per-layer param transform for tracing."""
+
+    def __init__(self, hook):
+        self.hook = hook
+
+    def __enter__(self):
+        global _LAYER_PARAM_HOOK
+        self._prev = _LAYER_PARAM_HOOK
+        _LAYER_PARAM_HOOK = self.hook
+        return self
+
+    def __exit__(self, *exc):
+        global _LAYER_PARAM_HOOK
+        _LAYER_PARAM_HOOK = self._prev
+        return False
+
+
+def _body_scan(cfg, body_params, x, positions, cache_body, cache_index, decode):
+    """Scan the repeating unit. cache_body threads through as scan xs/ys."""
+    npos = len(cfg.pattern)
+
+    def unit(carry, xs):
+        x, aux = carry
+        params_i, cache_i = xs
+        if _LAYER_PARAM_HOOK is not None:
+            params_i = _LAYER_PARAM_HOOK(params_i)
+        new_caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            cj = cache_i[f"l{j}"] if cache_i is not None else None
+            x, nc, a = apply_block(
+                cfg, kind, params_i[f"l{j}"], x, positions,
+                cache=cj, cache_index=cache_index, decode=decode,
+            )
+            aux = aux + a
+            if nc is not None:
+                new_caches[f"l{j}"] = nc
+        return (x, aux), (new_caches if new_caches else None)
+
+    if cfg.remat == "full":
+        unit = jax.checkpoint(unit, prevent_cse=False)
+    elif cfg.remat == "dots":
+        unit = jax.checkpoint(
+            unit, policy=jax.checkpoint_policies.checkpoint_dots, prevent_cse=False
+        )
+
+    (x, aux), new_cache_body = jax.lax.scan(
+        unit, (x, jnp.zeros((), jnp.float32)), (body_params, cache_body),
+        unroll=cfg.n_repeats if cfg.unroll_layers else 1,
+    )
+    return x, aux, new_cache_body
+
+
+def forward(
+    cfg: ArchConfig,
+    p: Params,
+    inputs: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: dict[str, Any] | None = None,
+    cache_index: jax.Array | None = None,
+    decode: bool = False,
+    compute_dtype=None,
+) -> tuple[jax.Array, dict[str, Any] | None, jax.Array]:
+    """inputs: int tokens [B, S] (embed_inputs) or embeddings [B, S, d].
+
+    Returns (logits [B, S, V] f32, new_cache, aux_loss).
+    """
+    dtype = compute_dtype or jnp.dtype(cfg.compute_dtype)
+    if cfg.embed_inputs:
+        x = embed_tokens(cfg, p, inputs, dtype)
+    else:
+        x = inputs.astype(dtype)
+
+    new_cache: dict[str, Any] | None = {"first": [], "body": None} if cache is not None else None
+    for i in range(cfg.first_k_dense):
+        ci = cache["first"][i] if cache is not None else None
+        x, nc, _ = apply_block(
+            cfg, LayerKind("attn", "dense"), p["first"][i], x, positions,
+            cache=ci, cache_index=cache_index, decode=decode,
+        )
+        if new_cache is not None:
+            new_cache["first"].append(nc)
+
+    cache_body = cache["body"] if cache is not None else None
+    x, aux, ncb = _body_scan(cfg, p["body"], x, positions, cache_body, cache_index, decode)
+    if new_cache is not None:
+        new_cache["body"] = ncb
+
+    x = apply_norm(cfg, p["final_norm"], x)
+    logits = logits_from_hidden(cfg, p, x)
+    return logits, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """logits [B, S, V] (f32), labels [B, S] int. Mean over all tokens.
+
+    Works with vocab sharded over "model": the max/sum reductions lower to
+    small all-reduces under SPMD.
+    """
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    # m must be stop-gradient on BOTH uses: d lse/d logits == softmax(logits)
+    # comes entirely from the log-sum-exp term (adding raw m back would leak
+    # an extra onehot(argmax) into every gradient).
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def chunked_cross_entropy(
+    cfg: ArchConfig, p: Params, x: jax.Array, labels: jax.Array, chunk: int
+) -> jax.Array:
+    """CE over vocab chunks: the [B,S,V] f32 logits are never materialized.
+
+    Online logsumexp over chunks of the lm_head: each scan step computes
+    logits for `chunk` vocab columns, folds them into running (max, sumexp)
+    and picks up the gold logit where the label falls in the chunk. The
+    body is rematerialized on the backward pass (memory O(B·S·chunk)).
+    Exactly equals softmax_cross_entropy(logits_from_hidden(x), labels)
+    when logit_softcap == 0.
+    """
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]  # [d, V]
+    v = head.shape[-1]
+    assert v % chunk == 0, (v, chunk)
+    nc = v // chunk
+    hc = head.reshape(head.shape[0], nc, chunk)
+    b, s, _ = x.shape
+
+    def body(carry, args):
+        m, se, gold = carry
+        ci, hslice = args  # hslice [d, chunk]
+        lg = jnp.einsum("bsd,dv->bsv", x, hslice.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+        if cfg.logit_softcap > 0.0:
+            lg = jnp.tanh(lg / cfg.logit_softcap) * cfg.logit_softcap
+        cm = jnp.maximum(m, jnp.max(lg, axis=-1))  # [B,S]
+        se = se * jnp.exp(m - cm) + jnp.sum(jnp.exp(lg - cm[..., None]), axis=-1)
+        local = labels - ci * chunk
+        in_chunk = (local >= 0) & (local < chunk)
+        g = jnp.take_along_axis(lg, jnp.clip(local, 0, chunk - 1)[..., None], axis=-1)[..., 0]
+        gold = jnp.where(in_chunk, g, gold)
+        return (cm, se, gold), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    init = (
+        jnp.full((b, s), -jnp.inf, jnp.float32),
+        jnp.zeros((b, s), jnp.float32),
+        jnp.zeros((b, s), jnp.float32),
+    )
+    (m, se, gold), _ = jax.lax.scan(
+        body, init, (jnp.arange(nc), jnp.moveaxis(hc, 1, 0))
+    )
+    lse = jnp.log(se) + m
+    return jnp.mean(lse - gold)
+
+
+def lm_loss(
+    cfg: ArchConfig, p: Params, batch: dict[str, jax.Array], aux_weight: float = 0.01
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """batch: {"inputs": [B,S] or [B,S,d], "labels": [B,S], "positions": ...}."""
+    if cfg.ce_vocab_chunk > 0:
+        dtype = jnp.dtype(cfg.compute_dtype)
+        if cfg.embed_inputs:
+            x = embed_tokens(cfg, p, batch["inputs"], dtype)
+        else:
+            x = batch["inputs"].astype(dtype)
+        new_cache: Any = None
+        for i in range(cfg.first_k_dense):
+            x, _, _ = apply_block(
+                cfg, LayerKind("attn", "dense"), p["first"][i], x, batch["positions"],
+            )
+        x, aux, _ = _body_scan(cfg, p["body"], x, batch["positions"], None, None, False)
+        x = apply_norm(cfg, p["final_norm"], x)
+        ce = chunked_cross_entropy(cfg, p, x, batch["labels"], cfg.ce_vocab_chunk)
+    else:
+        logits, _, aux = forward(cfg, p, batch["inputs"], batch["positions"])
+        ce = softmax_cross_entropy(logits, batch["labels"])
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}

@@ -1,0 +1,3 @@
+from repro.optim.optimizer import Optimizer, make_optimizer, make_schedule, state_logical_specs
+
+__all__ = ["Optimizer", "make_optimizer", "make_schedule", "state_logical_specs"]

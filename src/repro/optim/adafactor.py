@@ -1,0 +1,90 @@
+"""Adafactor (factored second moments) for the >=300B archs.
+
+For params with >= 2 dims, the second moment is stored as row/col factors
+(O(n+m) instead of O(nm)); 1-D params keep a full accumulator. No first
+moment (beta1=0 variant), relative step sizing off — the train loop passes
+the schedule's lr. This is what makes kimi-k2 (1T params) state fit:
+AdamW fp32 m+v would be ~8 TB; factored state is ~2 GB + the bf16 params.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    vr: Any  # row factors (or full v for 1-D)
+    vc: Any  # col factors (zeros() placeholder for 1-D)
+    count: jax.Array
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def init(params) -> AdafactorState:
+    def vr_like(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+
+    def vc_like(p):
+        return (
+            jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            if _factored(p)
+            else jnp.zeros((1,), jnp.float32)
+        )
+
+    return AdafactorState(
+        vr=jax.tree_util.tree_map(vr_like, params),
+        vc=jax.tree_util.tree_map(vc_like, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_init(params) -> AdafactorState:
+    return jax.eval_shape(init, params)
+
+
+def update(
+    grads,
+    state: AdafactorState,
+    params,
+    lr,
+    *,
+    decay: float = 0.8,
+    eps1: float = 1e-30,
+    eps2: float = 1e-3,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+):
+    count = state.count + 1
+    beta2 = 1.0 - count.astype(jnp.float32) ** (-decay)  # schedule from the paper
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps1
+        if _factored(p):
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps1)
+            vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+            u = g * jax.lax.rsqrt(vhat + eps1)
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(vr + eps1)
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps1)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        # relative step size: scale by RMS of the parameter (floored at eps2)
+        p_rms = jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32))) + eps1)
+        newp = p.astype(jnp.float32) - lr * jnp.maximum(eps2, p_rms) * u
+        if weight_decay:
+            newp = newp - lr * weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), vr, vc
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.vr, state.vc)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return pick(0), AdafactorState(pick(1), pick(2), count), {}

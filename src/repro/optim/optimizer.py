@@ -1,0 +1,53 @@
+"""Optimizer facade: name -> (init, update) with per-arch selection and
+ZeRO-1 state sharding specs derived from parameter specs."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.optim import adafactor, adamw
+from repro.optim.schedule import SCHEDULES
+
+
+class Optimizer(NamedTuple):
+    name: str
+    init: Callable[[Any], Any]
+    abstract_init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any, dict]]
+
+
+def make_optimizer(name: str) -> Optimizer:
+    if name == "adamw":
+        return Optimizer("adamw", adamw.init, adamw.abstract_init, adamw.update)
+    if name == "adafactor":
+        return Optimizer("adafactor", adafactor.init, adafactor.abstract_init, adafactor.update)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def state_logical_specs(opt: Optimizer, param_specs, params_abstract):
+    """Logical axes for optimizer state, mirroring param specs.
+
+    AdamW: m/v inherit the param's axes, and `zero1` (applied by the rules
+    engine in launch/mesh.py) additionally shards the first free axis over
+    "data". Adafactor: row factor drops the last axis, col factor drops the
+    second-to-last.
+    """
+    is_axes = lambda v: isinstance(v, tuple) and all(a is None or isinstance(a, str) for a in v)
+    if opt.name == "adamw":
+        return adamw.AdamWState(m=param_specs, v=param_specs, count=())
+    # adafactor
+    def vr_spec(axes):
+        return tuple(axes[:-1]) if len(axes) >= 2 else tuple(axes)
+
+    def vc_spec(axes):
+        return tuple(axes[:-2]) + tuple(axes[-1:]) if len(axes) >= 2 else (None,)
+
+    vr = jax.tree_util.tree_map(vr_spec, param_specs, is_leaf=is_axes)
+    vc = jax.tree_util.tree_map(vc_spec, param_specs, is_leaf=is_axes)
+    return adafactor.AdafactorState(vr=vr, vc=vc, count=())
+
+
+def make_schedule(name: str, **kw) -> Callable:
+    fn = SCHEDULES[name]
+    return lambda step: fn(step, **kw)

@@ -1,0 +1,27 @@
+"""Learning-rate schedules (pure functions of the step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    prog = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def warmup_rsqrt(step, *, peak_lr: float, warmup_steps: int):
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    decay = peak_lr * jnp.sqrt(warmup_steps / jnp.maximum(step, warmup_steps))
+    return jnp.where(step < warmup_steps, warm, decay)
+
+
+def constant(step, *, peak_lr: float):
+    return jnp.full((), peak_lr, jnp.float32)
+
+
+SCHEDULES = {"warmup_cosine": warmup_cosine, "warmup_rsqrt": warmup_rsqrt, "constant": constant}

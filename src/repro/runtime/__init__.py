@@ -1,0 +1,14 @@
+from repro.runtime.train_loop import (
+    SimulatedFailure,
+    TrainConfig,
+    TrainResult,
+    make_train_step,
+    run_with_restarts,
+    train,
+)
+from repro.runtime.serve_loop import Completion, Request, SlotServer
+
+__all__ = [
+    "SimulatedFailure", "TrainConfig", "TrainResult", "make_train_step",
+    "run_with_restarts", "train", "Completion", "Request", "SlotServer",
+]

@@ -1,0 +1,58 @@
+"""Elastic scaling: re-mesh live state onto a changed device set.
+
+When a pod loses (or regains) hosts, the controller rebuilds the mesh over
+the surviving devices and `reshard`s params/optimizer state onto it —
+device_put with the new NamedShardings performs the minimal movement (a
+resharding collective on real hardware). The shape cells keep working as
+long as the new data axis still divides the global batch; otherwise
+`fit_batch` computes the largest divisible batch (documented drop).
+
+`plan_mesh` picks the largest (data, model) grid that (a) fits the device
+count and (b) keeps `model` a divisor of the previous model-axis size, so
+TP-sharded dims stay divisible after shrinking.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.launch.mesh import Rules
+
+
+def plan_mesh(n_devices: int, prev_model: int = 1) -> tuple[int, int]:
+    """(data, model) for a degraded device count."""
+    model = prev_model
+    while model > 1 and (n_devices % model != 0):
+        model //= 2
+    data = n_devices // model
+    return data, model
+
+
+def remesh(devices: list, data: int, model: int) -> Mesh:
+    arr = np.array(devices[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard(tree: Any, rules: Rules, spec_tree: Any, new_mesh: Mesh) -> Any:
+    """Move live arrays onto the new mesh (minimal-movement device_put)."""
+    shardings = jax.tree_util.tree_map(
+        lambda axes: NamedSharding(new_mesh, rules.spec(axes)),
+        spec_tree,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(a is None or isinstance(a, str) for a in v),
+    )
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shard_leaves = jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda v: isinstance(v, NamedSharding)
+    )
+    return jax.tree_util.tree_unflatten(
+        treedef, [jax.device_put(l, s) for l, s in zip(leaves, shard_leaves)]
+    )
+
+
+def fit_batch(global_batch: int, n_data: int) -> int:
+    """Largest batch <= global_batch divisible by the new data-parallel width."""
+    return (global_batch // n_data) * n_data

@@ -1,0 +1,142 @@
+"""Batched serving with slot-based continuous batching.
+
+A fixed pool of B decode slots (static shapes — TPU-friendly). Each slot
+holds one request's KV state at its own write position: the decode step
+takes a per-slot `lengths` vector, writes each slot's new K/V at its own
+index (vmapped dynamic_update_slice -> scatter), and masks attention by
+per-slot kv_len. One compiled decode graph serves heterogeneous request
+lengths; finished slots (EOS / budget / max_len) are refilled from the
+queue via single-request prefill spliced into the slot's cache row.
+
+Caveat vs production: prefill is per-request (batch=1) rather than chunked
+across slots; noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jax.Array  # [S] int32
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: list[int]
+    prompt_len: int
+
+
+class SlotServer:
+    """n_slots concurrent decode streams over one shared compiled step."""
+
+    def __init__(self, model: Model, n_slots: int, max_len: int, eos_id: int = -1):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.params: Any = None
+        self.cache: Any = None
+        self.specs = model.cache_specs()
+        # host-side slot table
+        self.slot_req: list[Request | None] = [None] * n_slots
+        self.slot_done: list[list[int]] = [[] for _ in range(n_slots)]
+        self.slot_budget = [0] * n_slots
+        self.lengths = jnp.zeros((n_slots,), jnp.int32)
+        self.queue: list[Request] = []
+        self.completed: list[Completion] = []
+        self.decode_calls = 0
+
+        def _decode(params, cache, tokens, lengths):
+            logits, cache = self.model.decode(params, {"tokens": tokens}, cache, lengths)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # greedy
+            return next_tok, cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+
+    # -- host scheduler --------------------------------------------------------
+    def load(self, params) -> None:
+        self.params = params
+        self.cache = self.model.init_cache(self.n_slots, self.max_len)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slot(self, slot: int, req: Request) -> None:
+        """Prefill one request into `slot` (single-request batch), splice in."""
+        prompt = req.prompt[None, :]  # [1, S]
+        cache1 = self.model.init_cache(1, self.max_len)
+        logits, cache1 = self.model.prefill(self.params, {"inputs": prompt}, cache1)
+
+        def splice(c, c1, axes):
+            ax = list(axes).index("batch")
+            row = jnp.take(c1, 0, axis=ax).astype(c.dtype)
+            return jax.lax.dynamic_update_index_in_dim(c, row, slot, ax)
+
+        # specs leaves are axes-tuples; flatten both trees in lockstep
+        is_axes = lambda v: isinstance(v, tuple) and all(
+            a is None or isinstance(a, str) for a in v
+        )
+        leaves, treedef = jax.tree_util.tree_flatten(self.cache)
+        leaves1 = jax.tree_util.tree_leaves(cache1)
+        spec_leaves = jax.tree_util.tree_leaves(self.specs, is_leaf=is_axes)
+        assert len(leaves) == len(spec_leaves) == len(leaves1)
+        self.cache = jax.tree_util.tree_unflatten(
+            treedef, [splice(c, c1, s) for c, c1, s in zip(leaves, leaves1, spec_leaves)]
+        )
+        first = int(jnp.argmax(logits[0]))
+        self.slot_req[slot] = req
+        self.slot_done[slot] = [first]
+        self.slot_budget[slot] = req.max_new_tokens - 1
+        self.lengths = self.lengths.at[slot].set(req.prompt.shape[0])
+
+    def _retire(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        if req is not None:
+            self.completed.append(
+                Completion(req.uid, self.slot_done[slot], int(req.prompt.shape[0]))
+            )
+        self.slot_req[slot] = None
+        self.slot_done[slot] = []
+        self.slot_budget[slot] = 0
+
+    def step(self) -> int:
+        """One scheduler tick: refill free slots, decode once. Returns #active."""
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.queue:
+                self._fill_slot(slot, self.queue.pop(0))
+        active = [s for s in range(self.n_slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        last = jnp.array(
+            [[self.slot_done[s][-1] if self.slot_req[s] else 0] for s in range(self.n_slots)],
+            jnp.int32,
+        )
+        next_tok, self.cache = self._decode(self.params, self.cache, last, self.lengths)
+        self.decode_calls += 1
+        self.lengths = self.lengths + jnp.array(
+            [1 if self.slot_req[s] else 0 for s in range(self.n_slots)], jnp.int32
+        )
+        for s in active:
+            tok = int(next_tok[s])
+            self.slot_done[s].append(tok)
+            self.slot_budget[s] -= 1
+            if tok == self.eos_id or self.slot_budget[s] <= 0 or int(self.lengths[s]) >= self.max_len - 1:
+                self._retire(s)
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> list[Completion]:
+        ticks = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.completed

@@ -1,0 +1,147 @@
+"""Compute microbenchmark (paper §3.4.1, Figs. 4-5).
+
+dtype x op arithmetic throughput on the VPU (elementwise) and MXU (matmul),
+plus the paper's string operations mapped to fixed-width byte tensors
+(uint8 [n, width]): cmp (lexicographic compare), cat (concatenate), xfrm
+(byte-wise transform — the strxfrm analogue).
+
+To "rule out the effect of cache and main memory" as the paper does, the
+arithmetic kernel iterates K dependent ops over a register-resident value
+inside jax.lax.fori_loop, so steady-state throughput is ALU-bound, not
+load/store-bound: ops/s = n_elements * K / time.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import Samples
+from repro.core.registry import register
+from repro.core.task import Task, TaskContext
+from repro.core.timing import measure
+
+_DTYPES = {
+    "int8": jnp.int8,
+    "int32": jnp.int32,
+    "bfloat16": jnp.bfloat16,
+    "float32": jnp.float32,
+}
+
+_VEC = 1 << 16  # elements in flight (vector lanes' worth)
+_CHAIN = 256  # dependent ops per element per iteration
+
+
+def _arith_fn(op: str, dtype):
+    one = jnp.asarray(3, dtype) if jnp.issubdtype(dtype, jnp.integer) else jnp.asarray(1.0009, dtype)
+
+    def body(_, x):
+        if op == "add":
+            return x + one
+        if op == "sub":
+            return x - one
+        if op == "mul":
+            return x * one
+        if op == "div":
+            if jnp.issubdtype(dtype, jnp.integer):
+                return x // one
+            return x / one
+        raise ValueError(op)
+
+    @jax.jit
+    def run(x):
+        return jax.lax.fori_loop(0, _CHAIN, body, x)
+
+    return run
+
+
+def _matmul_fn(dtype, n: int = 512):
+    @jax.jit
+    def run(a, b):
+        return a @ b
+
+    return run
+
+
+@register
+class ComputeTask(Task):
+    name = "compute"
+    param_space = {
+        "data_type": list(_DTYPES),
+        "operation": ["add", "sub", "mul", "div", "matmul"],
+    }
+    default_metrics = ("ops_per_s",)
+
+    def prepare(self, ctx: TaskContext) -> None:
+        key = jax.random.PRNGKey(0)
+        ctx.scratch["f32"] = jax.random.uniform(key, (_VEC,), jnp.float32, 1.0, 2.0)
+
+    def run(self, ctx: TaskContext, params: dict[str, Any]) -> Samples:
+        dtype = _DTYPES[params.get("data_type", "float32")]
+        op = params.get("operation", "add")
+        if op == "matmul":
+            n = 512
+            key = jax.random.PRNGKey(2)
+            a = jax.random.uniform(key, (n, n), jnp.float32, 1.0, 2.0).astype(dtype)
+            b = a.T
+            fn = _matmul_fn(dtype, n)
+            times = measure(fn, a, b, iters=ctx.iters, warmup=ctx.warmup)
+            return Samples(times_s=times, ops_per_iter=2 * n**3)
+        x = ctx.scratch["f32"].astype(dtype)
+        fn = _arith_fn(op, dtype)
+        times = measure(fn, x, iters=ctx.iters, warmup=ctx.warmup)
+        return Samples(times_s=times, ops_per_iter=_VEC * _CHAIN)
+
+
+# ---------------------------------------------------------------------------
+_STR_WIDTHS = {"str10": 10, "str64": 64, "str256": 256, "str1024": 1024}
+_N_STRINGS = 1 << 14
+
+
+@register
+class StringTask(Task):
+    name = "strings"
+    param_space = {
+        "width": list(_STR_WIDTHS),
+        "operation": ["cmp", "cat", "xfrm"],
+    }
+    default_metrics = ("ops_per_s",)
+
+    def prepare(self, ctx: TaskContext) -> None:
+        key = jax.random.PRNGKey(1)
+        for name, w in _STR_WIDTHS.items():
+            k1, k2, key = jax.random.split(key, 3)
+            ctx.scratch[name] = (
+                jax.random.randint(k1, (_N_STRINGS, w), 32, 127, jnp.uint8),
+                jax.random.randint(k2, (_N_STRINGS, w), 32, 127, jnp.uint8),
+            )
+
+    def run(self, ctx: TaskContext, params: dict[str, Any]) -> Samples:
+        w = params.get("width", "str64")
+        op = params.get("operation", "cmp")
+        a, b = ctx.scratch[w]
+
+        if op == "cmp":
+            @jax.jit
+            def fn(a, b):
+                # lexicographic: first differing byte decides
+                diff = (a.astype(jnp.int16) - b.astype(jnp.int16))
+                idx = jnp.argmax(diff != 0, axis=1)
+                return jnp.take_along_axis(diff, idx[:, None], axis=1)[:, 0]
+        elif op == "cat":
+            @jax.jit
+            def fn(a, b):
+                return jnp.concatenate([a, b], axis=1)
+        else:  # xfrm: byte-wise case-fold + weighting (strxfrm-like transform)
+            @jax.jit
+            def fn(a, b):
+                lower = jnp.where((a >= 65) & (a <= 90), a + 32, a)
+                return (lower.astype(jnp.uint16) * 31 + 7).astype(jnp.uint8)
+
+        times = measure(fn, a, b, iters=ctx.iters, warmup=ctx.warmup)
+        return Samples(
+            times_s=times,
+            ops_per_iter=_N_STRINGS,
+            bytes_per_iter=float(a.size + b.size),
+        )

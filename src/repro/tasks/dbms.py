@@ -1,0 +1,118 @@
+"""Full-system task (paper §3.6, Fig. 15): the mini columnar engine runs
+TPC-H-pattern queries end-to-end.
+
+Execution modes mirror the paper exactly:
+  cold — includes compilation (the paper's cold run pays disk I/O; ours
+         pays XLA compile + first-touch staging, the TPU-pod equivalent);
+  hot  — steady-state, executable and data resident.
+
+Params: scale x query x mode. Metric: query latency (avg/p99) and rows/s.
+A second workload axis runs the LM train/serve step of any configured
+architecture as the "full system" (the paper's DBMS stands in for whole-
+application offload; ours is the end-to-end model step) — see param `app`.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import Samples
+from repro.core.registry import register
+from repro.core.task import Task, TaskContext
+from repro.core.timing import block, measure
+from repro.engine import datagen, queries
+
+_SCALES = {"0.001": 6_000, "0.01": 60_000, "0.1": 600_000}
+
+
+@register
+class DBMSTask(Task):
+    name = "dbms"
+    param_space = {
+        "scale": list(_SCALES),
+        "query": ["q1", "q6", "q12"],
+        "mode": ["cold", "hot"],
+    }
+    default_metrics = ("avg_latency_us", "p99_latency_us", "items_per_s")
+
+    def prepare(self, ctx: TaskContext) -> None:
+        key = jax.random.PRNGKey(3)
+        for name, rows in _SCALES.items():
+            ctx.scratch[f"li_{name}"] = datagen.lineitem(key, rows=rows)
+            ctx.scratch[f"od_{name}"] = datagen.orders(key, rows=max(rows // 4, 256))
+
+    def run(self, ctx: TaskContext, params: dict[str, Any]) -> Samples:
+        scale = params.get("scale", "0.01")
+        qname = params.get("query", "q6")
+        mode = params.get("mode", "hot")
+        li = ctx.scratch[f"li_{scale}"]
+        od = ctx.scratch[f"od_{scale}"]
+        qfn = queries.QUERIES[qname]
+
+        def call(f):
+            return f(li, od) if qname == "q12" else f(li)
+
+        if mode == "cold":
+            # fresh jit each iteration: compile + execute (the paper's cold run)
+            import time
+
+            times = []
+            for _ in range(max(2, ctx.iters // 2)):
+                f = jax.jit(qfn)
+                t0 = time.perf_counter()
+                block(call(f))
+                times.append(time.perf_counter() - t0)
+                f.clear_cache()
+        else:
+            f = jax.jit(qfn)
+            times = measure(lambda: call(f), iters=ctx.iters, warmup=ctx.warmup)
+
+        return Samples(times_s=times, items_per_iter=float(li.num_rows))
+
+
+@register
+class AppStepTask(Task):
+    """LM train/serve step as the end-to-end application (reduced config)."""
+
+    name = "app_step"
+    param_space = {
+        "arch": ["olmo-1b", "mamba2-2.7b", "kimi-k2-1t-a32b"],
+        "kind": ["train", "decode"],
+        "mode": ["cold", "hot"],
+    }
+    default_metrics = ("avg_latency_us", "items_per_s")
+
+    def run(self, ctx: TaskContext, params: dict[str, Any]) -> Samples:
+        from repro.configs.base import ShapeCell, get_arch, tiny
+        from repro.models.model import Model, batch_like, input_specs
+
+        cfg = tiny(get_arch(params.get("arch", "olmo-1b")))
+        kind = params.get("kind", "train")
+        model = Model(cfg)
+        pkey = jax.random.PRNGKey(0)
+        mparams = model.init(pkey)
+        if kind == "train":
+            cell = ShapeCell("t", 64, 2, "train")
+            batch = batch_like(input_specs(cfg, cell))
+            fn = jax.jit(lambda p, b: model.loss(p, b)[0])
+            args = (mparams, batch)
+            items = 2 * 64
+        else:
+            cell = ShapeCell("d", 64, 2, "decode")
+            cache = model.init_cache(2, 64)
+            batch = batch_like(input_specs(cfg, cell))
+            fn = jax.jit(lambda p, b, c: model.decode(p, b, c, jnp.int32(8))[0])
+            args = (mparams, batch, cache)
+            items = 2
+
+        if params.get("mode", "hot") == "cold":
+            import time
+
+            t0 = time.perf_counter()
+            block(fn(*args))
+            times = [time.perf_counter() - t0]
+        else:
+            times = measure(fn, *args, iters=ctx.iters, warmup=ctx.warmup)
+        return Samples(times_s=times, items_per_iter=float(items))

@@ -1,0 +1,75 @@
+"""Memory microbenchmark (paper §3.4.2, Figs. 7-8).
+
+HBM access throughput/bandwidth: object size x pattern x op x lanes.
+  sequential read  — full-buffer reduction (streams at HBM bandwidth)
+  random read      — gather of pointer-size (4 B) elements at random indices
+  sequential write — full-buffer fill (iota + scale, no read traffic)
+  random write     — scatter of elements to random indices
+`lanes` maps the paper's #threads to parallel access streams (a batched
+gather issues `lanes` independent streams per iteration).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import Samples
+from repro.core.registry import register
+from repro.core.task import Task, TaskContext
+from repro.core.timing import measure
+
+_SIZES = {"16KB": 1 << 12, "4MB": 1 << 20, "1GB": 1 << 28}  # element counts (f32)
+_ACCESSES = 1 << 16  # random accesses per lane per iteration
+
+
+@register
+class MemoryTask(Task):
+    name = "memory"
+    param_space = {
+        "object_size": list(_SIZES),
+        "pattern": ["sequential", "random"],
+        "operation": ["read", "write"],
+        "lanes": [1, 4, 16],
+    }
+    default_metrics = ("ops_per_s", "bandwidth_gb_s")
+
+    def prepare(self, ctx: TaskContext) -> None:
+        # allocate largest buffer once; smaller sizes are views
+        ctx.scratch["buf"] = jnp.arange(_SIZES["1GB"], dtype=jnp.float32)
+
+    def run(self, ctx: TaskContext, params: dict[str, Any]) -> Samples:
+        n = _SIZES[params.get("object_size", "4MB")]
+        pattern = params.get("pattern", "sequential")
+        op = params.get("operation", "read")
+        lanes = int(params.get("lanes", 1))
+        buf = jax.lax.slice(ctx.scratch["buf"], (0,), (n,))
+        key = jax.random.PRNGKey(42)
+        idx = jax.random.randint(key, (lanes, _ACCESSES), 0, n, jnp.int32)
+
+        if pattern == "sequential" and op == "read":
+            fn = jax.jit(lambda b: jnp.sum(b, dtype=jnp.float32))
+            args = (buf,)
+            ops = n
+            byts = 4 * n
+        elif pattern == "sequential" and op == "write":
+            fn = jax.jit(lambda s: jnp.full((n,), s, jnp.float32))
+            args = (jnp.float32(1.5),)
+            ops = n
+            byts = 4 * n
+        elif pattern == "random" and op == "read":
+            fn = jax.jit(lambda b, i: jnp.sum(jnp.take(b, i, axis=0), axis=1))
+            args = (buf, idx)
+            ops = lanes * _ACCESSES
+            byts = 4 * ops
+        else:  # random write
+            vals = jnp.ones((lanes * _ACCESSES,), jnp.float32)
+            flat = idx.reshape(-1)
+            fn = jax.jit(lambda b, i, v: b.at[i].set(v, mode="drop"))
+            args = (buf, flat, vals)
+            ops = lanes * _ACCESSES
+            byts = 4 * ops
+
+        times = measure(fn, *args, iters=ctx.iters, warmup=ctx.warmup)
+        return Samples(times_s=times, ops_per_iter=float(ops), bytes_per_iter=float(byts))

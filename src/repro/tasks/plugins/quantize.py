@@ -1,0 +1,69 @@
+"""Quantization plugin — the DEFLATE compression analogue (paper Fig. 6a/6b).
+
+Data systems compress to cut storage/wire bytes; on TPU the equivalent
+data-path transform is int8 quantization (4x size cut for f32, 2x for
+bf16). Tasks: quantize (compress), dequantize (decompress), roundtrip.
+Like the paper's engines, throughput is measured across payload sizes to
+expose fixed overhead vs asymptotic bandwidth; the "ratio" metric reports
+the size reduction (the compression-ratio analogue).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.metrics import Samples
+from repro.core.registry import register
+from repro.core.task import Task, TaskContext
+from repro.core.timing import measure
+
+_SIZES = {"64KB": 1 << 14, "1MB": 1 << 18, "16MB": 1 << 22, "256MB": 1 << 26}  # f32 counts
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-block (1024) absmax int8 quantization."""
+    blocks = x.reshape(-1, 1024)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).reshape(-1)
+
+
+@register
+class QuantizeTask(Task):
+    name = "quantize"
+    param_space = {
+        "operation": ["quantize", "dequantize", "roundtrip"],
+        "payload": list(_SIZES),
+    }
+    default_metrics = ("bandwidth_gb_s", "avg_latency_us")
+
+    def run(self, ctx: TaskContext, params: dict[str, Any]) -> Samples:
+        n = _SIZES[params.get("payload", "1MB")]
+        op = params.get("operation", "roundtrip")
+        key = jax.random.PRNGKey(5)
+        x = jax.random.normal(key, (n,), jnp.float32)
+
+        if op == "quantize":
+            fn = jax.jit(quantize)
+            args = (x,)
+        elif op == "dequantize":
+            q, s = jax.jit(quantize)(x)
+            fn = jax.jit(dequantize)
+            args = (q, s)
+        else:
+            fn = jax.jit(lambda v: dequantize(*quantize(v)))
+            args = (x,)
+
+        times = measure(fn, *args, iters=ctx.iters, warmup=ctx.warmup)
+        return Samples(
+            times_s=times,
+            bytes_per_iter=4.0 * n,
+            ops_per_iter=float(n),
+            extra={"ratio": 4.0 * n / (n + 4.0 * (n // 1024))},
+        )

@@ -1,0 +1,92 @@
+"""Storage microbenchmark (paper §3.4.3, Figs. 9-10).
+
+The TPU-pod analogue of DPU-local disks is the host<->device staging path
+plus checkpoint I/O:
+  h2d / d2h    — device_put / device_get of `access_size` buffers,
+                 `depth` transfers in flight (JAX dispatch is async, so
+                 depth>1 genuinely pipelines);
+  ckpt_write / ckpt_read — sharded checkpoint save/restore roundtrip
+                 (the data path fault tolerance actually exercises).
+Metrics: bandwidth + latency percentiles, as in the paper's fio-style tool.
+"""
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+from repro.core.metrics import Samples
+from repro.core.registry import register
+from repro.core.task import Task, TaskContext
+from repro.core.timing import measure
+
+_SIZES = {"8KB": 1 << 13, "256KB": 1 << 18, "4MB": 1 << 22, "64MB": 1 << 26}  # bytes
+
+
+@register
+class StorageTask(Task):
+    name = "storage"
+    param_space = {
+        "io_type": ["h2d", "d2h", "ckpt_write", "ckpt_read"],
+        "access_size": list(_SIZES),
+        "depth": [1, 4, 16],
+    }
+    default_metrics = ("bandwidth_gb_s", "avg_latency_us", "p99_latency_us")
+
+    def prepare(self, ctx: TaskContext) -> None:
+        ctx.scratch["tmp"] = tempfile.mkdtemp(prefix="dpbento_storage_")
+
+    def clean(self, ctx: TaskContext) -> None:
+        import shutil
+
+        tmp = ctx.scratch.get("tmp")
+        if tmp:
+            shutil.rmtree(tmp, ignore_errors=True)
+        super().clean(ctx)
+
+    def run(self, ctx: TaskContext, params: dict[str, Any]) -> Samples:
+        nbytes = _SIZES[params.get("access_size", "4MB")]
+        depth = int(params.get("depth", 1))
+        io = params.get("io_type", "h2d")
+        n = nbytes // 4
+
+        if io == "h2d":
+            host = [np.random.default_rng(i).random(n, np.float32) for i in range(depth)]
+
+            def fn():
+                return [jax.device_put(h) for h in host]
+
+            times = measure(fn, iters=ctx.iters, warmup=ctx.warmup)
+        elif io == "d2h":
+            dev = [jnp.arange(n, dtype=jnp.float32) + i for i in range(depth)]
+
+            def fn():
+                return [np.asarray(jax.device_get(d)) for d in dev]
+
+            times = measure(fn, iters=ctx.iters, warmup=ctx.warmup)
+        elif io == "ckpt_write":
+            tree = {f"b{i}": jnp.arange(n, dtype=jnp.float32) for i in range(depth)}
+            d = Path(ctx.scratch["tmp"]) / f"w{nbytes}_{depth}"
+
+            def fn():
+                ckpt_lib.save(d, 0, tree, keep=1)
+
+            times = measure(fn, iters=ctx.iters, warmup=1)
+        else:  # ckpt_read
+            tree = {f"b{i}": jnp.arange(n, dtype=jnp.float32) for i in range(depth)}
+            d = Path(ctx.scratch["tmp"]) / f"r{nbytes}_{depth}"
+            ckpt_lib.save(d, 0, tree, keep=1)
+            like = jax.eval_shape(lambda: tree)
+
+            def fn():
+                return ckpt_lib.restore(d, like=like)
+
+            times = measure(fn, iters=ctx.iters, warmup=1)
+
+        total = float(nbytes * depth)
+        return Samples(times_s=times, bytes_per_iter=total, ops_per_iter=depth)

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the real device set (1 CPU device) — the dry-run alone forces
+# 512 host devices, in its own process. Keep x64 off (TPU parity).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

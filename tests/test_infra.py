@@ -1,0 +1,168 @@
+"""Infrastructure units: roofline HLO parsing, data pipeline, optimizers,
+schedules, mesh rules / ZeRO-1 spec assignment."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_arch, tiny
+from repro.data.pipeline import DataConfig, SyntheticLM, for_model
+from repro.launch import roofline as rf
+from repro.optim import make_optimizer, make_schedule
+
+
+# -- roofline HLO parsing -------------------------------------------------------
+HLO_SAMPLE = """
+  %ag = f32[64,256] all-gather(f32[4,256] %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = bf16[1024] all-reduce(bf16[1024] %y), replica_groups=[16,16]<=[256], to_apply=%add
+  %rs = f32[128] reduce-scatter(f32[2048] %z), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %cp = u8[512] collective-permute(u8[512] %w), source_target_pairs={{0,1}}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    stats = rf.parse_collectives(HLO_SAMPLE)
+    assert set(stats) == {"all-gather", "all-reduce", "reduce-scatter", "collective-permute"}
+    # all-gather result 64*256*4 bytes, ring wire = (n-1)/n * result
+    ag = stats["all-gather"]
+    assert ag.result_bytes == 64 * 256 * 4
+    np.testing.assert_allclose(ag.wire_bytes, 15 / 16 * 64 * 256 * 4)
+    # all-reduce bf16[1024] -> 2(n-1)/n * 2048 bytes with n=16 (iota groups)
+    ar = stats["all-reduce"]
+    assert ar.result_bytes == 2048
+    np.testing.assert_allclose(ar.wire_bytes, 2 * 15 / 16 * 2048)
+    # reduce-scatter result f32[128] -> wire (n-1)*result
+    rs = stats["reduce-scatter"]
+    np.testing.assert_allclose(rs.wire_bytes, 15 * 128 * 4)
+    # permute moves exactly its buffer
+    np.testing.assert_allclose(stats["collective-permute"].wire_bytes, 512)
+
+
+def test_analyze_bottleneck_and_ratio():
+    cost = {"flops": 1e12, "bytes accessed": 1e9}
+    roof = rf.analyze(cost, HLO_SAMPLE, n_chips=256, model_flops_total=200e12)
+    assert roof.compute_s == pytest.approx(1e12 / rf.PEAK_FLOPS)
+    assert roof.memory_s == pytest.approx(1e9 / rf.HBM_BW)
+    assert roof.bottleneck == "compute"
+    assert roof.useful_flops_ratio == pytest.approx(200e12 / (1e12 * 256))
+
+
+def test_shape_bytes_tuple_shapes():
+    # tuple-shaped collective results sum every component
+    assert rf._shape_bytes("(f32[8], bf16[4])") == 8 * 4 + 4 * 2
+
+
+def test_model_flops_dense_vs_moe():
+    from repro.configs.base import SHAPES
+
+    dense = get_arch("granite-3-8b")
+    moe = get_arch("kimi-k2-1t-a32b")
+    cell = SHAPES["train_4k"]
+    toks = cell.global_batch * cell.seq_len
+    assert rf.model_flops(dense, cell) == pytest.approx(6.0 * dense.n_params() * toks)
+    assert rf.model_flops(moe, cell) == pytest.approx(6.0 * moe.n_active_params() * toks)
+    assert moe.n_active_params() < 0.1 * moe.n_params()  # 32B active of 1T
+
+
+# -- data pipeline ---------------------------------------------------------------
+def test_pipeline_deterministic_and_structured():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=4)
+    ds = SyntheticLM(cfg)
+    b1, b2 = ds.batch_at(3), ds.batch_at(3)
+    np.testing.assert_array_equal(np.asarray(b1["inputs"]), np.asarray(b2["inputs"]))
+    assert not np.array_equal(np.asarray(ds.batch_at(4)["inputs"]), np.asarray(b1["inputs"]))
+    # labels are the declared function of inputs (learnable structure)
+    t = np.asarray(b1["inputs"])
+    np.testing.assert_array_equal(
+        np.asarray(b1["labels"]), (cfg.struct_a * t + cfg.struct_b) % cfg.struct_mod
+    )
+
+
+def test_pipeline_matches_arch_contract():
+    cfg = get_arch("qwen2-vl-72b")  # mrope + embeddings stub? (embed_inputs False?)
+    ds = for_model(cfg, seq_len=16, global_batch=2)
+    batch = ds.batch_at(0)
+    assert set(batch) == {"inputs", "labels", "positions"}
+    if cfg.rope == "mrope":
+        assert batch["positions"].shape == (3, 2, 16)
+
+    enc = get_arch("seamless-m4t-medium")
+    ds2 = for_model(enc, seq_len=8, global_batch=2)
+    b2 = ds2.batch_at(0)
+    assert set(b2) == {"frames", "tgt_tokens", "labels"}
+    assert b2["frames"].shape == (2, 8, enc.d_model)
+
+
+# -- optimizers ------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_step_reduces_quadratic(name):
+    opt = make_optimizer(name)
+    params = {"w": jnp.full((4, 8), 2.0), "b": jnp.zeros((8,))}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum((p["b"] - 1.0) ** 2)
+
+    l0 = float(loss(params))
+    for i in range(20):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.update(g, state, params, 0.1)
+    assert float(loss(params)) < 0.5 * l0
+
+
+def test_adafactor_state_is_factored():
+    """Adafactor must NOT keep a full second-moment matrix for 2D params."""
+    opt = make_optimizer("adafactor")
+    params = {"w": jnp.zeros((64, 32))}
+    state = opt.init(params)
+    sizes = [int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(state)]
+    assert max(sizes) <= 64, f"factored state should be O(n+m), got {sizes}"
+
+
+def test_schedules():
+    s = make_schedule("warmup_cosine", peak_lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(s(0)) == pytest.approx(0.0, abs=1e-9)
+    assert float(s(10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(s(100)) < 2e-4
+    r = make_schedule("warmup_rsqrt", peak_lr=1e-3, warmup_steps=10)
+    assert float(r(40)) == pytest.approx(1e-3 * (10 / 40) ** 0.5, rel=1e-3)
+
+
+# -- mesh rules / ZeRO-1 ----------------------------------------------------------
+def test_zero1_spec_assignment_properties():
+    """ZeRO-1: every optimizer-state leaf with a free dim divisible by the
+    data-axis size gets sharded over data; already-data-sharded leaves are
+    left alone. Checked structurally (no 256-device mesh needed)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import Rules, zero1_specs
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    rules = Rules({"embed": None, "mlp": "model", "vocab": "model"})
+    logical = {"m": ("embed", "mlp"), "v": ("vocab", None)}
+    abstract = {
+        "m": jax.ShapeDtypeStruct((4096, 1024), jnp.float32),
+        "v": jax.ShapeDtypeStruct((50304, 64), jnp.float32),
+    }
+    specs = zero1_specs(logical, abstract, rules, FakeMesh())
+    # "m": embed dim free (None), 4096 % 16 == 0 -> data lands on dim 0
+    assert specs["m"] == P("data", "model")
+    # "v": vocab -> model on dim 0; dim 1 = 64 % 16 == 0 -> data on dim 1
+    assert specs["v"] == P("model", "data")
+
+
+@given(st.integers(1, 4096))
+@settings(max_examples=30, deadline=None)
+def test_padded_vocab_divisibility(v):
+    import dataclasses
+
+    cfg = dataclasses.replace(get_arch("olmo-1b"), vocab_size=v)
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= v
+    assert cfg.padded_vocab - v < 256

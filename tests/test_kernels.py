@@ -1,0 +1,169 @@
+"""Pallas kernel sweeps: every kernel vs its pure-jnp oracle across
+shapes/dtypes (interpret mode on CPU), plus algebraic property tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,dh,bq,bk",
+    [
+        (1, 128, 4, 4, 64, 128, 128),  # MHA single block
+        (2, 256, 8, 2, 64, 128, 128),  # GQA group 4
+        (1, 512, 4, 1, 128, 128, 256),  # MQA, rectangular blocks
+        (2, 256, 6, 2, 32, 64, 64),  # head_dim 32, 3-way groups
+    ],
+)
+def test_flash_attention_sweep(dtype, b, s, hq, hkv, dh, bq, bk):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), **_tol(dtype)
+    )
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=128)
+    exp = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,dh,bk,lens",
+    [
+        (2, 256, 8, 4, 64, 128, (100, 256)),
+        (1, 512, 4, 1, 128, 256, (1,)),  # single valid token
+        (3, 128, 6, 2, 32, 64, (128, 64, 17)),
+    ],
+)
+def test_decode_attention_sweep(dtype, b, s, hq, hkv, dh, bk, lens):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    kv_len = jnp.asarray(lens, jnp.int32)
+    out = ops.decode_attention(q, k, v, kv_len, block_k=bk)
+    exp = ref.decode_attention_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), **_tol(dtype)
+    )
+
+
+def test_decode_attention_ignores_tail():
+    """Cache contents past kv_len must not affect the output."""
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (1, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    kv_len = jnp.array([100], jnp.int32)
+    out1 = ops.decode_attention(q, k, v, kv_len, block_k=64)
+    k2 = k.at[:, 100:].set(jax.random.normal(ks[3], (1, 156, 2, 64)) * 50)
+    out2 = ops.decode_attention(q, k2, v, kv_len, block_k=64)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [(1, 128, 2, 16, 16, 128), (2, 256, 4, 32, 16, 128), (1, 256, 2, 64, 32, 256)],
+)
+def test_ssd_intra_sweep(b, s, h, p, n, chunk):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    bm = jax.random.normal(ks[1], (b, s, n), jnp.float32) * 0.5
+    cm = jax.random.normal(ks[2], (b, s, n), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h), jnp.float32))
+    a = -jnp.exp(jnp.linspace(0.0, 1.5, h))
+    y, st_ = ops.ssd_intra(x, bm, cm, dt, a, chunk=chunk)
+    ye, ste = ops.ssd_intra(x, bm, cm, dt, a, chunk=chunk, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ye), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(ste), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_equals_naive_recurrence():
+    """The model's full chunked SSD path == a naive O(S) recurrent scan."""
+    from repro.models.ssm import ssd_chunked
+    from repro.configs.base import get_arch, tiny
+
+    cfg = tiny(get_arch("mamba2-2.7b"), ssm_chunk=8)
+    b, s, h, p, n = 2, 32, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    bm = jax.random.normal(ks[1], (b, s, n), jnp.float32) * 0.3
+    cm = jax.random.normal(ks[2], (b, s, n), jnp.float32) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[3], (b, s, h), jnp.float32))
+    a = -jnp.exp(jnp.linspace(0.0, 1.0, h))
+    y_chunk, final = ssd_chunked(cfg, x, bm, cm, dt, a)
+
+    # naive recurrence
+    def step(state, i):
+        decay = jnp.exp(dt[:, i] * a)  # [B,H]
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, i], bm[:, i], x[:, i])
+        state = decay[:, :, None, None] * state + upd
+        y = jnp.einsum("bn,bhpn->bhp", cm[:, i], state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n))
+    final_naive, ys = jax.lax.scan(step, state0, jnp.arange(s))
+    y_naive = jnp.moveaxis(ys, 0, 1)  # [B,S,H,P]
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(final_naive), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "e,c,d,f,bc,bf,bd",
+    [(2, 128, 128, 128, 128, 128, 128), (4, 256, 512, 256, 128, 128, 256),
+     (8, 128, 256, 384, 64, 128, 128)],
+)
+def test_gmm_sweep(dtype, e, c, d, f, bc, bf, bd):
+    ks = jax.random.split(KEY, 2)
+    lhs = jax.random.normal(ks[0], (e, c, d), dtype)
+    rhs = jax.random.normal(ks[1], (e, d, f), dtype)
+    out = ops.gmm(lhs, rhs, block_c=bc, block_f=bf, block_d=bd)
+    exp = ref.gmm_ref(lhs, rhs)
+    tol = dict(rtol=3e-2, atol=0.5) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(exp, np.float32), **tol)
+
+
+# ---------------------------------------------------------------------------
+@given(
+    n=st.sampled_from([4096, 8192, 20000]),
+    lo=st.floats(0.0, 0.5),
+    width=st.floats(0.01, 0.5),
+)
+@settings(max_examples=10, deadline=None)
+def test_filter_agg_property(n, lo, width):
+    """Kernel == oracle == plain numpy for random predicates (incl. padding)."""
+    cols = jax.random.uniform(jax.random.fold_in(KEY, n), (4, n), jnp.float32)
+    hi = lo + width
+    out = ops.filter_agg(cols, lo, hi, 0.2, 0.9, block_n=4096)
+    exp = ref.filter_agg_ref(cols, lo, hi, 0.2, 0.9)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-4, atol=1e-4)
+    c = np.asarray(cols)
+    mask = (c[0] >= lo) & (c[0] < hi) & (c[1] >= 0.2) & (c[1] < 0.9)
+    assert int(out[1]) == int(mask.sum())

@@ -1,0 +1,215 @@
+"""Per-architecture smoke tests + model invariants.
+
+Every assigned arch instantiates a REDUCED same-family config, runs one
+forward/train step on CPU, asserts output shapes and no NaNs; decode is
+checked against the teacher-forced forward (exact causality)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, ShapeCell, all_archs, cells_for, get_arch, tiny
+from repro.models import transformer as tfm
+from repro.models.model import Model, batch_like, input_specs
+
+ARCHS = all_archs()
+
+
+def _is_axes(v):
+    return isinstance(v, tuple) and all(a is None or isinstance(a, str) for a in v)
+
+
+@pytest.fixture(scope="module")
+def tiny_models():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = tiny(get_arch(arch))
+            m = Model(cfg)
+            cache[arch] = (cfg, m, m.init(jax.random.PRNGKey(0)))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch, tiny_models):
+    cfg, m, params = tiny_models(arch)
+    batch = batch_like(input_specs(cfg, ShapeCell("t", 32, 2, "train")))
+    loss, metrics = m.loss(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), (arch, loss)
+    grads = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    gn = sum(jnp.sum(jnp.abs(g)) for g in jax.tree_util.tree_leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_smoke(arch, tiny_models):
+    cfg, m, params = tiny_models(arch)
+    cache = m.init_cache(2, 64)
+    pb = batch_like(input_specs(cfg, ShapeCell("p", 32, 2, "prefill")))
+    logits, cache = m.prefill(params, pb, cache)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert jnp.all(jnp.isfinite(logits)), arch
+    db = batch_like(input_specs(cfg, ShapeCell("d", 32, 2, "decode")))
+    logits2, cache = m.decode(params, db, cache, jnp.int32(32))
+    assert logits2.shape == (2, cfg.padded_vocab)
+    assert jnp.all(jnp.isfinite(logits2)), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_spec_trees_match(arch, tiny_models):
+    cfg, m, _ = tiny_models(arch)
+    params = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    specs = m.param_specs()
+    assert jax.tree_util.tree_structure(params) == jax.tree_util.tree_structure(
+        specs, is_leaf=_is_axes
+    ), arch
+    for p, s in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(specs, is_leaf=_is_axes)
+    ):
+        assert len(s) == len(p.shape), (arch, p.shape, s)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_spec_trees_match(arch, tiny_models):
+    cfg, m, _ = tiny_models(arch)
+    cache = m.init_cache(2, 16, abstract=True)
+    specs = m.cache_specs()
+    leaves_c = jax.tree_util.tree_leaves(
+        cache, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )
+    leaves_s = jax.tree_util.tree_leaves(specs, is_leaf=_is_axes)
+    assert len(leaves_c) == len(leaves_s), arch
+    for c, s in zip(leaves_c, leaves_s):
+        assert len(s) == len(c.shape), (arch, c.shape, s)
+        assert "batch" in s, (arch, s)
+
+
+def test_decode_matches_forward_decoder_only():
+    """Greedy decode equals teacher-forced forward (causality + cache)."""
+    for arch in ("granite-3-8b", "mamba2-2.7b", "jamba-v0.1-52b", "kimi-k2-1t-a32b"):
+        cfg = tiny(get_arch(arch))
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(1))
+        toks = jax.random.randint(jax.random.PRNGKey(2), (2, 9), 0, cfg.vocab_size)
+        pos = jnp.broadcast_to(jnp.arange(9)[None], (2, 9))
+        if cfg.rope == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, 2, 9))
+        full, _, _ = tfm.forward(cfg, params, toks, pos)
+        cache = m.init_cache(2, 16)
+        _, cache = m.prefill(params, {"inputs": toks[:, :8]}, cache)
+        lg, _ = m.decode(params, {"tokens": toks[:, 8:9]}, cache, jnp.int32(8))
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full[:, 8]), rtol=5e-2, atol=5e-2,
+        )
+
+
+def test_per_slot_decode_index():
+    """Vector cache_index (continuous batching): each slot decodes at its own
+    position and matches the scalar-index path."""
+    cfg = tiny(get_arch("granite-3-8b"))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 6), 0, cfg.vocab_size)
+    cache = m.init_cache(2, 16)
+    _, cache = m.prefill(params, {"inputs": toks}, cache)
+    # scalar path
+    lg_s, _ = m.decode(params, {"tokens": toks[:, :1]}, cache, jnp.int32(6))
+    # vector path, equal indices
+    lg_v, _ = m.decode(params, {"tokens": toks[:, :1]}, cache, jnp.array([6, 6], jnp.int32))
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_v), rtol=1e-5, atol=1e-5)
+
+
+def test_causality_future_tokens_do_not_matter():
+    cfg = tiny(get_arch("olmo-1b"))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab_size)
+    t2 = t1.at[:, 8:].set((t1[:, 8:] + 7) % cfg.vocab_size)
+    pos = jnp.arange(12)[None]
+    l1, _, _ = tfm.forward(cfg, params, t1, pos)
+    l2, _, _ = tfm.forward(cfg, params, t2, pos)
+    np.testing.assert_allclose(
+        np.asarray(l1[:, :8]), np.asarray(l2[:, :8]), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_cells_for_applicability():
+    # full-attention archs skip long_500k; ssm/hybrid run it
+    assert "long_500k" not in cells_for(get_arch("granite-3-8b"))
+    assert "long_500k" not in cells_for(get_arch("qwen2-vl-72b"))
+    assert "long_500k" in cells_for(get_arch("mamba2-2.7b"))
+    assert "long_500k" in cells_for(get_arch("jamba-v0.1-52b"))
+    total = sum(len(cells_for(get_arch(a))) for a in ARCHS)
+    assert total == 32  # 10 archs x 3 + 2 long-context
+
+
+def test_n_params_against_published():
+    published = {
+        "olmo-1b": 1.18e9, "granite-3-8b": 8.2e9, "internlm2-20b": 19.9e9,
+        "mistral-nemo-12b": 12.2e9, "grok-1-314b": 314e9, "kimi-k2-1t-a32b": 1.04e12,
+        "jamba-v0.1-52b": 52e9, "mamba2-2.7b": 2.7e9, "qwen2-vl-72b": 72e9,
+    }
+    for arch, expect in published.items():
+        got = get_arch(arch).n_params()
+        assert 0.7 * expect < got < 1.35 * expect, (arch, got, expect)
+
+
+def test_moe_active_params():
+    kimi = get_arch("kimi-k2-1t-a32b")
+    active = kimi.n_active_params()
+    assert 2.0e10 < active < 4.5e10, active  # ~32B active
+    dense = get_arch("granite-3-8b")
+    assert dense.n_active_params() == dense.n_params()
+
+
+def test_moe_grouped_dispatch_matches_flat():
+    """moe_groups>1 must not change routed outputs when capacity is ample
+    (per-group routing only changes drop behaviour, which ample cap removes)."""
+    import dataclasses
+
+    from repro.models import moe
+
+    cfg = dataclasses.replace(tiny(get_arch("kimi-k2-1t-a32b")), capacity_factor=8.0)
+    p = moe.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+    y1, _ = moe.apply_moe(cfg, p, x)
+    y2, _ = moe.apply_moe(dataclasses.replace(cfg, moe_groups=2), p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-5, atol=2e-5)
+
+
+def test_cross_entropy_gradient_is_softmax_minus_onehot():
+    """Regression: stop_gradient must cover BOTH uses of the max-shift, or
+    an extra onehot(argmax) leaks into every training gradient."""
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(key, (2, 4, 8))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (2, 4), 0, 8)
+
+    g = jax.grad(lambda lg: tfm.softmax_cross_entropy(lg, labels))(logits)
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, 8)
+    expect = (p - onehot) / (2 * 4)  # mean over tokens
+    np.testing.assert_allclose(np.asarray(g), np.asarray(expect), rtol=1e-5, atol=1e-6)
+
+
+def test_chunked_ce_matches_dense():
+    """ce_vocab_chunk path == dense path for loss and all parameter grads."""
+    import dataclasses
+
+    cfg = tiny(get_arch("olmo-1b"))
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = batch_like(input_specs(cfg, ShapeCell("t", 16, 2, "train")))
+    m2 = Model(dataclasses.replace(cfg, ce_vocab_chunk=64))
+    l1, _ = m.loss(params, batch)
+    l2, _ = m2.loss(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+    g1 = jax.grad(lambda p: m.loss(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: m2.loss(p, batch)[0])(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=1e-6)

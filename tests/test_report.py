@@ -1,0 +1,48 @@
+"""Roofline report loader + shipped box files parse and validate."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core.box import Box
+from repro.core.registry import get as get_task
+from repro.launch.report import _CELL_ORDER, load_rows, to_csv, to_markdown
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_shipped_boxes_parse_and_validate():
+    box_files = sorted((REPO / "boxes").glob("*.json"))
+    assert box_files, "boxes/ should ship ready-to-run measurement boxes"
+    for bf in box_files:
+        box = Box.load(bf)
+        assert box.total_tests() > 0
+        for spec in box.tasks:
+            task = get_task(spec.task)  # raises on unknown task
+            task.validate_params(spec.params)  # raises on unknown param
+
+
+def test_report_loads_dryrun_results():
+    rows = load_rows(REPO / "results" / "dryrun", mesh="pod")
+    assert len(rows) >= 32  # full baseline table (+ perf variants)
+    base = [r for r in rows if r["profile"] == "base"]
+    assert len(base) == 32
+    for r in base:
+        assert r["bottleneck"] in ("compute", "memory", "collective")
+        assert r["mfu_bound"] >= 0
+        assert r["cell"] in _CELL_ORDER
+    md = to_markdown(base)
+    assert md.count("\n") == len(base) + 1  # header + separator + rows
+    csv = to_csv(base)
+    assert csv.splitlines()[0].startswith("arch,")
+
+
+def test_dryrun_jsons_have_roofline_terms():
+    sample = REPO / "results" / "dryrun" / "pod" / "olmo-1b" / "train_4k.json"
+    d = json.loads(sample.read_text())
+    r = d["roofline"]
+    assert r["compute_s"] > 0 and r["bytes_per_device"] > 0
+    assert d["n_chips"] == 256
+    assert "all-reduce" in r["collectives"] or "all-gather" in r["collectives"]

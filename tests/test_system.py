@@ -1,0 +1,173 @@
+"""End-to-end behaviour of the dpBento framework core: task abstraction,
+box expansion, runner workflow, plugins, metrics, reporting."""
+from __future__ import annotations
+
+import json
+import math
+import textwrap
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Box, Runner, Samples, TaskSpec, compute_metrics
+from repro.core import registry as reg
+from repro.core.report import merge_platform_reports, speedup_table, to_csv, to_markdown
+from repro.core.task import Task, TaskContext
+
+
+class _FakeTask(Task):
+    """Deterministic task recording its lifecycle (no jax involved)."""
+
+    name = "fake"
+    param_space = {"a": [1, 2], "b": ["x", "y", "z"]}
+    default_metrics = ("avg_latency_us", "ops_per_s")
+
+    def __init__(self):
+        self.events: list[str] = []
+
+    def prepare(self, ctx):
+        self.events.append("prepare")
+        ctx.scratch["ready"] = True
+
+    def run(self, ctx, params):
+        assert ctx.scratch.get("ready"), "run before prepare"
+        self.events.append(f"run:{params['a']}{params['b']}")
+        t = 1e-3 * params["a"]
+        return Samples(times_s=[t, t * 2], ops_per_iter=100.0)
+
+    def clean(self, ctx):
+        self.events.append("clean")
+        super().clean(ctx)
+
+
+@pytest.fixture()
+def fake_task():
+    t = _FakeTask()
+    reg._register_for_tests(t)
+    return t
+
+
+def test_box_cross_product(fake_task):
+    box = Box.from_dict(
+        {"name": "b", "tasks": [{"task": "fake", "params": {"a": [1, 2], "b": ["x", "y"]}}]}
+    )
+    assert box.total_tests() == 4
+    expanded = box.tasks[0].expand()
+    assert {(e["a"], e["b"]) for e in expanded} == {(1, "x"), (1, "y"), (2, "x"), (2, "y")}
+
+
+def test_runner_workflow_prepare_once(fake_task):
+    box = Box.from_dict(
+        {"name": "b", "tasks": [{"task": "fake", "params": {"a": [1, 2], "b": ["x"]}}]}
+    )
+    r = Runner()
+    res = r.run_box(box)
+    assert fake_task.events.count("prepare") == 1
+    assert len(res.results) == 2 and not res.errors
+    # second box reuses prepared state (paper: clean is explicit/deferred)
+    r.run_box(box)
+    assert fake_task.events.count("prepare") == 1
+    assert "clean" not in fake_task.events
+    r.clean("fake")
+    assert fake_task.events.count("clean") == 1
+
+
+def test_runner_reports_metrics(fake_task):
+    box = Box.from_dict(
+        {"name": "b", "tasks": [{"task": "fake", "params": {"a": [1], "b": ["x"]},
+                                 "metrics": ["p99_latency_us", "min_latency_us"]}]}
+    )
+    res = Runner().run_box(box)
+    row = res.rows[0]
+    assert row["task"] == "fake" and row["param:a"] == 1
+    assert row["min_latency_us"] == pytest.approx(1e3)
+    assert "p99_latency_us" in row
+    csv = res.csv()
+    assert "param:a" in csv.splitlines()[0]
+    md = res.markdown()
+    assert md.startswith("|")
+
+
+def test_runner_error_isolation(fake_task):
+    class _Boom(Task):
+        name = "boom"
+        param_space = {"z": [0, 1]}
+
+        def run(self, ctx, params):
+            if params["z"] == 1:
+                raise RuntimeError("kaput")
+            return Samples(times_s=[1e-3])
+
+    reg._register_for_tests(_Boom())
+    box = Box.from_dict(
+        {"name": "b", "tasks": [{"task": "boom", "params": {"z": [0, 1]}},
+                                {"task": "fake", "params": {"a": [1], "b": ["x"]}}]}
+    )
+    res = Runner().run_box(box)
+    assert len(res.errors) == 1 and "kaput" in res.errors[0]["error"]
+    assert any(r.task == "fake" for r in res.results)  # later tasks still ran
+
+
+def test_unknown_params_rejected(fake_task):
+    box = Box.from_dict({"name": "b", "tasks": [{"task": "fake", "params": {"nope": [1]}}]})
+    with pytest.raises(ValueError, match="unknown params"):
+        Runner().run_box(box)
+
+
+def test_directory_plugin(tmp_path, fake_task):
+    plug = tmp_path / "myplug"
+    plug.mkdir()
+    (plug / "task.json").write_text(json.dumps(
+        {"name": "myplug", "param_space": {"n": [1, 2]}, "metrics": ["ops_per_s"]}
+    ))
+    (plug / "run.py").write_text(textwrap.dedent("""
+        def main(ctx, params):
+            return {"times_s": [0.001 * params["n"]], "ops_per_iter": 50.0}
+    """))
+    task = reg.load_plugin_dir(plug)
+    assert task.name == "myplug"
+    box = Box.from_dict({"name": "b", "tasks": [{"task": "myplug", "params": {"n": [1, 2]}}]})
+    res = Runner().run_box(box)
+    assert not res.errors and len(res.results) == 2
+    assert res.results[0].metrics["ops_per_s"] == pytest.approx(50.0 / 0.001)
+
+
+def test_cross_platform_report():
+    rows_a = [{"task": "t", "param:x": 1, "ops_per_s": 100.0}]
+    rows_b = [{"task": "t", "param:x": 1, "ops_per_s": 400.0}]
+    merged = merge_platform_reports({"host": rows_a, "dpu": rows_b})
+    sp = speedup_table(merged, "ops_per_s", "host")
+    assert sp[0]["speedup:dpu"] == pytest.approx(4.0)
+    assert "platform" in to_csv(merged).splitlines()[0]
+
+
+# -- metrics properties ------------------------------------------------------
+@given(st.lists(st.floats(1e-6, 10.0), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_metric_bounds(times):
+    s = Samples(times_s=times, ops_per_iter=10.0, bytes_per_iter=100.0)
+    m = compute_metrics(s, ("avg_latency_us", "p50_latency_us", "p99_latency_us",
+                            "min_latency_us", "ops_per_s", "bandwidth_gb_s"))
+    assert m["min_latency_us"] <= m["avg_latency_us"] + 1e-9
+    assert m["min_latency_us"] <= m["p50_latency_us"] <= m["p99_latency_us"] + 1e-9
+    assert m["ops_per_s"] == pytest.approx(10.0 / min(times))
+    assert not math.isnan(m["bandwidth_gb_s"])
+
+
+@given(
+    st.dictionaries(
+        st.sampled_from(["a", "b", "c"]),
+        st.lists(st.integers(0, 3), min_size=1, max_size=3),
+        min_size=1,
+    )
+)
+@settings(max_examples=50, deadline=None)
+def test_box_expansion_counts(params):
+    spec = TaskSpec(task="fake", params=params)
+    expanded = spec.expand()
+    # expansion is the cross-product of the UNIQUE values per parameter
+    expect = 1
+    for v in params.values():
+        expect *= len(set(v))
+    assert len(expanded) == expect
+    assert len({tuple(sorted(e.items())) for e in expanded}) == expect
