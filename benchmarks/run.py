@@ -1,14 +1,21 @@
 """Benchmark orchestrator: run every paper-figure box through the framework.
 
 Usage:
-  PYTHONPATH=src python -m benchmarks.run                # all figures
-  PYTHONPATH=src python -m benchmarks.run --only fig13_pushdown fig15_dbms
-  PYTHONPATH=src python -m benchmarks.run --iters 5 --warmup 2
-  PYTHONPATH=src python -m benchmarks.run --list
+  python -m benchmarks.run                              # all figures
+  python -m benchmarks.run --only fig13_pushdown fig15_dbms
+  python -m benchmarks.run --iters 5 --warmup 2
+  python -m benchmarks.run --workers 4                  # concurrent tests
+  python -m benchmarks.run --platforms cpu-host dpu-sim # platform sweep
+  python -m benchmarks.run --no-cache                   # force remeasure
+  python -m benchmarks.run --list
 
-Per figure: expand the box (paper §3.3), execute, write
-results/bench/<figure>.csv, and echo `figure,task,params...,metric,value`
-lines to stdout — the combined CSV consumed by bench_output.txt.
+Per figure: expand the box (paper §3.3), execute through the sweep
+executor, write results/bench/<figure>.csv, and echo
+`figure,task,params...,metric,value` lines to stdout — the combined CSV
+consumed by bench_output.txt.  A persistent result cache (default
+results/bench/cache.json) makes re-runs incremental: already-measured
+(task, params, platform, iters) points are skipped and reported as
+`cached=N` in the per-figure/total summary lines.
 """
 from __future__ import annotations
 
@@ -22,14 +29,14 @@ from benchmarks.figures import FIGURES
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
 
 
-def run_figure(fig: str, runner, out_dir: Path) -> tuple[list[dict], list[dict]]:
+def run_figure(fig: str, executor, out_dir: Path):
     from repro.core.box import Box
 
     box = Box.from_dict(FIGURES[fig])
-    res = runner.run_box(box)
+    res = executor.run_box(box)
     out_dir.mkdir(parents=True, exist_ok=True)
     (out_dir / f"{fig}.csv").write_text(res.csv())
-    return res.rows, res.errors
+    return res
 
 
 def main(argv=None) -> int:
@@ -37,6 +44,14 @@ def main(argv=None) -> int:
     p.add_argument("--only", nargs="*", default=None, help="figure ids to run")
     p.add_argument("--iters", type=int, default=3)
     p.add_argument("--warmup", type=int, default=1)
+    p.add_argument("--workers", type=int, default=1, help="concurrent test workers")
+    p.add_argument(
+        "--platforms", nargs="+", default=["cpu-host"],
+        help="execution platforms to sweep (e.g. cpu-host dpu-sim)",
+    )
+    p.add_argument("--pool", choices=("thread", "process"), default="thread")
+    p.add_argument("--no-cache", action="store_true", help="remeasure everything")
+    p.add_argument("--cache-file", default=None, help="cache path (default <out>/cache.json)")
     p.add_argument("--out", default=str(RESULTS))
     p.add_argument("--list", action="store_true")
     args = p.parse_args(argv)
@@ -56,32 +71,58 @@ def main(argv=None) -> int:
     if unknown:
         p.error(f"unknown figures {sorted(unknown)}; known: {sorted(FIGURES)}")
 
-    from repro.core.runner import Runner
+    from repro.core.cache import ResultCache
+    from repro.core.executor import SweepExecutor
+    from repro.core.platform import get_platform
 
-    runner = Runner(platform={"name": "cpu-host"}, iters=args.iters, warmup=args.warmup)
+    try:
+        for name in args.platforms:
+            get_platform(name)
+    except KeyError as e:
+        p.error(str(e.args[0]))
+
     out_dir = Path(args.out)
+    cache = None
+    if not args.no_cache:
+        cache = ResultCache(args.cache_file or out_dir / "cache.json")
+    executor = SweepExecutor(
+        platforms=args.platforms,
+        workers=args.workers,
+        iters=args.iters,
+        warmup=args.warmup,
+        cache=cache,
+        pool=args.pool,
+    )
     all_errors = []
+    total_cached = total_tests = 0
     print("figure,task,params,metric,value")
     t_start = time.time()
     for fig in figs:
         t0 = time.time()
-        rows, errors = run_figure(fig, runner, out_dir)
-        all_errors.extend({**e, "figure": fig} for e in errors)
-        for row in rows:
+        res = run_figure(fig, executor, out_dir)
+        all_errors.extend({**e, "figure": fig} for e in res.errors)
+        total_cached += res.stats.cached
+        total_tests += res.stats.total
+        for row in res.rows:
             task = row.get("task", "?")
-            params = ";".join(
+            prefix = ";".join(
                 f"{k[6:]}={row[k]}" for k in sorted(row) if k.startswith("param:")
             )
+            if "platform" in row:
+                prefix = f"platform={row['platform']};" + prefix
             for k, v in row.items():
-                if k == "task" or k.startswith("param:"):
+                if k in ("task", "platform") or k.startswith("param:"):
                     continue
-                print(f"{fig},{task},{params},{k},{v}")
+                print(f"{fig},{task},{prefix},{k},{v}")
         print(
-            f"# {fig}: {len(rows)} rows in {time.time() - t0:.1f}s "
-            f"({len(errors)} errors)",
+            f"# {fig}: {len(res.rows)} rows in {time.time() - t0:.1f}s "
+            f"({len(res.errors)} errors, cached={res.stats.cached}/{res.stats.total})",
             file=sys.stderr,
         )
-    print(f"# total {time.time() - t_start:.1f}s", file=sys.stderr)
+    print(
+        f"# total {time.time() - t_start:.1f}s cached={total_cached}/{total_tests}",
+        file=sys.stderr,
+    )
     for e in all_errors:
         print(f"ERROR {e['figure']}/{e['task']} {e['params']}: {e['error']}", file=sys.stderr)
     return 1 if all_errors else 0

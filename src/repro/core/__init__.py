@@ -1,9 +1,15 @@
 from repro.core.box import Box, TaskSpec
+from repro.core.cache import ResultCache, cache_key
+from repro.core.executor import SweepExecutor, SweepResult, SweepStats
 from repro.core.metrics import Samples, compute_metrics, known_metrics
+from repro.core.platform import Platform, get_platform, known_platforms, register_platform
 from repro.core.runner import Runner, RunnerResult
 from repro.core.task import Task, TaskContext, TestResult
 
 __all__ = [
     "Box", "TaskSpec", "Samples", "compute_metrics", "known_metrics",
     "Runner", "RunnerResult", "Task", "TaskContext", "TestResult",
+    "SweepExecutor", "SweepResult", "SweepStats",
+    "ResultCache", "cache_key",
+    "Platform", "get_platform", "known_platforms", "register_platform",
 ]

@@ -40,6 +40,10 @@ class TaskSpec:
 class Box:
     name: str
     tasks: list[TaskSpec]
+    # Optional sweep declaration: named execution platforms this box should
+    # run across (see repro.core.platform). Empty means "whatever the
+    # executor was configured with".
+    platforms: tuple[str, ...] = ()
 
     @staticmethod
     def from_dict(d: dict[str, Any]) -> "Box":
@@ -56,7 +60,11 @@ class Box:
             )
         if not specs:
             raise ValueError(f"box {d.get('name', '?')!r} declares no tasks")
-        return Box(name=d.get("name", "box"), tasks=specs)
+        return Box(
+            name=d.get("name", "box"),
+            tasks=specs,
+            platforms=tuple(d.get("platforms", ())),
+        )
 
     @staticmethod
     def from_json(text: str) -> "Box":

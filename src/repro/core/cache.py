@@ -1,0 +1,123 @@
+"""Persistent result cache: re-runs skip already-measured points.
+
+A sweep over (task x params x platform) is expensive and — for fixed seed
+data and iteration counts — deterministic enough to reuse.  The cache maps a
+content key over everything that identifies a measurement::
+
+    sha256(task, params, platform identity, iters, warmup, metrics)
+
+to the computed metrics dict of the finished test.  Storage is one JSON
+file (atomic tmp+rename writes) so the cache survives crashes, diffs
+cleanly, and can be inspected/deleted by hand.  Anything that changes the
+measurement — different parameter values, iteration counts, platform, the
+cache format version — changes the key or invalidates the file wholesale.
+
+Thread-safe: the executor calls ``get``/``put`` from worker threads.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+CACHE_VERSION = 1
+
+
+def cache_key(
+    task: str,
+    params: dict[str, Any],
+    platform: dict[str, Any],
+    iters: int,
+    warmup: int,
+    metrics: tuple[str, ...],
+) -> str:
+    ident = {
+        "task": task,
+        "params": params,
+        "platform": platform,
+        "iters": iters,
+        "warmup": warmup,
+        "metrics": list(metrics),
+    }
+    blob = json.dumps(ident, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class ResultCache:
+    """On-disk metrics cache; ``None``-safe drop-in is simply not passing one."""
+
+    def __init__(self, path: str | Path):
+        self.path = Path(path)
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict[str, Any]] = {}
+        self._dirty = False
+        self.hits = 0
+        self.misses = 0
+        self._load()
+
+    def _load(self) -> None:
+        if not self.path.exists():
+            return
+        try:
+            d = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return  # corrupt/unreadable -> start empty, overwrite on flush
+        if d.get("version") != CACHE_VERSION:
+            return  # format change invalidates everything
+        entries = d.get("entries")
+        if isinstance(entries, dict):
+            self._entries = entries
+
+    # -- lookup ------------------------------------------------------------
+    def get(self, key: str) -> dict[str, float] | None:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return dict(entry["metrics"])
+
+    def put(
+        self,
+        key: str,
+        metrics: dict[str, float],
+        *,
+        task: str = "",
+        params: dict[str, Any] | None = None,
+        platform: str = "",
+    ) -> None:
+        entry = {
+            "metrics": {k: float(v) for k, v in metrics.items()},
+            "task": task,
+            "params": {k: v for k, v in (params or {}).items()},
+            "platform": platform,
+            "saved_unix": time.time(),
+        }
+        with self._lock:
+            self._entries[key] = entry
+            self._dirty = True
+
+    # -- persistence -------------------------------------------------------
+    def flush(self) -> None:
+        with self._lock:
+            if not self._dirty:
+                return
+            payload = {"version": CACHE_VERSION, "entries": self._entries}
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = self.path.with_suffix(self.path.suffix + ".tmp")
+            tmp.write_text(json.dumps(payload, indent=1, default=str))
+            tmp.replace(self.path)
+            self._dirty = False
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._dirty = True
+        self.flush()
+
+    def __len__(self) -> int:
+        return len(self._entries)

@@ -1,0 +1,416 @@
+"""Sweep execution subsystem: concurrent, multi-platform, cached.
+
+The seed ``Runner`` walked a box strictly sequentially on one implicit
+platform.  This module is the generalisation every scaling direction builds
+on (ROADMAP: sharding, batching, async, caching, multi-backend):
+
+  * **Concurrency** — expanded tests dispatch onto a thread pool (default)
+    or a spawn-based process pool (``pool="process"``); ``workers=1`` keeps
+    the exact sequential seed path.  Report rows are assembled in submission
+    order, so the output is identical regardless of worker count.
+  * **Prepare barriers** — ``Task.prepare`` runs exactly once per
+    (platform, task) no matter how many workers race into the task; losers
+    block on an event until the winner's prepare finishes (or fails, which
+    fails their tests too).  This keeps the shared ``TaskContext`` contract
+    of the paper's lifecycle intact under concurrency.
+  * **Platform sweeps** — one invocation can run the same grid across many
+    named :mod:`repro.core.platform` backends; rows then carry a
+    ``platform`` column and feed ``report.speedup_table``.
+  * **Result caching** — with a :class:`repro.core.cache.ResultCache`,
+    already-measured (task, params, platform, iters) points short-circuit
+    into cached metrics; ``SweepStats.cached`` reports how many.
+
+Process-pool caveat: tests registered only in-process (``_register_for_tests``,
+``load_plugin_dir``) are invisible to spawned children; use threads for those.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import traceback
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Sequence
+
+from repro.core import cache as cache_mod
+from repro.core import registry, report
+from repro.core.box import Box
+from repro.core.metrics import compute_metrics
+from repro.core.platform import Platform, resolve
+from repro.core.task import TaskContext, TestResult
+
+
+@dataclass
+class SweepStats:
+    total: int = 0
+    executed: int = 0
+    cached: int = 0
+    errors: int = 0
+
+
+@dataclass
+class SweepResult:
+    box: str
+    platforms: list[str]
+    rows: list[dict[str, Any]] = field(default_factory=list)
+    results: list[TestResult] = field(default_factory=list)
+    errors: list[dict[str, str]] = field(default_factory=list)
+    stats: SweepStats = field(default_factory=SweepStats)
+
+    def csv(self) -> str:
+        return report.to_csv(self.rows)
+
+    def markdown(self) -> str:
+        return report.to_markdown(self.rows)
+
+
+@dataclass
+class _Unit:
+    """One concrete test: a point of the (platform x task x params) grid."""
+
+    index: int
+    platform: Platform
+    task_name: str
+    params: dict[str, Any]
+    metrics: tuple[str, ...]
+    ckey: str | None = None
+
+
+class SweepExecutor:
+    def __init__(
+        self,
+        platforms: Sequence[Platform | str | dict[str, Any]] | None = None,
+        workers: int = 1,
+        iters: int = 5,
+        warmup: int = 2,
+        fail_fast: bool = False,
+        cache: cache_mod.ResultCache | None = None,
+        pool: str = "thread",
+    ):
+        if pool not in ("thread", "process"):
+            raise ValueError(f"pool must be 'thread' or 'process', got {pool!r}")
+        self._platforms_explicit = platforms is not None
+        self.platforms = [resolve(p) for p in (platforms or ["default"])]
+        if len({p.name for p in self.platforms}) != len(self.platforms):
+            raise ValueError(f"duplicate platform names in {[p.name for p in self.platforms]}")
+        self.workers = max(1, int(workers))
+        self.iters = iters
+        self.warmup = warmup
+        self.fail_fast = fail_fast
+        self.cache = cache
+        self.pool = pool
+        # Contexts persist across boxes so prepare is shared; cleaned explicitly.
+        self._contexts: dict[tuple[str, str], TaskContext] = {}
+        self._prep: dict[tuple[str, str], dict[str, Any]] = {}
+        self._lock = threading.Lock()
+
+    # -- shared state ------------------------------------------------------
+    def _context(self, platform: Platform, task_name: str) -> TaskContext:
+        key = (platform.name, task_name)
+        with self._lock:
+            ctx = self._contexts.get(key)
+            if ctx is None:
+                ctx = TaskContext(
+                    platform=platform.describe(), iters=self.iters, warmup=self.warmup
+                )
+                self._contexts[key] = ctx
+        return ctx
+
+    def _ensure_prepared(self, task, platform: Platform, ctx: TaskContext) -> None:
+        """Run prepare exactly once per (platform, task); everyone else waits."""
+        key = (platform.name, task.name)
+        with self._lock:
+            state = self._prep.get(key)
+            owner = state is None
+            if owner:
+                state = {"event": threading.Event(), "error": None}
+                self._prep[key] = state
+        if owner:
+            try:
+                task.prepare(ctx)
+            except BaseException as e:
+                state["error"] = e
+                raise
+            finally:
+                state["event"].set()
+        else:
+            state["event"].wait()
+            if state["error"] is not None:
+                raise RuntimeError(
+                    f"prepare failed for task {task.name!r} on {platform.name!r}: "
+                    f"{state['error']}"
+                ) from state["error"]
+
+    # -- unit execution ----------------------------------------------------
+    def _run_unit(self, unit: _Unit) -> tuple[TestResult, bool]:
+        """Execute (or cache-hit) one unit; returns (result, was_cached)."""
+        if self.cache is not None and unit.ckey is not None:
+            hit = self.cache.get(unit.ckey)
+            if hit is not None:
+                return (
+                    TestResult(
+                        unit.task_name, dict(unit.params), hit, platform=unit.platform.name
+                    ),
+                    True,
+                )
+        task = registry.get(unit.task_name)
+        ctx = self._context(unit.platform, unit.task_name)
+        self._ensure_prepared(task, unit.platform, ctx)
+        samples = task.run(ctx, dict(unit.params))
+        samples = unit.platform.transform_samples(samples)
+        vals = compute_metrics(samples, unit.metrics)
+        with self._lock:
+            ctx.log.append(
+                {"task": task.name, "params": dict(unit.params), "metrics": dict(vals)}
+            )
+        if self.cache is not None and unit.ckey is not None:
+            self.cache.put(
+                unit.ckey,
+                vals,
+                task=task.name,
+                params=unit.params,
+                platform=unit.platform.name,
+            )
+        return TestResult(task.name, dict(unit.params), vals, platform=unit.platform.name), False
+
+    # -- box execution -----------------------------------------------------
+    def _expand_units(self, box: Box, platforms: list[Platform]) -> list[_Unit]:
+        units: list[_Unit] = []
+        # Validate the whole box before anything executes.
+        for spec in box.tasks:
+            task = registry.get(spec.task)
+            task.validate_params(spec.params)
+        idx = 0
+        for platform in platforms:
+            for spec in box.tasks:
+                task = registry.get(spec.task)
+                metrics = tuple(spec.metrics) or tuple(task.default_metrics)
+                for params in spec.expand():
+                    ckey = None
+                    if self.cache is not None:
+                        ckey = cache_mod.cache_key(
+                            task.name,
+                            params,
+                            platform.cache_identity(),
+                            self.iters,
+                            self.warmup,
+                            metrics,
+                        )
+                    units.append(_Unit(idx, platform, task.name, params, metrics, ckey))
+                    idx += 1
+        return units
+
+    def _box_platforms(self, box: Box) -> list[Platform]:
+        """Box-declared platforms win unless the executor was given some."""
+        if box.platforms and not self._platforms_explicit:
+            return [resolve(p) for p in box.platforms]
+        return self.platforms
+
+    def run_box(self, box: Box) -> SweepResult:
+        platforms = self._box_platforms(box)
+        units = self._expand_units(box, platforms)
+        out = SweepResult(box=box.name, platforms=[p.name for p in platforms])
+        out.stats.total = len(units)
+        ordered: list[TestResult | None] = [None] * len(units)
+
+        def record_error(unit: _Unit, exc: Exception) -> None:
+            out.stats.errors += 1
+            out.errors.append(
+                {
+                    "task": unit.task_name,
+                    "params": json.dumps(unit.params, default=str),
+                    "platform": unit.platform.name,
+                    "error": f"{type(exc).__name__}: {exc}",
+                    "traceback": traceback.format_exc(),
+                }
+            )
+
+        try:
+            if self.workers == 1 or len(units) <= 1:
+                for unit in units:
+                    try:
+                        result, was_cached = self._run_unit(unit)
+                    except Exception as e:  # noqa: BLE001 - report, keep going
+                        if self.fail_fast:
+                            raise
+                        record_error(unit, e)
+                        continue
+                    ordered[unit.index] = result
+                    out.stats.cached += was_cached
+            elif self.pool == "thread":
+                with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                    pairs = [(unit, pool.submit(self._run_unit, unit)) for unit in units]
+                    for unit, fut in pairs:
+                        try:
+                            result, was_cached = fut.result()
+                        except Exception as e:  # noqa: BLE001
+                            if self.fail_fast:
+                                raise
+                            record_error(unit, e)
+                            continue
+                        ordered[unit.index] = result
+                        out.stats.cached += was_cached
+            else:
+                self._run_process_pool(units, ordered, out, record_error)
+        finally:
+            # Persist whatever was measured even when fail_fast aborts the
+            # sweep mid-way — the re-run then resumes from the cache.
+            if self.cache is not None:
+                self.cache.flush()
+
+        out.results = [r for r in ordered if r is not None]
+        out.stats.executed = len(out.results) - out.stats.cached
+
+        # Report per (platform, task) in declaration order — identical row
+        # order for any worker count.
+        multi = len(platforms) > 1
+        for platform in platforms:
+            reported: set[str] = set()
+            for spec in box.tasks:
+                if spec.task in reported:
+                    continue
+                reported.add(spec.task)
+                task = registry.get(spec.task)
+                task_results = [
+                    r
+                    for r in out.results
+                    if r.task == task.name and r.platform == platform.name
+                ]
+                ctx = self._context(platform, task.name)
+                rows = task.report(ctx, task_results)
+                if multi:
+                    rows = [{**row, "platform": platform.name} for row in rows]
+                out.rows.extend(rows)
+        return out
+
+    def _run_process_pool(self, units, ordered, out, record_error) -> None:
+        import multiprocessing
+
+        # Parent owns the cache; children only ever see cache misses.
+        misses: list[_Unit] = []
+        for unit in units:
+            hit = self.cache.get(unit.ckey) if (self.cache and unit.ckey) else None
+            if hit is not None:
+                ordered[unit.index] = TestResult(
+                    unit.task_name, dict(unit.params), hit, platform=unit.platform.name
+                )
+                out.stats.cached += 1
+            else:
+                misses.append(unit)
+        if not misses:
+            return
+        ctx = multiprocessing.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=self.workers, mp_context=ctx) as pool:
+            pairs = [
+                (unit, pool.submit(_subprocess_run_unit, _unit_payload(unit, self)))
+                for unit in misses
+            ]
+            for unit, fut in pairs:
+                try:
+                    res = fut.result()
+                except Exception as e:  # noqa: BLE001 - pool/pickling failure
+                    if self.fail_fast:
+                        raise
+                    record_error(unit, e)
+                    continue
+                if not res["ok"]:
+                    if self.fail_fast:
+                        raise RuntimeError(res["error"])
+                    out.stats.errors += 1
+                    out.errors.append(
+                        {
+                            "task": unit.task_name,
+                            "params": json.dumps(unit.params, default=str),
+                            "platform": unit.platform.name,
+                            "error": res["error"],
+                            "traceback": res["traceback"],
+                        }
+                    )
+                    continue
+                vals = res["metrics"]
+                ordered[unit.index] = TestResult(
+                    unit.task_name, dict(unit.params), vals, platform=unit.platform.name
+                )
+                if self.cache is not None and unit.ckey is not None:
+                    self.cache.put(
+                        unit.ckey,
+                        vals,
+                        task=unit.task_name,
+                        params=unit.params,
+                        platform=unit.platform.name,
+                    )
+
+    # -- cleanup -----------------------------------------------------------
+    def clean(self, task_name: str | None = None) -> None:
+        """Explicit cleanup (paper step 6) — restores pre-benchmark state."""
+        if task_name is not None:
+            names = [task_name]
+        else:
+            names = sorted({t for (_, t) in self._prep})
+        for name in names:
+            task = registry.get(name)
+            # Clean every context that actually exists for this task — boxes
+            # may have swept platforms the executor wasn't constructed with.
+            with self._lock:
+                keys = sorted(
+                    {k for k in (*self._contexts, *self._prep) if k[1] == name}
+                )
+            if not keys:
+                # Nothing prepared: still hand the task a fresh context so an
+                # explicit clean of on-disk state works (seed behaviour).
+                keys = [(p.name, name) for p in self.platforms]
+            for key in keys:
+                with self._lock:
+                    ctx = self._contexts.pop(key, None)
+                    self._prep.pop(key, None)
+                if ctx is None:
+                    ctx = TaskContext(
+                        platform={"name": key[0]}, iters=self.iters, warmup=self.warmup
+                    )
+                task.clean(ctx)
+
+
+# -- process-pool worker (module level: must be picklable by spawn) ----------
+_CHILD_CONTEXTS: dict[tuple[str, str], TaskContext] = {}
+
+
+def _unit_payload(unit: _Unit, ex: SweepExecutor) -> dict[str, Any]:
+    import dataclasses
+
+    return {
+        "task": unit.task_name,
+        "params": unit.params,
+        "metrics": list(unit.metrics),
+        "platform": dataclasses.asdict(unit.platform),
+        "iters": ex.iters,
+        "warmup": ex.warmup,
+    }
+
+
+def _subprocess_run_unit(payload: dict[str, Any]) -> dict[str, Any]:
+    try:
+        platform = Platform(**payload["platform"])
+        task = registry.get(payload["task"])
+        key = (platform.name, task.name)
+        ctx = _CHILD_CONTEXTS.get(key)
+        if ctx is None:
+            ctx = TaskContext(
+                platform=platform.describe(),
+                iters=payload["iters"],
+                warmup=payload["warmup"],
+            )
+            task.prepare(ctx)
+            _CHILD_CONTEXTS[key] = ctx
+        samples = task.run(ctx, dict(payload["params"]))
+        samples = platform.transform_samples(samples)
+        vals = compute_metrics(samples, tuple(payload["metrics"]))
+        return {"ok": True, "metrics": vals}
+    except Exception as e:  # noqa: BLE001 - serialize the failure for the parent
+        return {"ok": False, "error": f"{type(e).__name__}: {e}", "traceback": traceback.format_exc()}
+
+
+__all__ = [
+    "SweepExecutor",
+    "SweepResult",
+    "SweepStats",
+]

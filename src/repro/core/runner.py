@@ -1,24 +1,32 @@
 """Runner: executes a box end-to-end (paper §3.3, Fig. 3).
 
 Workflow per task: (1) prepare once for all of the task's tests, (2) run each
-expanded parameter combination sequentially, caching intermediate results in
-the context log, (3) report. `clean` is deliberately NOT invoked after each
-task — boxes may share prepared state — and is exposed as an explicit call /
-CLI, mirroring the paper's design.
+expanded parameter combination, caching intermediate results in the context
+log, (3) report. `clean` is deliberately NOT invoked after each task — boxes
+may share prepared state — and is exposed as an explicit call / CLI,
+mirroring the paper's design.
+
+Since the sweep-executor refactor the Runner is a thin façade over
+:class:`repro.core.executor.SweepExecutor`: ``workers=1`` (the default)
+preserves the original strictly-sequential semantics, ``workers>1`` fans the
+expanded tests onto a pool, ``platforms`` sweeps several execution backends,
+and an optional :class:`repro.core.cache.ResultCache` makes re-runs
+incremental.  The CLI exposes all three (``--workers``, ``--platforms``,
+``--cache``/``--no-cache``).
 """
 from __future__ import annotations
 
 import argparse
-import json
 import sys
-import traceback
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Any
+from typing import Any, Sequence
 
 from repro.core import registry, report
 from repro.core.box import Box
-from repro.core.task import TaskContext, TestResult
+from repro.core.cache import ResultCache
+from repro.core.executor import SweepExecutor, SweepStats
+from repro.core.task import TestResult
 
 
 @dataclass
@@ -28,6 +36,7 @@ class RunnerResult:
     rows: list[dict[str, Any]] = field(default_factory=list)
     results: list[TestResult] = field(default_factory=list)
     errors: list[dict[str, str]] = field(default_factory=list)
+    stats: SweepStats = field(default_factory=SweepStats)
 
     def csv(self) -> str:
         return report.to_csv(self.rows)
@@ -39,60 +48,53 @@ class RunnerResult:
 class Runner:
     def __init__(
         self,
-        platform: dict[str, Any] | None = None,
+        platform: dict[str, Any] | str | None = None,
         iters: int = 5,
         warmup: int = 2,
         fail_fast: bool = False,
+        workers: int = 1,
+        platforms: Sequence[str] | None = None,
+        cache: ResultCache | None = None,
+        pool: str = "thread",
     ):
-        self.platform = dict(platform or {"name": "default"})
+        if platforms is not None and platform is not None:
+            raise ValueError("pass either platform= or platforms=, not both")
+        if platforms is None:
+            # None lets box-declared platform sweeps take effect.
+            platforms = None if platform is None else [platform]
+        self._exec = SweepExecutor(
+            platforms=platforms,
+            workers=workers,
+            iters=iters,
+            warmup=warmup,
+            fail_fast=fail_fast,
+            cache=cache,
+            pool=pool,
+        )
+        self.platform = self._exec.platforms[0].describe()
         self.iters = iters
         self.warmup = warmup
         self.fail_fast = fail_fast
-        # Contexts persist across boxes so prepare is shared; cleaned explicitly.
-        self._contexts: dict[str, TaskContext] = {}
-        self._prepared: set[str] = set()
 
-    def _ctx(self, task_name: str) -> TaskContext:
-        if task_name not in self._contexts:
-            self._contexts[task_name] = TaskContext(
-                platform=self.platform, iters=self.iters, warmup=self.warmup
-            )
-        return self._contexts[task_name]
+    @property
+    def executor(self) -> SweepExecutor:
+        return self._exec
 
     def run_box(self, box: Box) -> RunnerResult:
-        out = RunnerResult(box=box.name, platform=self.platform.get("name", "default"))
-        for spec in box.tasks:
-            task = registry.get(spec.task)
-            task.validate_params(spec.params)
-            ctx = self._ctx(task.name)
-            if task.name not in self._prepared:
-                task.prepare(ctx)  # (1) prepare once per task
-                self._prepared.add(task.name)
-            metrics = spec.metrics or task.default_metrics
-            for params in spec.expand():  # (2) sequential test execution
-                try:
-                    out.results.append(task.execute_test(ctx, params, metrics))
-                except Exception as e:  # noqa: BLE001 - report, keep going
-                    if self.fail_fast:
-                        raise
-                    out.errors.append(
-                        {"task": task.name, "params": json.dumps(params, default=str),
-                         "error": f"{type(e).__name__}: {e}",
-                         "traceback": traceback.format_exc()}
-                    )
-            # (3) report from accumulated results of this task
-            task_results = [r for r in out.results if r.task == task.name]
-            out.rows.extend(task.report(ctx, task_results))
-        return out
+        sweep = self._exec.run_box(box)
+        name = sweep.platforms[0] if len(sweep.platforms) == 1 else ",".join(sweep.platforms)
+        return RunnerResult(
+            box=sweep.box,
+            platform=name,
+            rows=sweep.rows,
+            results=sweep.results,
+            errors=sweep.errors,
+            stats=sweep.stats,
+        )
 
     def clean(self, task_name: str | None = None) -> None:
         """Explicit cleanup (paper step 6) — restores pre-benchmark state."""
-        names = [task_name] if task_name else list(self._prepared)
-        for name in names:
-            task = registry.get(name)
-            task.clean(self._ctx(name))
-            self._prepared.discard(name)
-            self._contexts.pop(name, None)
+        self._exec.clean(task_name)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -100,16 +102,32 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("box", nargs="?", help="path to box JSON")
     p.add_argument("--iters", type=int, default=5)
     p.add_argument("--warmup", type=int, default=2)
+    p.add_argument("--workers", type=int, default=1, help="concurrent test workers")
+    p.add_argument(
+        "--platforms", nargs="+", default=None,
+        help="execution platforms to sweep (e.g. cpu-host dpu-sim)",
+    )
+    p.add_argument("--pool", choices=("thread", "process"), default="thread")
+    p.add_argument("--cache", default=None, metavar="PATH", help="persistent result cache file")
+    p.add_argument("--no-cache", action="store_true", help="ignore --cache / box cache")
     p.add_argument("--format", choices=("csv", "md"), default="csv")
     p.add_argument("--out", default=None, help="write report here instead of stdout")
     p.add_argument("--clean", action="store_true", help="clean all tasks and exit")
     p.add_argument("--list-tasks", action="store_true")
+    p.add_argument("--list-platforms", action="store_true")
     args = p.parse_args(argv)
 
     if args.list_tasks:
         for name in registry.known_tasks():
             t = registry.get(name)
             print(f"{name}: params={sorted(t.param_space)} metrics={t.default_metrics}")
+        return 0
+    if args.list_platforms:
+        from repro.core.platform import get_platform, known_platforms
+
+        for name in known_platforms():
+            plat = get_platform(name)
+            print(f"{name}: kind={plat.kind} time_scale={plat.time_scale} flags={plat.flags}")
         return 0
     if args.clean:
         r = Runner()
@@ -119,14 +137,34 @@ def main(argv: list[str] | None = None) -> int:
         return 0
     if not args.box:
         p.error("box path required")
+    if args.platforms:
+        from repro.core.platform import get_platform
+
+        try:
+            for name in args.platforms:
+                get_platform(name)
+        except KeyError as e:
+            p.error(str(e.args[0]))
     box = Box.load(args.box)
-    runner = Runner(iters=args.iters, warmup=args.warmup)
+    cache = None
+    if args.cache and not args.no_cache:
+        cache = ResultCache(args.cache)
+    runner = Runner(
+        iters=args.iters,
+        warmup=args.warmup,
+        workers=args.workers,
+        platforms=args.platforms,
+        cache=cache,
+        pool=args.pool,
+    )
     res = runner.run_box(box)
     text = res.csv() if args.format == "csv" else res.markdown()
     if args.out:
         Path(args.out).write_text(text)
     else:
         sys.stdout.write(text)
+    if cache is not None:
+        print(f"# cached={res.stats.cached}/{res.stats.total}", file=sys.stderr)
     for err in res.errors:
         print(f"ERROR {err['task']} {err['params']}: {err['error']}", file=sys.stderr)
     return 1 if res.errors else 0

@@ -42,6 +42,9 @@ class TestResult:
     task: str
     params: dict[str, Any]
     metrics: dict[str, float]
+    # Name of the execution platform that measured this test; the legacy
+    # single-platform path leaves the default.
+    platform: str = "default"
 
 
 class Task(abc.ABC):

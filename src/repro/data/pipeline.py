@@ -10,11 +10,10 @@ examples (pure-noise labels would hide optimizer bugs).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Iterator
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 @dataclass(frozen=True)

@@ -11,7 +11,7 @@ donate like any other JAX value.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Iterator, Mapping
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

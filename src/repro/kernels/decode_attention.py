@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401 - dtype/memory-space helpers
+from repro.kernels.compat import CompilerParams
 
 NEG_INF = -1e30
 LANES = 128
@@ -98,7 +99,7 @@ def decode_attention(
             pltpu.VMEM((g, LANES), jnp.float32),
             pltpu.VMEM((g, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

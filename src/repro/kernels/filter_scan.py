@@ -17,7 +17,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401 - dtype/memory-space helpers
+from repro.kernels.compat import CompilerParams
 
 LANES = 128
 
@@ -69,7 +70,7 @@ def filter_agg(
         ],
         out_specs=pl.BlockSpec((1, LANES), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, LANES), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -6,9 +6,8 @@ variant so before/after roofline terms are directly comparable.
 """
 from __future__ import annotations
 
-import dataclasses
 
-from repro.launch.mesh import Rules, logical_rules
+from repro.launch.mesh import Rules
 
 
 def apply(name: str, cfg, mesh, cell, rules: Rules) -> Rules:
@@ -43,3 +42,30 @@ PROFILES = (
     "base", "no_fsdp", "fsdp", "seq_model", "seq_data_model",
     "expert_tp", "vocab_data", "replicated_vocab",
 )
+
+
+# ---------------------------------------------------------------------------
+# Execution-platform wiring (lazily merged by repro.core.platform).
+#
+# Each entry overlays the core platform registry with launch-layer defaults:
+# which sharding profile a backend should lower under, plus capability flags
+# tasks can branch on. This is where a future real-DPU target (e.g. a
+# BlueField profile driving remote execution) plugs in without the core
+# layer learning about meshes or jax.
+EXECUTION_PROFILES: dict[str, dict] = {
+    "cpu-host": {
+        "kind": "host",
+        "flags": {"sharding": "base"},
+    },
+    "dpu-sim": {
+        "kind": "sim",
+        # Wimpy-core dilation: BlueField-2 characterizations put the DPU Arm
+        # complex ~3-4x behind the host for general-purpose compute.
+        "time_scale": 3.5,
+        "flags": {
+            "sharding": "seq_model",
+            "wimpy_cores": True,
+            "accelerators": ["compression", "crypto"],
+        },
+    },
+}

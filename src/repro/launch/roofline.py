@@ -23,7 +23,6 @@ where n is the replica-group size parsed from the op's replica_groups.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Any
 

@@ -1,0 +1,121 @@
+"""Synthesize dry-run result fixtures without compiling anything.
+
+``repro.launch.report`` consumes ``results/dryrun/<mesh>/<arch>/<cell>.json``
+files that normally come out of the (slow, jax-compiling) dry-run in
+:mod:`repro.launch.dryrun`.  Tests and fresh checkouts should not depend on
+multi-minute compiles or checked-in artifacts, so this module produces the
+same JSON schema *analytically*: roofline terms derived from the arch
+config's parameter/activation byte counts, run through the real
+:func:`repro.launch.roofline.analyze` code path (a synthetic one-op HLO
+supplies the collective), so the fixture structure can never drift from
+what the report loader expects.
+
+Numbers are deterministic, positive, and roofline-plausible — good enough
+for loaders, table formatting, and plumbing tests; they are NOT
+measurements.  Every file carries ``"status": "synthetic"`` so a real
+dry-run (which writes ``"status": "ok"``) is distinguishable and simply
+overwrites them with ``--force``.
+
+Only stdlib + repro.configs + repro.launch.roofline are imported — no jax.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES, all_archs, cells_for, get_arch
+from repro.launch import roofline as rf
+
+# Chips in the production single-pod mesh (16 x 16); mirrors
+# repro.launch.mesh.make_production_mesh without importing jax.
+POD_CHIPS = 256
+_RING = 16  # per-axis ring size used for the synthetic collective
+
+# Fraction of HLO FLOPs that are "useful" model FLOPs in a reasonably
+# lowered module (remat/recompute overheads put real numbers in this band).
+_USEFUL = 0.62
+
+
+def synthesize_cell(arch: str, cell_name: str, mesh_kind: str = "pod") -> dict:
+    cfg = get_arch(arch)
+    cell = SHAPES[cell_name]
+    mf = rf.model_flops(cfg, cell)
+    flops_per_device = mf / (POD_CHIPS * _USEFUL)
+
+    param_bytes = cfg.n_params() * 2  # bf16 residency
+    if cell.kind == "train":
+        tokens_per_device = cell.global_batch * cell.seq_len / POD_CHIPS
+    else:
+        tokens_per_device = max(cell.global_batch / POD_CHIPS, 1.0)
+    act_bytes = tokens_per_device * cfg.d_model * cfg.n_layers * 2 * 4
+    bytes_per_device = param_bytes / POD_CHIPS + act_bytes
+
+    # One synthetic collective sized like the dominant wire mover: gradient
+    # all-reduce for training, param all-gather for serving. Feeding it
+    # through the real HLO parser keeps the schema honest.
+    shard_elems = max(int(param_bytes / 2 / POD_CHIPS), 1)
+    if cell.kind == "train":
+        hlo = (
+            f"  %ar = bf16[{shard_elems}] all-reduce(bf16[{shard_elems}] %g), "
+            f"replica_groups=[{_RING},{_RING}]<=[{POD_CHIPS}], to_apply=%add\n"
+        )
+    else:
+        hlo = (
+            f"  %ag = bf16[{shard_elems}] all-gather(bf16[{shard_elems // _RING or 1}] %p), "
+            f"replica_groups=[{_RING},{_RING}]<=[{POD_CHIPS}], dimensions={{0}}\n"
+        )
+    cost = {"flops": flops_per_device, "bytes accessed": bytes_per_device}
+    roof = rf.analyze(cost, hlo, n_chips=POD_CHIPS, model_flops_total=mf)
+
+    return {
+        "arch": arch,
+        "cell": cell_name,
+        "mesh": mesh_kind,
+        "n_chips": POD_CHIPS,
+        "unrolled": True,
+        "sharding_profile": "base",
+        "overrides": {},
+        "lower_s": 0.0,
+        "compile_s": 0.0,
+        "memory": {},
+        "roofline": roof.to_dict(),
+        "status": "synthetic",
+    }
+
+
+def ensure_dryrun_fixtures(out_dir: str | Path, mesh_kind: str = "pod") -> list[Path]:
+    """Write any missing base-cell fixtures; returns the paths written.
+
+    Existing files (synthetic or real dry-run output) are left untouched, so
+    genuine measurements are never clobbered.
+    """
+    out_dir = Path(out_dir)
+    written = []
+    for arch in all_archs():
+        cfg = get_arch(arch)
+        for cell_name in cells_for(cfg):
+            path = out_dir / mesh_kind / arch / f"{cell_name}.json"
+            if path.exists():
+                continue
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(synthesize_cell(arch, cell_name, mesh_kind), indent=1))
+            written.append(path)
+    return written
+
+
+def main(argv=None) -> int:  # pragma: no cover - tiny CLI
+    import argparse
+
+    p = argparse.ArgumentParser(prog="repro.launch.synth")
+    p.add_argument("--out", default=None, help="dryrun results root")
+    p.add_argument("--mesh", default="pod")
+    args = p.parse_args(argv)
+    from repro.launch.report import RESULTS
+
+    written = ensure_dryrun_fixtures(Path(args.out) if args.out else RESULTS, args.mesh)
+    print(f"wrote {len(written)} synthetic dryrun fixtures")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

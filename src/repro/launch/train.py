@@ -14,7 +14,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 
 from repro.configs.base import get_arch, tiny
 from repro.data.pipeline import for_model

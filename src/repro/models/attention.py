@@ -18,8 +18,6 @@ jnp: O(block x S) live scores instead of O(S x S)). The Pallas flash kernel
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,12 +8,11 @@ prefill and cached) + FFN. Both stacks scan over layers with stacked params.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig, LayerKind
+from repro.configs.base import ArchConfig
 from repro.models import attention as attn_mod
 from repro.models.layers import Params, apply_mlp, apply_norm, init_mlp, init_norm, truncated_normal
 

@@ -23,7 +23,6 @@ The choice is recorded per-arch by `expert_sharding(cfg, n_model_shards)`.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

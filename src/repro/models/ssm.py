@@ -21,7 +21,6 @@ out_proj all-reduce is the only collective — same pattern as attention.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Blocks are pre-norm residual: x += mixer(norm(x)); x += ffn(norm(x)).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -22,14 +22,12 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from pathlib import Path
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro import checkpoint as ckpt_lib
-from repro.configs.base import ArchConfig
 from repro.models.model import Model
 from repro.optim import make_optimizer, make_schedule
 

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.core.metrics import Samples
 from repro.core.registry import register
 from repro.core.task import Task, TaskContext
-from repro.core.timing import block, measure
+from repro.core.timing import measure
 
 _SCALES = {"1M": 1 << 20, "16M": 1 << 24}
 _BATCH = 1 << 14  # lookups per lane per tick

@@ -16,7 +16,6 @@ a real multi-device mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

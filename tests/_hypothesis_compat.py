@@ -1,0 +1,147 @@
+"""Hypothesis shim: property tests degrade gracefully without hypothesis.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``st`` are
+re-exported and behaviour is identical.  When it is NOT installed (the CPU
+CI image and some sandboxes cannot pip-install it), this module provides a
+miniature deterministic stand-in implementing exactly the strategy surface
+our tests use — ``integers``, ``floats``, ``lists``, ``dictionaries``,
+``sampled_from`` — so the four property-based test modules still *collect*
+and their ``@given`` tests run against a seeded pseudo-random sample set
+(first example biased to the minimal corner) instead of erroring at import.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        """A draw rule: minimal() for the shrink-corner, draw(rng) for the rest."""
+
+        def __init__(self, draw, minimal):
+            self._draw = draw
+            self._minimal = minimal
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def minimal(self):
+            return self._minimal()
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: rng.randint(min_value, max_value), lambda: min_value
+            )
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value), lambda: min_value
+            )
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            seq = list(elements)
+            return _Strategy(lambda rng: rng.choice(seq), lambda: seq[0])
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            def minimal():
+                return [elements.minimal() for _ in range(min_size)]
+
+            return _Strategy(draw, minimal)
+
+        @staticmethod
+        def dictionaries(
+            keys: _Strategy, values: _Strategy, min_size: int = 0, max_size: int = 8
+        ) -> _Strategy:
+            def draw(rng):
+                target = rng.randint(min_size, max_size)
+                out = {}
+                for _ in range(20 * max(target, 1)):  # keys may collide; retry
+                    if len(out) >= target:
+                        break
+                    out[keys.draw(rng)] = values.draw(rng)
+                while len(out) < min_size:  # keyspace may be tiny
+                    out[keys.draw(rng)] = values.draw(rng)
+                return out
+
+            def minimal():
+                out = {}
+                rng = random.Random(0)
+                while len(out) < min_size:
+                    out[keys.draw(rng)] = values.draw(rng)
+                return out
+
+            return _Strategy(draw, minimal)
+
+    st = _Strategies()
+
+    def settings(**kwargs):
+        """Record run options on the function; consumed by @given below."""
+
+        def deco(fn):
+            fn._compat_settings = kwargs
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            opts = getattr(fn, "_compat_settings", {})
+            n_examples = min(int(opts.get("max_examples", _DEFAULT_EXAMPLES)), 50)
+
+            # Like hypothesis: positional strategies bind the RIGHTMOST
+            # unbound parameters; whatever is left over (pytest fixtures)
+            # stays in the wrapper's visible signature.
+            sig = inspect.signature(fn)
+            unbound = [n for n in sig.parameters if n not in kw_strategies]
+            pos_names = unbound[len(unbound) - len(arg_strategies):] if arg_strategies else []
+            fixture_names = [n for n in unbound if n not in pos_names]
+            strategies = dict(zip(pos_names, arg_strategies), **kw_strategies)
+
+            @functools.wraps(fn)
+            def wrapper(**fixture_kwargs):
+                rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+                for i in range(max(n_examples, 1)):
+                    if i == 0:
+                        drawn = {k: s.minimal() for k, s in strategies.items()}
+                    else:
+                        drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**fixture_kwargs, **drawn)
+                    except Exception:
+                        print(
+                            f"_hypothesis_compat falsifying example ({fn.__name__}): "
+                            f"{drawn!r}"
+                        )
+                        raise
+
+            # Hide the strategy-bound parameters from pytest's fixture
+            # resolution; expose only genuine fixture parameters.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = sig.replace(
+                parameters=[sig.parameters[n] for n in fixture_names]
+            )
+            return wrapper
+
+        return deco

@@ -1,0 +1,310 @@
+"""Sweep execution subsystem: concurrent executor correctness, result
+caching, platform backends. Pure-framework tests — no jax involved."""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core import Box, ResultCache, Runner, Samples, SweepExecutor
+from repro.core import registry as reg
+from repro.core.cache import cache_key
+from repro.core.platform import get_platform, known_platforms, resolve
+from repro.core.report import speedup_table
+from repro.core.task import Task
+
+
+class _SweepTask(Task):
+    """Deterministic task with observable lifecycle, safe under threads."""
+
+    name = "sweep"
+    param_space = {"a": [1, 2, 3, 4], "b": ["x", "y"]}
+    default_metrics = ("avg_latency_us", "ops_per_s")
+
+    def __init__(self):
+        self.prepare_calls = 0
+        self.run_calls = 0
+        self._lock = threading.Lock()
+
+    def prepare(self, ctx):
+        time.sleep(0.01)  # widen the race window for the barrier test
+        with self._lock:
+            self.prepare_calls += 1
+        ctx.scratch["ready"] = True
+
+    def run(self, ctx, params):
+        assert ctx.scratch.get("ready"), "run before prepare"
+        with self._lock:
+            self.run_calls += 1
+        t = 1e-4 * params["a"] * (1 + (params["b"] == "y"))
+        return Samples(times_s=[t, 2 * t], ops_per_iter=100.0)
+
+
+@pytest.fixture()
+def sweep_task():
+    t = _SweepTask()
+    reg._register_for_tests(t)
+    return t
+
+
+def _box(n_a=4):
+    return Box.from_dict(
+        {
+            "name": "b",
+            "tasks": [
+                {"task": "sweep", "params": {"a": list(range(1, n_a + 1)), "b": ["x", "y"]}}
+            ],
+        }
+    )
+
+
+# -- concurrent correctness --------------------------------------------------
+def test_parallel_rows_identical_to_sequential(sweep_task):
+    seq = SweepExecutor(workers=1).run_box(_box())
+    par = SweepExecutor(workers=4).run_box(_box())
+    assert par.rows == seq.rows  # same order, same keys, same values
+    assert not par.errors and par.stats.total == 8
+
+
+def test_prepare_runs_once_under_contention(sweep_task):
+    res = SweepExecutor(workers=8).run_box(_box())
+    assert sweep_task.prepare_calls == 1
+    assert sweep_task.run_calls == 8
+    assert len(res.results) == 8
+
+
+def test_prepare_failure_fails_all_waiters():
+    class _BadPrep(Task):
+        name = "badprep"
+        param_space = {"n": [1, 2, 3, 4]}
+
+        def prepare(self, ctx):
+            raise RuntimeError("no disk")
+
+        def run(self, ctx, params):
+            return Samples(times_s=[1e-3])
+
+    reg._register_for_tests(_BadPrep())
+    box = Box.from_dict({"name": "b", "tasks": [{"task": "badprep", "params": {"n": [1, 2, 3, 4]}}]})
+    res = SweepExecutor(workers=4).run_box(box)
+    assert len(res.errors) == 4
+    assert all("no disk" in e["error"] for e in res.errors)
+    assert not res.results
+
+
+def test_error_isolation_under_concurrency(sweep_task):
+    class _Flaky(Task):
+        name = "flaky"
+        param_space = {"z": [0, 1, 2, 3]}
+
+        def run(self, ctx, params):
+            if params["z"] % 2:
+                raise RuntimeError("kaput")
+            return Samples(times_s=[1e-3])
+
+    reg._register_for_tests(_Flaky())
+    box = Box.from_dict(
+        {
+            "name": "b",
+            "tasks": [
+                {"task": "flaky", "params": {"z": [0, 1, 2, 3]}},
+                {"task": "sweep", "params": {"a": [1], "b": ["x"]}},
+            ],
+        }
+    )
+    res = SweepExecutor(workers=4).run_box(box)
+    assert len(res.errors) == 2 and all("kaput" in e["error"] for e in res.errors)
+    assert any(r.task == "sweep" for r in res.results)  # other tasks still ran
+
+
+def test_runner_facade_parallel(sweep_task):
+    r1 = Runner().run_box(_box())
+    r4 = Runner(workers=4).run_box(_box())
+    assert r1.rows == r4.rows
+    assert "platform" not in r1.rows[0]  # single-platform rows stay untagged
+
+
+# -- result cache ------------------------------------------------------------
+def test_cache_hit_miss_and_persistence(sweep_task, tmp_path):
+    path = tmp_path / "cache.json"
+    first = SweepExecutor(workers=2, cache=ResultCache(path)).run_box(_box())
+    assert first.stats.cached == 0 and first.stats.executed == 8
+    assert path.exists()
+
+    # Fresh executor + fresh cache object: all 8 points come from disk.
+    second = SweepExecutor(workers=2, cache=ResultCache(path)).run_box(_box())
+    assert second.stats.cached == 8 and second.stats.executed == 0
+    assert second.rows == first.rows  # identical report rows from cache
+
+
+def test_cache_counts_run_calls(sweep_task, tmp_path):
+    cache = ResultCache(tmp_path / "c.json")
+    SweepExecutor(cache=cache).run_box(_box())
+    assert sweep_task.run_calls == 8
+    SweepExecutor(cache=cache).run_box(_box())
+    assert sweep_task.run_calls == 8  # nothing re-measured
+
+
+def test_cache_invalidation_on_measurement_identity(sweep_task, tmp_path):
+    path = tmp_path / "c.json"
+    SweepExecutor(iters=3, cache=ResultCache(path)).run_box(_box())
+    # Different iteration count -> different key -> full remeasure.
+    res = SweepExecutor(iters=5, cache=ResultCache(path)).run_box(_box())
+    assert res.stats.cached == 0
+    # Different platform -> different key.
+    res = SweepExecutor(
+        iters=3, platforms=["dpu-sim"], cache=ResultCache(path)
+    ).run_box(_box())
+    assert res.stats.cached == 0
+    # Same identity again -> all hits.
+    res = SweepExecutor(iters=3, cache=ResultCache(path)).run_box(_box())
+    assert res.stats.cached == 8
+
+
+def test_cache_clear_and_corruption(sweep_task, tmp_path):
+    path = tmp_path / "c.json"
+    cache = ResultCache(path)
+    SweepExecutor(cache=cache).run_box(_box())
+    cache.clear()
+    assert SweepExecutor(cache=ResultCache(path)).run_box(_box()).stats.cached == 0
+
+    path.write_text("{ not json")  # corrupt file: treated as empty, not fatal
+    assert SweepExecutor(cache=ResultCache(path)).run_box(_box()).stats.cached == 0
+
+
+def test_cache_key_sensitivity():
+    base = dict(
+        task="t", params={"a": 1}, platform={"name": "p"}, iters=3, warmup=1,
+        metrics=("m",),
+    )
+    k = cache_key(**base)
+    assert cache_key(**{**base, "params": {"a": 2}}) != k
+    assert cache_key(**{**base, "platform": {"name": "q"}}) != k
+    assert cache_key(**{**base, "warmup": 0}) != k
+    assert cache_key(**base) == k  # stable
+
+
+# -- platform backends -------------------------------------------------------
+def test_platform_registry():
+    assert {"default", "cpu-host", "dpu-sim"} <= set(known_platforms())
+    sim = get_platform("dpu-sim")
+    assert sim.kind == "sim" and sim.time_scale > 1.0
+    assert resolve(None).name == "default"
+    assert resolve("cpu-host").name == "cpu-host"
+    legacy = resolve({"name": "cpu-host", "numa": 1})
+    assert legacy.name == "cpu-host" and legacy.flags["numa"] == 1
+    with pytest.raises(KeyError, match="unknown platform"):
+        get_platform("gpu-moon")
+
+
+def test_multi_platform_rows_carry_platform_column(sweep_task):
+    res = SweepExecutor(platforms=["cpu-host", "dpu-sim"], workers=3).run_box(_box())
+    assert res.stats.total == 16
+    assert all("platform" in row for row in res.rows)
+    assert {row["platform"] for row in res.rows} == {"cpu-host", "dpu-sim"}
+    assert "platform" in res.csv().splitlines()[0]
+
+    host = [r for r in res.rows if r["platform"] == "cpu-host"]
+    sim = [r for r in res.rows if r["platform"] == "dpu-sim"]
+    scale = get_platform("dpu-sim").time_scale
+    for h, s in zip(host, sim):
+        assert s["avg_latency_us"] == pytest.approx(scale * h["avg_latency_us"])
+
+    sp = speedup_table(res.rows, "ops_per_s", "cpu-host")
+    assert sp and sp[0]["speedup:dpu-sim"] == pytest.approx(1 / scale)
+
+
+def test_box_declared_platform_sweep(sweep_task):
+    box = Box.from_dict(
+        {
+            "name": "b",
+            "platforms": ["cpu-host", "dpu-sim"],
+            "tasks": [{"task": "sweep", "params": {"a": [1], "b": ["x"]}}],
+        }
+    )
+    # Runner with no explicit platforms: the box declaration wins.
+    res = Runner().run_box(box)
+    assert {row["platform"] for row in res.rows} == {"cpu-host", "dpu-sim"}
+    # Explicit executor platforms override the box.
+    res2 = SweepExecutor(platforms=["cpu-host"]).run_box(box)
+    assert all("platform" not in row for row in res2.rows)
+
+
+def test_platform_context_isolation(sweep_task):
+    ex = SweepExecutor(platforms=["cpu-host", "dpu-sim"])
+    ex.run_box(_box(n_a=1))
+    assert sweep_task.prepare_calls == 2  # one prepared context per platform
+    ctx_host = ex._context(resolve("cpu-host"), "sweep")
+    ctx_sim = ex._context(resolve("dpu-sim"), "sweep")
+    assert ctx_host is not ctx_sim
+    assert ctx_sim.platform["wimpy_cores"] is True
+
+
+def test_clean_reaches_box_declared_platforms(sweep_task):
+    box = Box.from_dict(
+        {
+            "name": "b",
+            "platforms": ["cpu-host", "dpu-sim"],
+            "tasks": [{"task": "sweep", "params": {"a": [1], "b": ["x"]}}],
+        }
+    )
+    ex = SweepExecutor()  # default platforms; the box declares the sweep
+    ex.run_box(box)
+    host_ctx = ex._contexts[("cpu-host", "sweep")]
+    assert host_ctx.scratch.get("ready")
+    ex.clean("sweep")
+    assert host_ctx.scratch == {}  # Task.clean saw the REAL prepared context
+    assert not ex._contexts and not ex._prep
+    # A re-run must prepare again from scratch.
+    ex.run_box(box)
+    assert sweep_task.prepare_calls == 4
+
+
+def test_cache_invalidation_on_platform_flags(sweep_task, tmp_path):
+    path = tmp_path / "c.json"
+    SweepExecutor(
+        platforms=[{"name": "cpu-host"}], cache=ResultCache(path)
+    ).run_box(_box())
+    # Same platform name but different capability flags -> different key.
+    res = SweepExecutor(
+        platforms=[{"name": "cpu-host", "numa": 1}], cache=ResultCache(path)
+    ).run_box(_box())
+    assert res.stats.cached == 0
+
+
+def test_fail_fast_still_flushes_cache(tmp_path):
+    class _Dies(Task):
+        name = "dies"
+        param_space = {"z": [0, 1, 2]}
+
+        def run(self, ctx, params):
+            if params["z"] == 2:
+                raise RuntimeError("boom")
+            return Samples(times_s=[1e-3])
+
+    reg._register_for_tests(_Dies())
+    box = Box.from_dict({"name": "b", "tasks": [{"task": "dies", "params": {"z": [0, 1, 2]}}]})
+    path = tmp_path / "c.json"
+    with pytest.raises(RuntimeError, match="boom"):
+        SweepExecutor(fail_fast=True, cache=ResultCache(path)).run_box(box)
+    # The two completed points survived the abort and are reused.
+    res = SweepExecutor(cache=ResultCache(path)).run_box(box)
+    assert res.stats.cached == 2 and len(res.errors) == 1
+
+
+def test_json_box_file_platform_sweep(tmp_path, sweep_task):
+    bf = tmp_path / "box.json"
+    bf.write_text(
+        json.dumps(
+            {
+                "name": "file_box",
+                "platforms": ["cpu-host", "dpu-sim"],
+                "tasks": [{"task": "sweep", "params": {"a": [1, 2], "b": ["x"]}}],
+            }
+        )
+    )
+    res = Runner().run_box(Box.load(bf))
+    assert res.stats.total == 4  # 2 tests x 2 platforms
+    assert {row["platform"] for row in res.rows} == {"cpu-host", "dpu-sim"}

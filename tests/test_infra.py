@@ -6,9 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.configs.base import get_arch, tiny
+from repro.configs.base import get_arch
 from repro.data.pipeline import DataConfig, SyntheticLM, for_model
 from repro.launch import roofline as rf
 from repro.optim import make_optimizer, make_schedule

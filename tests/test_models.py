@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import SHAPES, ShapeCell, all_archs, cells_for, get_arch, tiny
+from repro.configs.base import ShapeCell, all_archs, cells_for, get_arch, tiny
 from repro.models import transformer as tfm
 from repro.models.model import Model, batch_like, input_specs
 

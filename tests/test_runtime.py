@@ -2,7 +2,6 @@
 monitoring, elastic re-meshing, and the serving loop's batching invariants."""
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

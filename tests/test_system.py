@@ -7,12 +7,12 @@ import math
 import textwrap
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Box, Runner, Samples, TaskSpec, compute_metrics
 from repro.core import registry as reg
-from repro.core.report import merge_platform_reports, speedup_table, to_csv, to_markdown
-from repro.core.task import Task, TaskContext
+from repro.core.report import merge_platform_reports, speedup_table, to_csv
+from repro.core.task import Task
 
 
 class _FakeTask(Task):
