@@ -7,6 +7,9 @@ Usage:
   python -m benchmarks.run --workers 4                  # concurrent tests
   python -m benchmarks.run --platforms cpu-host dpu-sim # platform sweep
   python -m benchmarks.run --no-cache                   # force remeasure
+  python -m benchmarks.run --shard 0/2                  # one hash-slice of each figure
+  python -m benchmarks.run --merge                      # reassemble shard CSVs
+  python -m benchmarks.run --remote 127.0.0.1:7177      # execute on a worker
   python -m benchmarks.run --list
 
 Per figure: expand the box (paper §3.3), execute through the sweep
@@ -29,14 +32,49 @@ from benchmarks.figures import FIGURES
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
 
 
-def run_figure(fig: str, executor, out_dir: Path):
+def _figure_csv(fig: str, shard=None) -> str:
+    return f"{fig}.csv" if shard is None else f"{fig}.shard{shard.index}of{shard.count}.csv"
+
+
+def run_figure(fig: str, executor, out_dir: Path, shard=None):
     from repro.core.box import Box
 
     box = Box.from_dict(FIGURES[fig])
-    res = executor.run_box(box)
+    res = executor.run_box(box, shard=shard)
     out_dir.mkdir(parents=True, exist_ok=True)
-    (out_dir / f"{fig}.csv").write_text(res.csv())
+    (out_dir / _figure_csv(fig, shard)).write_text(res.csv())
     return res
+
+
+def merge_figure(fig: str, out_dir: Path, platforms) -> int:
+    """Merge every <fig>.shardIofN.csv in out_dir into <fig>.csv."""
+    import re
+
+    from repro.core.box import Box
+    from repro.core.report import load_report_rows, merge_shard_reports, to_csv
+
+    by_count: dict[int, list[Path]] = {}
+    for f in sorted(out_dir.glob(f"{fig}.shard*of*.csv")):
+        m = re.fullmatch(rf"{re.escape(fig)}\.shard(\d+)of(\d+)\.csv", f.name)
+        if m:
+            by_count.setdefault(int(m.group(2)), []).append(f)
+    if not by_count:
+        return 0
+    if len(by_count) > 1:
+        # Stale files from a previous different-N sharding would silently
+        # shadow fresh rows; make the operator clean up instead.
+        raise SystemExit(
+            f"refusing to merge {fig}: shard files from different shard counts "
+            f"{sorted(by_count)} coexist in {out_dir}; delete the stale set"
+        )
+    (count, shard_files), = by_count.items()
+    rows = merge_shard_reports(
+        [load_report_rows(f) for f in shard_files],
+        box=Box.from_dict(FIGURES[fig]),
+        platforms=platforms,
+    )
+    (out_dir / f"{fig}.csv").write_text(to_csv(rows))
+    return len(rows)
 
 
 def main(argv=None) -> int:
@@ -50,6 +88,18 @@ def main(argv=None) -> int:
         help="execution platforms to sweep (e.g. cpu-host dpu-sim)",
     )
     p.add_argument("--pool", choices=("thread", "process"), default="thread")
+    p.add_argument(
+        "--shard", default=None, metavar="I/N",
+        help="run only consistent-hash shard I of N of every figure",
+    )
+    p.add_argument(
+        "--merge", action="store_true",
+        help="merge existing per-figure shard CSVs into <figure>.csv and exit",
+    )
+    p.add_argument(
+        "--remote", default=None, metavar="HOST:PORT",
+        help="dispatch unit execution to a repro.core.remote worker",
+    )
     p.add_argument("--no-cache", action="store_true", help="remeasure everything")
     p.add_argument("--cache-file", default=None, help="cache path (default <out>/cache.json)")
     p.add_argument("--out", default=str(RESULTS))
@@ -71,6 +121,13 @@ def main(argv=None) -> int:
     if unknown:
         p.error(f"unknown figures {sorted(unknown)}; known: {sorted(FIGURES)}")
 
+    out_dir = Path(args.out)
+    if args.merge:
+        for fig in figs:
+            n = merge_figure(fig, out_dir, args.platforms)
+            print(f"# {fig}: merged {n} rows", file=sys.stderr)
+        return 0
+
     from repro.core.cache import ResultCache
     from repro.core.executor import SweepExecutor
     from repro.core.platform import get_platform
@@ -81,7 +138,19 @@ def main(argv=None) -> int:
     except KeyError as e:
         p.error(str(e.args[0]))
 
-    out_dir = Path(args.out)
+    shard = None
+    if args.shard:
+        from repro.core.shard import ShardSpec
+
+        try:
+            shard = ShardSpec.parse(args.shard)
+        except ValueError as e:
+            p.error(str(e))
+    if args.remote:
+        from repro.core import remote as remote_mod
+
+        if not remote_mod.wait_ready(args.remote):
+            p.error(f"remote worker {args.remote} is not answering")
     cache = None
     if not args.no_cache:
         cache = ResultCache(args.cache_file or out_dir / "cache.json")
@@ -92,6 +161,7 @@ def main(argv=None) -> int:
         warmup=args.warmup,
         cache=cache,
         pool=args.pool,
+        remote=args.remote,
     )
     all_errors = []
     total_cached = total_tests = 0
@@ -99,7 +169,7 @@ def main(argv=None) -> int:
     t_start = time.time()
     for fig in figs:
         t0 = time.time()
-        res = run_figure(fig, executor, out_dir)
+        res = run_figure(fig, executor, out_dir, shard=shard)
         all_errors.extend({**e, "figure": fig} for e in res.errors)
         total_cached += res.stats.cached
         total_tests += res.stats.total

@@ -2,8 +2,16 @@ from repro.core.box import Box, TaskSpec
 from repro.core.cache import ResultCache, cache_key
 from repro.core.executor import SweepExecutor, SweepResult, SweepStats
 from repro.core.metrics import Samples, compute_metrics, known_metrics
-from repro.core.platform import Platform, get_platform, known_platforms, register_platform
+from repro.core.platform import (
+    Platform,
+    get_platform,
+    known_platforms,
+    register_platform,
+    remote_platform,
+)
+from repro.core.report import merge_shard_reports
 from repro.core.runner import Runner, RunnerResult
+from repro.core.shard import ShardSpec, partition, shard_of
 from repro.core.task import Task, TaskContext, TestResult
 
 __all__ = [
@@ -12,4 +20,6 @@ __all__ = [
     "SweepExecutor", "SweepResult", "SweepStats",
     "ResultCache", "cache_key",
     "Platform", "get_platform", "known_platforms", "register_platform",
+    "remote_platform",
+    "ShardSpec", "shard_of", "partition", "merge_shard_reports",
 ]

@@ -4,7 +4,8 @@ A sweep over (task x params x platform) is expensive and — for fixed seed
 data and iteration counts — deterministic enough to reuse.  The cache maps a
 content key over everything that identifies a measurement::
 
-    sha256(task, params, platform identity, iters, warmup, metrics)
+    sha256(task, params, platform identity, iters, warmup, metrics,
+           task-source fingerprint)
 
 to the computed metrics dict of the finished test.  Storage is one JSON
 file (atomic tmp+rename writes) so the cache survives crashes, diffs
@@ -33,6 +34,7 @@ def cache_key(
     iters: int,
     warmup: int,
     metrics: tuple[str, ...],
+    fingerprint: str = "",
 ) -> str:
     ident = {
         "task": task,
@@ -41,6 +43,9 @@ def cache_key(
         "iters": iters,
         "warmup": warmup,
         "metrics": list(metrics),
+        # Source fingerprint of the task implementation: cached metrics are
+        # only valid while the measuring code is unchanged (Task.source_fingerprint).
+        "fingerprint": fingerprint,
     }
     blob = json.dumps(ident, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()

@@ -17,11 +17,20 @@ on (ROADMAP: sharding, batching, async, caching, multi-backend):
     named :mod:`repro.core.platform` backends; rows then carry a
     ``platform`` column and feed ``report.speedup_table``.
   * **Result caching** — with a :class:`repro.core.cache.ResultCache`,
-    already-measured (task, params, platform, iters) points short-circuit
-    into cached metrics; ``SweepStats.cached`` reports how many.
+    already-measured (task, params, platform, iters, task-source) points
+    short-circuit into cached metrics; ``SweepStats.cached`` reports how many.
+  * **Sharding** — ``run_box(box, shard=ShardSpec(i, n))`` executes only the
+    i-th consistent-hash slice of the expanded grid (see
+    :mod:`repro.core.shard`); shard reports reassemble with
+    ``report.merge_shard_reports``.  Cache keys are shard-independent, so
+    shards dedupe against each other through a shared cache.
+  * **Remote dispatch** — a ``kind="remote"`` platform (or an executor-wide
+    ``remote="host:port"`` endpoint) ships units to a
+    :mod:`repro.core.remote` worker instead of running them locally.
 
-Process-pool caveat: tests registered only in-process (``_register_for_tests``,
-``load_plugin_dir``) are invisible to spawned children; use threads for those.
+Process-pool note: tasks registered only via ``_register_for_tests`` are
+invisible to spawned children; plugin directories ARE threaded into the
+child bootstrap, so ``load_plugin_dir`` tasks work under ``pool="process"``.
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ from repro.core import registry, report
 from repro.core.box import Box
 from repro.core.metrics import compute_metrics
 from repro.core.platform import Platform, resolve
+from repro.core.shard import ShardSpec, shard_of
 from repro.core.task import TaskContext, TestResult
 
 
@@ -66,7 +76,12 @@ class SweepResult:
 
 @dataclass
 class _Unit:
-    """One concrete test: a point of the (platform x task x params) grid."""
+    """One concrete test: a point of the (platform x task x params) grid.
+
+    ``ckey`` is always computed: it is both the result-cache key and the
+    consistent-hash shard key, so shard assignment and cache identity agree
+    by construction.
+    """
 
     index: int
     platform: Platform
@@ -86,6 +101,7 @@ class SweepExecutor:
         fail_fast: bool = False,
         cache: cache_mod.ResultCache | None = None,
         pool: str = "thread",
+        remote: str | None = None,
     ):
         if pool not in ("thread", "process"):
             raise ValueError(f"pool must be 'thread' or 'process', got {pool!r}")
@@ -99,6 +115,9 @@ class SweepExecutor:
         self.fail_fast = fail_fast
         self.cache = cache
         self.pool = pool
+        # Endpoint of a repro.core.remote worker; when set, EVERY unit is
+        # dispatched there (per-platform remotes use kind="remote" instead).
+        self.remote = remote
         # Contexts persist across boxes so prepare is shared; cleaned explicitly.
         self._contexts: dict[tuple[str, str], TaskContext] = {}
         self._prep: dict[tuple[str, str], dict[str, Any]] = {}
@@ -142,6 +161,34 @@ class SweepExecutor:
                 ) from state["error"]
 
     # -- unit execution ----------------------------------------------------
+    def _remote_endpoint(self, unit: _Unit) -> str | None:
+        """Worker endpoint for this unit, or None for local execution."""
+        if self.remote is not None:
+            return self.remote
+        if unit.platform.kind == "remote":
+            endpoint = unit.platform.flags.get("endpoint")
+            if not endpoint:
+                raise ValueError(
+                    f"remote platform {unit.platform.name!r} has no 'endpoint' flag"
+                )
+            return str(endpoint)
+        return None
+
+    def _run_unit_remote(self, unit: _Unit, endpoint: str) -> TestResult:
+        """Ship one unit to a worker; prepare/run/transform happen there."""
+        from repro.core import remote as remote_mod
+
+        resp = remote_mod.get_transport(endpoint).run_unit(
+            _unit_payload(unit, self, want_samples=True)
+        )
+        vals = {k: float(v) for k, v in resp["metrics"].items()}
+        ctx = self._context(unit.platform, unit.task_name)
+        with self._lock:
+            ctx.log.append(
+                {"task": unit.task_name, "params": dict(unit.params), "metrics": dict(vals)}
+            )
+        return TestResult(unit.task_name, dict(unit.params), vals, platform=unit.platform.name)
+
     def _run_unit(self, unit: _Unit) -> tuple[TestResult, bool]:
         """Execute (or cache-hit) one unit; returns (result, was_cached)."""
         if self.cache is not None and unit.ckey is not None:
@@ -153,6 +200,18 @@ class SweepExecutor:
                     ),
                     True,
                 )
+        endpoint = self._remote_endpoint(unit)
+        if endpoint is not None:
+            result = self._run_unit_remote(unit, endpoint)
+            if self.cache is not None and unit.ckey is not None:
+                self.cache.put(
+                    unit.ckey,
+                    result.metrics,
+                    task=unit.task_name,
+                    params=unit.params,
+                    platform=unit.platform.name,
+                )
+            return result, False
         task = registry.get(unit.task_name)
         ctx = self._context(unit.platform, unit.task_name)
         self._ensure_prepared(task, unit.platform, ctx)
@@ -174,27 +233,48 @@ class SweepExecutor:
         return TestResult(task.name, dict(unit.params), vals, platform=unit.platform.name), False
 
     # -- box execution -----------------------------------------------------
-    def _expand_units(self, box: Box, platforms: list[Platform]) -> list[_Unit]:
+    def _expand_units(
+        self, box: Box, platforms: list[Platform], shard: ShardSpec | None = None
+    ) -> list[_Unit]:
         units: list[_Unit] = []
         # Validate the whole box before anything executes.
+        fingerprints: dict[str, str] = {}
         for spec in box.tasks:
             task = registry.get(spec.task)
             task.validate_params(spec.params)
+            fingerprints.setdefault(task.name, task.source_fingerprint())
         idx = 0
         for platform in platforms:
             for spec in box.tasks:
                 task = registry.get(spec.task)
                 metrics = tuple(spec.metrics) or tuple(task.default_metrics)
                 for params in spec.expand():
-                    ckey = None
-                    if self.cache is not None:
+                    skey = cache_mod.cache_key(
+                        task.name,
+                        params,
+                        platform.cache_identity(),
+                        self.iters,
+                        self.warmup,
+                        metrics,
+                        fingerprint=fingerprints[task.name],
+                    )
+                    # Shard assignment must NOT see the --remote endpoint:
+                    # runners pointing different shards at different workers
+                    # still have to cover the grid between them.  The cache
+                    # key MUST see it: a remote host's measurement is not the
+                    # local platform's measurement.
+                    if shard is not None and shard_of(skey, shard.count) != shard.index:
+                        continue
+                    ckey = skey
+                    if self.remote is not None:
                         ckey = cache_mod.cache_key(
                             task.name,
                             params,
-                            platform.cache_identity(),
+                            {**platform.cache_identity(), "remote": self.remote},
                             self.iters,
                             self.warmup,
                             metrics,
+                            fingerprint=fingerprints[task.name],
                         )
                     units.append(_Unit(idx, platform, task.name, params, metrics, ckey))
                     idx += 1
@@ -206,9 +286,9 @@ class SweepExecutor:
             return [resolve(p) for p in box.platforms]
         return self.platforms
 
-    def run_box(self, box: Box) -> SweepResult:
+    def run_box(self, box: Box, shard: ShardSpec | None = None) -> SweepResult:
         platforms = self._box_platforms(box)
-        units = self._expand_units(box, platforms)
+        units = self._expand_units(box, platforms, shard)
         out = SweepResult(box=box.name, platforms=[p.name for p in platforms])
         out.stats.total = len(units)
         ordered: list[TestResult | None] = [None] * len(units)
@@ -225,6 +305,12 @@ class SweepExecutor:
                 }
             )
 
+        # Remote units are network-bound and must not re-execute locally in
+        # a spawned child, so remote dispatch always goes through the
+        # in-process (sequential/thread) paths.
+        any_remote = self.remote is not None or any(
+            u.platform.kind == "remote" for u in units
+        )
         try:
             if self.workers == 1 or len(units) <= 1:
                 for unit in units:
@@ -237,7 +323,7 @@ class SweepExecutor:
                         continue
                     ordered[unit.index] = result
                     out.stats.cached += was_cached
-            elif self.pool == "thread":
+            elif self.pool == "thread" or any_remote:
                 with ThreadPoolExecutor(max_workers=self.workers) as pool:
                     pairs = [(unit, pool.submit(self._run_unit, unit)) for unit in units]
                     for unit, fut in pairs:
@@ -374,21 +460,40 @@ class SweepExecutor:
 _CHILD_CONTEXTS: dict[tuple[str, str], TaskContext] = {}
 
 
-def _unit_payload(unit: _Unit, ex: SweepExecutor) -> dict[str, Any]:
+def _unit_payload(unit: _Unit, ex: SweepExecutor, want_samples: bool = False) -> dict[str, Any]:
     import dataclasses
 
+    platform = dataclasses.asdict(unit.platform)
+    # The worker executes locally: strip the dispatch endpoint so a remote
+    # platform measures as its base identity on the worker host.
+    if platform.get("kind") == "remote":
+        platform = {
+            **platform,
+            "kind": "host",
+            "flags": {k: v for k, v in platform["flags"].items() if k != "endpoint"},
+        }
     return {
         "task": unit.task_name,
         "params": unit.params,
         "metrics": list(unit.metrics),
-        "platform": dataclasses.asdict(unit.platform),
+        "platform": platform,
         "iters": ex.iters,
         "warmup": ex.warmup,
+        # Spawned children / remote workers start from a fresh interpreter:
+        # hand over the plugin dirs loaded in this process so directory
+        # plugin tasks resolve there too.
+        "plugin_dirs": registry.plugin_dirs(),
+        # Raw samples are only worth serializing back over a transport that
+        # wants to stream them; the process pool reads metrics alone.
+        "want_samples": want_samples,
     }
 
 
 def _subprocess_run_unit(payload: dict[str, Any]) -> dict[str, Any]:
+    import dataclasses
+
     try:
+        registry.load_plugin_dirs(payload.get("plugin_dirs", ()))
         platform = Platform(**payload["platform"])
         task = registry.get(payload["task"])
         key = (platform.name, task.name)
@@ -404,7 +509,12 @@ def _subprocess_run_unit(payload: dict[str, Any]) -> dict[str, Any]:
         samples = task.run(ctx, dict(payload["params"]))
         samples = platform.transform_samples(samples)
         vals = compute_metrics(samples, tuple(payload["metrics"]))
-        return {"ok": True, "metrics": vals}
+        out = {"ok": True, "metrics": vals}
+        if payload.get("want_samples"):
+            # Raw samples ride along so transports can stream the measurement
+            # itself, not just the aggregates (repro.core.remote.samples_from_wire).
+            out["samples"] = dataclasses.asdict(samples)
+        return out
     except Exception as e:  # noqa: BLE001 - serialize the failure for the parent
         return {"ok": False, "error": f"{type(e).__name__}: {e}", "traceback": traceback.format_exc()}
 

@@ -37,9 +37,11 @@ from repro.core.metrics import Samples
 @dataclass(frozen=True)
 class Platform:
     name: str
-    kind: str = "host"  # host | sim | remote (future)
+    kind: str = "host"  # host | sim | remote
     time_scale: float = 1.0  # sim targets: dilate measured times
     flags: dict[str, Any] = field(default_factory=dict)
+    # kind == "remote": flags["endpoint"] names the worker (host:port) this
+    # platform's units are dispatched to (see repro.core.remote).
 
     def describe(self) -> dict[str, Any]:
         """The dict that lands in ``TaskContext.platform``."""
@@ -125,6 +127,9 @@ def resolve(spec: "Platform | str | Mapping[str, Any] | None") -> Platform:
 
     Legacy dicts (``{"name": ..., **flags}``) keep working: a registered
     name resolves to its platform with the extra keys merged into flags.
+    The dataclass scalars ``kind`` and ``time_scale`` are honoured as
+    fields (not flags), so a box can declare e.g.
+    ``{"name": "bf2", "kind": "remote", "endpoint": "10.0.0.2:7177"}``.
     """
     if spec is None:
         return get_platform("default")
@@ -134,8 +139,27 @@ def resolve(spec: "Platform | str | Mapping[str, Any] | None") -> Platform:
         return get_platform(spec)
     d = dict(spec)
     name = d.pop("name", "default")
+    scalars = {k: d.pop(k) for k in ("kind", "time_scale") if k in d}
     _load_wiring()
     base = _PLATFORMS.get(name, Platform(name=name))
     if d:
         base = dataclasses.replace(base, flags={**base.flags, **d})
+    if scalars:
+        base = dataclasses.replace(base, **scalars)
     return base
+
+
+def remote_platform(
+    endpoint: str, base: "Platform | str" = "cpu-host", name: str | None = None
+) -> Platform:
+    """A remote variant of ``base``: same capability flags, units dispatched
+    to the worker at ``endpoint``.  The endpoint lands in flags, hence in
+    ``cache_identity()`` — a remote measurement never aliases a local one.
+    """
+    b = resolve(base)
+    return dataclasses.replace(
+        b,
+        name=name or f"{b.name}@{endpoint}",
+        kind="remote",
+        flags={**b.flags, "endpoint": endpoint},
+    )

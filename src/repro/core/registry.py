@@ -13,6 +13,7 @@ forms (paper §3.2):
 """
 from __future__ import annotations
 
+import hashlib
 import importlib
 import json
 import runpy
@@ -23,6 +24,11 @@ from repro.core.metrics import Samples
 from repro.core.task import Task, TaskContext
 
 _REGISTRY: dict[str, Task] = {}
+# Plugin directories loaded into THIS process, in load order.  Spawned
+# process-pool children and remote workers start from a fresh interpreter
+# that only sees importable built-ins; the executor threads this list into
+# their bootstrap payload so boxes referencing plugin tasks work there too.
+_PLUGIN_DIRS: list[str] = []
 
 
 def register(task_cls: type[Task]) -> type[Task]:
@@ -118,12 +124,26 @@ class DirectoryPluginTask(Task):
             fn(ctx, {})
         super().clean(ctx)
 
+    def source_fingerprint(self) -> str:
+        """Hash task.json + every phase script; editing any of them must
+        invalidate cached results (scripts are re-read on every run)."""
+        h = hashlib.sha256()
+        for name in ("task.json", "prepare.py", "run.py", "report.py", "clean.py"):
+            p = self.root / name
+            if p.is_file():
+                h.update(name.encode())
+                h.update(p.read_bytes())
+        return h.hexdigest()[:16]
+
 
 def load_plugin_dir(root: str | Path) -> Task:
     root = Path(root)
     spec = json.loads((root / "task.json").read_text())
     task = DirectoryPluginTask(root, spec)
     _REGISTRY[task.name] = task
+    canon = str(root.resolve())
+    if canon not in _PLUGIN_DIRS:
+        _PLUGIN_DIRS.append(canon)
     return task
 
 
@@ -134,6 +154,27 @@ def load_plugin_tree(root: str | Path) -> list[Task]:
         if (p / "task.json").exists():
             out.append(load_plugin_dir(p))
     return out
+
+
+def plugin_dirs() -> list[str]:
+    """Plugin directories loaded so far (for child/worker bootstrap)."""
+    return list(_PLUGIN_DIRS)
+
+
+def load_plugin_dirs(roots: Iterable[str]) -> None:
+    """Bootstrap helper: load plugin dirs handed over by a parent.
+
+    Already-loaded dirs are skipped (this runs per unit in process-pool
+    children and per request in remote workers; scripts are re-read at run
+    time regardless).  Missing paths are skipped too — a remote worker on
+    another host may carry its own copies (``--plugin-dir``) instead of
+    sharing the parent's filesystem; a task that stays unknown still fails
+    with a clear error.
+    """
+    for root in roots:
+        canon = str(Path(root).resolve())
+        if canon not in _PLUGIN_DIRS and Path(canon).is_dir():
+            load_plugin_dir(canon)
 
 
 def _register_for_tests(task: Task) -> None:

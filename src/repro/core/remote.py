@@ -1,0 +1,347 @@
+"""Remote platform transport: dispatch sweep units to a worker endpoint.
+
+This is the transport the ROADMAP's "remote executor backend" called for:
+a ``kind="remote"`` :class:`~repro.core.platform.Platform` (or an
+executor-wide ``remote=`` endpoint) serializes each expanded unit as a JSON
+payload, ships it to a worker, and streams the measured ``Samples`` +
+computed metrics back.  The worker is this same module run as::
+
+    python -m repro.core.remote worker --host 127.0.0.1 --port 0 \
+        [--plugin-dir DIR ...]
+
+It binds a TCP socket (port 0 = ephemeral; the chosen endpoint is announced
+as ``listening on HOST:PORT`` on stdout) and executes requests through the
+exact code path the process pool uses (``executor._subprocess_run_unit``),
+so local, process-pool, and remote execution are behaviourally identical.
+
+Deployment is a config change, not a code change: a loopback subprocess
+(:class:`LocalWorker`, used by tests/CI), a second host, or a BlueField DPU
+reached over SSH all look like ``host:port`` once the worker runs there,
+e.g. ``ssh bf2 python -m repro.core.remote worker --port 7177`` plus an SSH
+tunnel, or the worker listening on the DPU's management interface.
+
+Wire format: newline-delimited JSON, request/response, many requests per
+connection.  Ops: ``{"op": "ping"}`` -> liveness + known tasks;
+``{"op": "run", "payload": {...}}`` -> ``{"ok": true, "metrics": {...},
+"samples": {...}}`` or ``{"ok": false, "error": ..., "traceback": ...}``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import socketserver
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+from typing import Any
+
+from repro.core import registry
+from repro.core.metrics import Samples
+
+CONNECT_TIMEOUT_S = 10.0
+REQUEST_TIMEOUT_S = 600.0  # one unit may legitimately measure for minutes
+
+
+class RemoteExecutionError(RuntimeError):
+    """A worker reported failure (or the transport could not reach one)."""
+
+
+def parse_endpoint(endpoint: str) -> tuple[str, int]:
+    """``"host:port"`` / ``"tcp://host:port"`` -> (host, port)."""
+    ep = endpoint.removeprefix("tcp://")
+    host, _, port = ep.rpartition(":")
+    if not port.isdigit():
+        raise ValueError(f"bad endpoint {endpoint!r}; expected host:port")
+    return host or "127.0.0.1", int(port)
+
+
+def samples_from_wire(d: dict[str, Any]) -> Samples:
+    """Reconstruct the worker-measured Samples from its wire dict."""
+    return Samples(
+        times_s=[float(t) for t in d.get("times_s", [])],
+        ops_per_iter=float(d.get("ops_per_iter", 0.0)),
+        bytes_per_iter=float(d.get("bytes_per_iter", 0.0)),
+        items_per_iter=float(d.get("items_per_iter", 0.0)),
+        extra={k: float(v) for k, v in d.get("extra", {}).items()},
+    )
+
+
+# -- worker (server) ---------------------------------------------------------
+class _Handler(socketserver.StreamRequestHandler):
+    def handle(self) -> None:
+        for line in self.rfile:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                req = json.loads(line)
+            except json.JSONDecodeError as e:
+                resp = {"ok": False, "error": f"bad request JSON: {e}"}
+            else:
+                resp = self.server.dispatch(req)  # type: ignore[attr-defined]
+            self.wfile.write((json.dumps(resp, default=str) + "\n").encode())
+            self.wfile.flush()
+
+
+class WorkerServer(socketserver.ThreadingTCPServer):
+    """Executes unit payloads for remote runners.
+
+    Units run under a lock: ``_subprocess_run_unit`` keys shared prepared
+    contexts per (platform, task), and serializing requests is the simplest
+    sound prepare-barrier for a single worker.  Scale-out is more workers,
+    not more threads per worker — measurement boxes want an unloaded host
+    anyway.
+    """
+
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, plugin_dirs: Any = ()):
+        super().__init__((host, port), _Handler)
+        self._run_lock = threading.Lock()
+        registry.load_plugin_dirs(str(d) for d in plugin_dirs)
+
+    @property
+    def endpoint(self) -> str:
+        host, port = self.server_address[:2]
+        return f"{host}:{port}"
+
+    def dispatch(self, req: dict[str, Any]) -> dict[str, Any]:
+        from repro.core import executor as executor_mod
+
+        op = req.get("op")
+        if op == "ping":
+            return {"ok": True, "op": "ping", "pid": os.getpid()}
+        if op == "run":
+            # Payload plugin dirs load inside _subprocess_run_unit's try, so
+            # a broken plugin serializes back as an error response instead of
+            # killing the connection.
+            with self._run_lock:
+                return executor_mod._subprocess_run_unit(req.get("payload") or {})
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+    def serve_in_thread(self) -> threading.Thread:
+        t = threading.Thread(target=self.serve_forever, daemon=True)
+        t.start()
+        return t
+
+
+# -- transport (client) ------------------------------------------------------
+class RemoteTransport:
+    """Client for one worker endpoint.  Thread-safe; one pooled connection.
+
+    Worker-side execution is serialized anyway (see WorkerServer), so a
+    single multiplexed connection costs no parallelism.
+    """
+
+    def __init__(self, endpoint: str):
+        self.endpoint = endpoint
+        self.host, self.port = parse_endpoint(endpoint)
+        self._lock = threading.Lock()
+        self._sock: socket.socket | None = None
+        self._rfile = None
+
+    def _connect(self) -> None:
+        sock = socket.create_connection((self.host, self.port), timeout=CONNECT_TIMEOUT_S)
+        sock.settimeout(REQUEST_TIMEOUT_S)
+        self._sock = sock
+        self._rfile = sock.makefile("rb")
+
+    def close(self) -> None:
+        with self._lock:
+            if self._sock is not None:
+                try:
+                    self._sock.close()
+                finally:
+                    self._sock = None
+                    self._rfile = None
+
+    def request(self, obj: dict[str, Any]) -> dict[str, Any]:
+        data = (json.dumps(obj, default=str) + "\n").encode()
+        with self._lock:
+            # One reconnect: a worker restart between sweeps looks like a
+            # dead pooled connection on first use.
+            for attempt in (0, 1):
+                try:
+                    if self._sock is None:
+                        self._connect()
+                    self._sock.sendall(data)
+                    line = self._rfile.readline()
+                    if not line:
+                        raise ConnectionError("worker closed connection")
+                    return json.loads(line)
+                except (OSError, json.JSONDecodeError) as e:
+                    self._sock = None
+                    self._rfile = None
+                    if attempt:
+                        raise RemoteExecutionError(
+                            f"worker {self.endpoint} unreachable: {e}"
+                        ) from e
+        raise AssertionError("unreachable")
+
+    def ping(self) -> bool:
+        try:
+            return bool(self.request({"op": "ping"}).get("ok"))
+        except RemoteExecutionError:
+            return False
+
+    def run_unit(self, payload: dict[str, Any]) -> dict[str, Any]:
+        resp = self.request({"op": "run", "payload": payload})
+        if not resp.get("ok"):
+            raise RemoteExecutionError(
+                f"worker {self.endpoint} failed: {resp.get('error', 'unknown error')}"
+            )
+        return resp
+
+
+_TRANSPORTS: dict[str, RemoteTransport] = {}
+_transports_lock = threading.Lock()
+
+
+def get_transport(endpoint: str) -> RemoteTransport:
+    """Process-wide transport pool: one client per endpoint."""
+    with _transports_lock:
+        t = _TRANSPORTS.get(endpoint)
+        if t is None:
+            t = _TRANSPORTS[endpoint] = RemoteTransport(endpoint)
+        return t
+
+
+def wait_ready(endpoint: str, timeout: float = 30.0) -> bool:
+    """Poll until the worker answers ping (workers announce asynchronously)."""
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if get_transport(endpoint).ping():
+            return True
+        time.sleep(0.1)
+    return False
+
+
+# -- loopback worker subprocess ----------------------------------------------
+class LocalWorker:
+    """Context manager: spawn ``repro.core.remote worker`` on loopback.
+
+    The zero-config path for tests/CI and the template for real deployment —
+    point the spawn command at ``ssh <dpu> python -m repro.core.remote
+    worker`` and nothing else changes.
+    """
+
+    def __init__(self, plugin_dirs: Any = (), startup_timeout: float = 60.0):
+        self.plugin_dirs = [str(d) for d in plugin_dirs]
+        self.startup_timeout = startup_timeout
+        self.endpoint: str | None = None
+        self._proc: subprocess.Popen | None = None
+        self._announced = threading.Event()
+
+    def _pump_stdout(self, q) -> None:
+        # Runs for the worker's lifetime: keeps draining the pipe after the
+        # announce so a chatty worker can never block on a full pipe buffer.
+        for line in self._proc.stdout:
+            if not self._announced.is_set():
+                q.put(line)
+        q.put(None)
+
+    def __enter__(self) -> "LocalWorker":
+        import queue
+
+        cmd = [sys.executable, "-m", "repro.core.remote", "worker", "--port", "0"]
+        for d in self.plugin_dirs:
+            cmd += ["--plugin-dir", d]
+        env = dict(os.environ)
+        # The child must import repro even when the parent runs from a
+        # source tree without `pip install -e .`.
+        src_root = str(Path(__file__).resolve().parents[2])
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in (src_root, env.get("PYTHONPATH")) if p
+        )
+        self._proc = subprocess.Popen(
+            cmd, stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env
+        )
+        # Read announce lines through a thread so the startup timeout holds
+        # even when the worker hangs without printing or exiting.
+        q: "queue.Queue[str | None]" = queue.Queue()
+        threading.Thread(target=self._pump_stdout, args=(q,), daemon=True).start()
+        deadline = time.monotonic() + self.startup_timeout
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                self._proc.kill()
+                raise TimeoutError("worker did not announce its endpoint in time")
+            try:
+                line = q.get(timeout=min(remaining, 0.5))
+            except queue.Empty:
+                continue
+            if line is None:
+                raise RuntimeError(f"worker died on startup (rc={self._proc.wait()})")
+            if line.startswith("listening on "):
+                self.endpoint = line.split("listening on ", 1)[1].strip()
+                self._announced.set()
+                return self
+
+    def __exit__(self, *exc) -> None:
+        if self.endpoint:
+            with _transports_lock:
+                t = _TRANSPORTS.pop(self.endpoint, None)
+            if t is not None:
+                t.close()
+        if self._proc is not None:
+            self._proc.terminate()
+            try:
+                self._proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self._proc.kill()
+
+
+# -- CLI ---------------------------------------------------------------------
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="repro.core.remote", description="dpBento remote sweep worker"
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+    w = sub.add_parser("worker", help="serve unit payloads over TCP")
+    w.add_argument("--host", default="127.0.0.1")
+    w.add_argument("--port", type=int, default=0, help="0 = ephemeral")
+    w.add_argument(
+        "--plugin-dir", action="append", default=[], metavar="DIR",
+        help="plugin task directory to preload (repeatable)",
+    )
+    pg = sub.add_parser("ping", help="check a worker endpoint")
+    pg.add_argument("endpoint")
+    pg.add_argument("--timeout", type=float, default=10.0)
+    args = p.parse_args(argv)
+
+    if args.cmd == "worker":
+        server = WorkerServer(args.host, args.port, plugin_dirs=args.plugin_dir)
+        print(f"listening on {server.endpoint}", flush=True)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.server_close()
+        return 0
+    if args.cmd == "ping":
+        ok = wait_ready(args.endpoint, timeout=args.timeout)
+        print("ok" if ok else "unreachable")
+        return 0 if ok else 1
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
+
+
+__all__ = [
+    "RemoteExecutionError",
+    "RemoteTransport",
+    "WorkerServer",
+    "LocalWorker",
+    "get_transport",
+    "wait_ready",
+    "parse_endpoint",
+    "samples_from_wire",
+]

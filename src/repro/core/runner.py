@@ -13,10 +13,16 @@ expanded tests onto a pool, ``platforms`` sweeps several execution backends,
 and an optional :class:`repro.core.cache.ResultCache` makes re-runs
 incremental.  The CLI exposes all three (``--workers``, ``--platforms``,
 ``--cache``/``--no-cache``).
+
+Distributed sweeps compose three more flags: ``--shard i/n`` executes only
+one consistent-hash slice of the box, ``--merge SHARD...`` reassembles shard
+reports into the canonical unsharded table, and ``--remote host:port``
+dispatches unit execution to a ``repro.core.remote`` worker.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -26,6 +32,7 @@ from repro.core import registry, report
 from repro.core.box import Box
 from repro.core.cache import ResultCache
 from repro.core.executor import SweepExecutor, SweepStats
+from repro.core.shard import ShardSpec
 from repro.core.task import TestResult
 
 
@@ -56,6 +63,7 @@ class Runner:
         platforms: Sequence[str] | None = None,
         cache: ResultCache | None = None,
         pool: str = "thread",
+        remote: str | None = None,
     ):
         if platforms is not None and platform is not None:
             raise ValueError("pass either platform= or platforms=, not both")
@@ -70,6 +78,7 @@ class Runner:
             fail_fast=fail_fast,
             cache=cache,
             pool=pool,
+            remote=remote,
         )
         self.platform = self._exec.platforms[0].describe()
         self.iters = iters
@@ -80,8 +89,8 @@ class Runner:
     def executor(self) -> SweepExecutor:
         return self._exec
 
-    def run_box(self, box: Box) -> RunnerResult:
-        sweep = self._exec.run_box(box)
+    def run_box(self, box: Box, shard: ShardSpec | None = None) -> RunnerResult:
+        sweep = self._exec.run_box(box, shard=shard)
         name = sweep.platforms[0] if len(sweep.platforms) == 1 else ",".join(sweep.platforms)
         return RunnerResult(
             box=sweep.box,
@@ -97,9 +106,25 @@ class Runner:
         self._exec.clean(task_name)
 
 
+def _emit(text: str, out: str | None) -> None:
+    if out:
+        Path(out).write_text(text)
+    else:
+        sys.stdout.write(text)
+
+
+def _format_rows(rows: list[dict[str, Any]], fmt: str, box: str = "") -> str:
+    if fmt == "md":
+        return report.to_markdown(rows)
+    if fmt == "json":
+        return json.dumps({"box": box, "rows": rows}, indent=1, default=str) + "\n"
+    return report.to_csv(rows)
+
+
 def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(prog="repro.core.runner", description="Run a dpBento box")
-    p.add_argument("box", nargs="?", help="path to box JSON")
+    p.add_argument("box_pos", nargs="?", metavar="box", help="path to box JSON")
+    p.add_argument("--box", dest="box_opt", default=None, help="path to box JSON (same as the positional)")
     p.add_argument("--iters", type=int, default=5)
     p.add_argument("--warmup", type=int, default=2)
     p.add_argument("--workers", type=int, default=1, help="concurrent test workers")
@@ -110,12 +135,29 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--pool", choices=("thread", "process"), default="thread")
     p.add_argument("--cache", default=None, metavar="PATH", help="persistent result cache file")
     p.add_argument("--no-cache", action="store_true", help="ignore --cache / box cache")
-    p.add_argument("--format", choices=("csv", "md"), default="csv")
+    p.add_argument("--format", choices=("csv", "md", "json"), default="csv")
     p.add_argument("--out", default=None, help="write report here instead of stdout")
+    p.add_argument(
+        "--shard", default=None, metavar="I/N",
+        help="run only consistent-hash shard I of N (e.g. 0/2)",
+    )
+    p.add_argument(
+        "--merge", nargs="+", default=None, metavar="REPORT",
+        help="merge shard report files (.csv/.json) into one table and exit",
+    )
+    p.add_argument(
+        "--remote", default=None, metavar="HOST:PORT",
+        help="dispatch unit execution to a repro.core.remote worker",
+    )
+    p.add_argument(
+        "--plugin-dir", action="append", default=[], metavar="DIR",
+        help="load a directory plugin task before running (repeatable)",
+    )
     p.add_argument("--clean", action="store_true", help="clean all tasks and exit")
     p.add_argument("--list-tasks", action="store_true")
     p.add_argument("--list-platforms", action="store_true")
     args = p.parse_args(argv)
+    args.box = args.box_opt or args.box_pos
 
     if args.list_tasks:
         for name in registry.known_tasks():
@@ -135,6 +177,8 @@ def main(argv: list[str] | None = None) -> int:
             r.clean(name)
         print("cleaned all tasks")
         return 0
+    for d in args.plugin_dir:
+        registry.load_plugin_dir(d)
     if not args.box:
         p.error("box path required")
     if args.platforms:
@@ -146,6 +190,30 @@ def main(argv: list[str] | None = None) -> int:
         except KeyError as e:
             p.error(str(e.args[0]))
     box = Box.load(args.box)
+
+    if args.merge:
+        # Merge mode: no execution — reassemble shard reports in the box's
+        # canonical row order and emit one table.
+        shard_rows = [report.load_report_rows(f) for f in args.merge]
+        rows = report.merge_shard_reports(shard_rows, box=box, platforms=args.platforms)
+        _emit(_format_rows(rows, args.format, box.name), args.out)
+        print(
+            f"# merged {len(rows)} rows from {len(args.merge)} shard reports",
+            file=sys.stderr,
+        )
+        return 0
+
+    shard = None
+    if args.shard:
+        try:
+            shard = ShardSpec.parse(args.shard)
+        except ValueError as e:
+            p.error(str(e))
+    if args.remote:
+        from repro.core import remote as remote_mod
+
+        if not remote_mod.wait_ready(args.remote):
+            p.error(f"remote worker {args.remote} is not answering")
     cache = None
     if args.cache and not args.no_cache:
         cache = ResultCache(args.cache)
@@ -156,13 +224,12 @@ def main(argv: list[str] | None = None) -> int:
         platforms=args.platforms,
         cache=cache,
         pool=args.pool,
+        remote=args.remote,
     )
-    res = runner.run_box(box)
-    text = res.csv() if args.format == "csv" else res.markdown()
-    if args.out:
-        Path(args.out).write_text(text)
-    else:
-        sys.stdout.write(text)
+    res = runner.run_box(box, shard=shard)
+    _emit(_format_rows(res.rows, args.format, res.box), args.out)
+    if shard is not None:
+        print(f"# shard {shard}: {res.stats.total} units", file=sys.stderr)
     if cache is not None:
         print(f"# cached={res.stats.cached}/{res.stats.total}", file=sys.stderr)
     for err in res.errors:

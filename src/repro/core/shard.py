@@ -1,0 +1,99 @@
+"""Sweep sharding: partition a box's expanded units across runner processes.
+
+A *shard* is one slice of a box's (platform x task x params) grid, meant to
+run in its own process or on its own host; the union of all shards is the
+full sweep (ROADMAP "sweep sharding across machines").  Assignment is a
+consistent hash over each unit's cache key — the same identity the result
+cache uses — which buys three properties:
+
+  * **Deterministic** — every runner computes the same partition from the
+    box alone; no coordinator is needed.
+  * **Disjoint cover** — each unit lands on exactly one shard, so merged
+    shard reports contain every row exactly once.
+  * **Resize stability** — assignment is rendezvous (highest-random-weight)
+    hashing, so growing n shards to n+1 moves only the keys won by the new
+    shard (~1/(n+1) of them); all movers go TO the new shard.  A mostly-warm
+    result cache therefore stays mostly-warm when a host is added.
+
+``SweepExecutor.run_box(box, shard=ShardSpec(i, n))`` executes only the i-th
+slice; :func:`repro.core.report.merge_shard_reports` reassembles the rows in
+canonical (unsharded) order.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+
+@dataclass(frozen=True)
+class ShardSpec:
+    """This runner executes shard ``index`` of ``count`` total shards."""
+
+    index: int
+    count: int
+
+    def __post_init__(self) -> None:
+        if self.count < 1:
+            raise ValueError(f"shard count must be >= 1, got {self.count}")
+        if not 0 <= self.index < self.count:
+            raise ValueError(
+                f"shard index must be in [0, {self.count}), got {self.index}"
+            )
+
+    @staticmethod
+    def parse(text: str) -> "ShardSpec":
+        """Parse the CLI form ``"i/n"`` (e.g. ``--shard 0/2``)."""
+        try:
+            idx, _, cnt = text.partition("/")
+            return ShardSpec(int(idx), int(cnt))
+        except ValueError as e:
+            raise ValueError(f"bad shard spec {text!r}; expected 'i/n' like '0/2'") from e
+
+    def __str__(self) -> str:
+        return f"{self.index}/{self.count}"
+
+    def owns(self, key: str) -> bool:
+        return shard_of(key, self.count) == self.index
+
+
+def _weight(key: str, shard: int) -> int:
+    """Rendezvous weight of (key, shard); 64 bits of a keyed blake2b."""
+    h = hashlib.blake2b(f"{key}|{shard}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "big")
+
+
+def shard_of(key: str, count: int) -> int:
+    """Highest-random-weight shard for ``key`` among ``count`` shards.
+
+    Each key independently picks the shard whose (key, shard) hash is
+    largest.  Going count -> count+1 only reassigns keys whose new weight
+    beats their old maximum, i.e. an expected 1/(count+1) fraction — the
+    common "add a host" resize keeps >= count/(count+1) of keys in place.
+    """
+    if count < 1:
+        raise ValueError(f"shard count must be >= 1, got {count}")
+    if count == 1:
+        return 0
+    best, best_w = 0, -1
+    for i in range(count):
+        w = _weight(key, i)
+        if w > best_w:
+            best, best_w = i, w
+    return best
+
+
+def partition(keys: Iterable[str], count: int) -> list[list[str]]:
+    """Split ``keys`` into ``count`` buckets; bucket i is shard i's work."""
+    out: list[list[str]] = [[] for _ in range(count)]
+    for k in keys:
+        out[shard_of(k, count)].append(k)
+    return out
+
+
+def assigned(keys: Sequence[str], spec: ShardSpec) -> list[str]:
+    """The subsequence of ``keys`` owned by ``spec`` (original order kept)."""
+    return [k for k in keys if spec.owns(k)]
+
+
+__all__ = ["ShardSpec", "shard_of", "partition", "assigned"]

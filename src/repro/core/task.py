@@ -15,7 +15,11 @@ be validated before anything executes, and `default_metrics`.
 from __future__ import annotations
 
 import abc
+import hashlib
+import inspect
+import sys
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Any
 
 from repro.core.metrics import Samples, compute_metrics
@@ -78,6 +82,27 @@ class Task(abc.ABC):
         ctx.scratch.clear()
 
     # -- helpers -----------------------------------------------------------
+    def source_fingerprint(self) -> str:
+        """Content hash of the task's implementation source.
+
+        Part of the result-cache key: cached metrics are only trustworthy
+        while the code that measured them is unchanged, so editing a task
+        module must miss the cache.  Hashes the defining module's file when
+        it exists on disk (covers helpers the task calls in the same
+        module), else the class source; unknowable sources hash to "" and
+        rely on the rest of the key.
+        """
+        mod = sys.modules.get(type(self).__module__)
+        path = getattr(mod, "__file__", None)
+        try:
+            if path and Path(path).is_file():
+                blob = Path(path).read_bytes()
+            else:
+                blob = inspect.getsource(type(self)).encode()
+        except (OSError, TypeError):
+            return ""
+        return hashlib.sha256(blob).hexdigest()[:16]
+
     def validate_params(self, params: dict[str, Any]) -> None:
         unknown = set(params) - set(self.param_space)
         if unknown:

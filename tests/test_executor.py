@@ -184,6 +184,20 @@ def test_cache_key_sensitivity():
     assert cache_key(**{**base, "platform": {"name": "q"}}) != k
     assert cache_key(**{**base, "warmup": 0}) != k
     assert cache_key(**base) == k  # stable
+    # Task-source fingerprint is part of measurement identity.
+    assert cache_key(**base, fingerprint="abc123") != k
+    assert cache_key(**base, fingerprint="abc123") == cache_key(**base, fingerprint="abc123")
+
+
+def test_task_source_fingerprint_is_stable_and_nonempty(sweep_task):
+    fp = sweep_task.source_fingerprint()
+    assert fp and fp == sweep_task.source_fingerprint()
+    # Two different task classes in different modules fingerprint differently
+    # (this test module vs. a built-in task module).
+    from repro.core import registry
+
+    registry.load_builtin_tasks()
+    assert registry.get("pushdown").source_fingerprint() != fp
 
 
 # -- platform backends -------------------------------------------------------
@@ -292,6 +306,32 @@ def test_fail_fast_still_flushes_cache(tmp_path):
     # The two completed points survived the abort and are reused.
     res = SweepExecutor(cache=ResultCache(path)).run_box(box)
     assert res.stats.cached == 2 and len(res.errors) == 1
+
+
+# -- sharding at the executor level ------------------------------------------
+def test_run_box_shard_partitions_units(sweep_task):
+    from repro.core import ShardSpec, merge_shard_reports
+
+    full = SweepExecutor(workers=2).run_box(_box())
+    shards = [SweepExecutor(workers=2).run_box(_box(), shard=ShardSpec(i, 3)) for i in range(3)]
+    assert sum(s.stats.total for s in shards) == full.stats.total == 8
+    assert merge_shard_reports([s.rows for s in shards], box=_box()) == full.rows
+    # Shard partition is over the same grid regardless of worker count/pool.
+    seq = [SweepExecutor().run_box(_box(), shard=ShardSpec(i, 3)) for i in range(3)]
+    assert [s.stats.total for s in seq] == [s.stats.total for s in shards]
+
+
+def test_shard_can_be_empty_without_erroring(sweep_task):
+    from repro.core import ShardSpec
+
+    # With more shards than units at least one shard must be empty.
+    shards = [
+        SweepExecutor().run_box(_box(n_a=1), shard=ShardSpec(i, 8)) for i in range(8)
+    ]
+    totals = [s.stats.total for s in shards]
+    assert sum(totals) == 2 and 0 in totals
+    for s in shards:
+        assert not s.errors
 
 
 def test_json_box_file_platform_sweep(tmp_path, sweep_task):

@@ -1,0 +1,436 @@
+"""Executor conformance suite for distributed sweeps.
+
+Three pillars, per the sharding/remote subsystem's contract:
+
+  1. *Partition laws* — the consistent-hash shard assignment is a disjoint
+     cover of any key set, and resizing n -> n+1 shards keeps at least
+     (1 - 2/n) of keys on their shard (property tests via the
+     _hypothesis_compat shim, so they run with or without hypothesis).
+  2. *Shard conformance* — for every pool kind (sequential, thread,
+     process), the merged union of all shard runs is row-identical to the
+     unsharded run, and a shared result cache dedupes points across shards.
+  3. *Remote transport* — a loopback worker (in-process and as the real
+     ``repro.core.remote worker`` subprocess) returns rows bit-for-bit
+     equal to local execution.
+
+All sweep tests use deterministic directory-plugin tasks (fixed synthetic
+times), so equality checks are exact, and plugin tasks are resolvable in
+spawned children and worker subprocesses — which also pins the
+process-pool plugin-dir bootstrap fix.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from pathlib import Path
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    Box,
+    ResultCache,
+    ShardSpec,
+    SweepExecutor,
+    merge_shard_reports,
+    partition,
+    remote_platform,
+    shard_of,
+)
+from repro.core import registry as reg
+from repro.core import runner as runner_mod
+from repro.core.platform import resolve
+from repro.core.report import box_row_order, load_report_rows
+from repro.core.shard import assigned
+
+
+# -- fixtures ----------------------------------------------------------------
+def make_plugin(root: Path, name: str, factor: float = 1.0) -> Path:
+    """A deterministic directory-plugin task: times depend only on params."""
+    d = root / name
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "task.json").write_text(
+        json.dumps(
+            {
+                "name": name,
+                "param_space": {"a": [1, 2, 3], "b": ["x", "y"]},
+                "metrics": ["avg_latency_us", "ops_per_s"],
+            }
+        )
+    )
+    (d / "run.py").write_text(
+        "def main(ctx, params):\n"
+        f"    t = {factor} * 1e-4 * params['a'] * (2 if params['b'] == 'y' else 1)\n"
+        "    return {'times_s': [t, 2 * t], 'ops_per_iter': 100.0}\n"
+    )
+    return d
+
+
+def plugin_box(name: str, platforms=()) -> Box:
+    d = {
+        "name": f"{name}_box",
+        "tasks": [{"task": name, "params": {"a": [1, 2, 3], "b": ["x", "y"]}}],
+    }
+    if platforms:
+        d["platforms"] = list(platforms)
+    return Box.from_dict(d)
+
+
+def _keys(seed: int, n: int = 300) -> list[str]:
+    return [hashlib.sha256(f"{seed}:{i}".encode()).hexdigest() for i in range(n)]
+
+
+# -- ShardSpec ---------------------------------------------------------------
+def test_shard_spec_parse_and_validate():
+    s = ShardSpec.parse("1/3")
+    assert (s.index, s.count) == (1, 3) and str(s) == "1/3"
+    assert ShardSpec.parse("0/1") == ShardSpec(0, 1)
+    for bad in ("3/3", "-1/2", "1", "a/b", "1/0"):
+        with pytest.raises(ValueError):
+            ShardSpec.parse(bad)
+
+
+def test_shard_of_bounds_and_determinism():
+    keys = _keys(7, 50)
+    for n in (1, 2, 5, 9):
+        for k in keys:
+            i = shard_of(k, n)
+            assert 0 <= i < n
+            assert shard_of(k, n) == i  # pure function of (key, n)
+    assert all(shard_of(k, 1) == 0 for k in keys)
+    with pytest.raises(ValueError):
+        shard_of("k", 0)
+
+
+# -- partition laws (property tests) -----------------------------------------
+@settings(max_examples=25)
+@given(st.integers(min_value=1, max_value=16), st.integers(min_value=0, max_value=10**6))
+def test_partition_is_disjoint_cover(n, seed):
+    keys = _keys(seed, 60)
+    parts = partition(keys, n)
+    assert len(parts) == n
+    union = [k for part in parts for k in part]
+    assert sorted(union) == sorted(keys)  # cover, nothing duplicated or lost
+    for i, part in enumerate(parts):
+        assert all(shard_of(k, n) == i for k in part)
+    # ShardSpec.assigned agrees with the partition, preserving input order.
+    for i in range(n):
+        assert assigned(keys, ShardSpec(i, n)) == parts[i] or sorted(
+            assigned(keys, ShardSpec(i, n))
+        ) == sorted(parts[i])
+
+
+@settings(max_examples=25)
+@given(st.integers(min_value=2, max_value=12))
+def test_resize_stability(n):
+    """n -> n+1 shards: >= (1 - 2/n) of keys keep their shard, and every
+    key that moves, moves to the NEW shard (rendezvous-hash guarantee)."""
+    keys = _keys(42)
+    moved = 0
+    for k in keys:
+        before, after = shard_of(k, n), shard_of(k, n + 1)
+        if before != after:
+            moved += 1
+            assert after == n  # movers only ever go to the added shard
+    assert moved / len(keys) <= 2 / n
+
+
+# -- shard conformance across pool kinds -------------------------------------
+@pytest.mark.parametrize(
+    "pool,workers", [("thread", 1), ("thread", 4), ("process", 2)]
+)
+def test_sharded_union_matches_unsharded(tmp_path, pool, workers):
+    name = f"confplug_{pool}_{workers}"
+    make_plugin(tmp_path, name)
+    reg.load_plugin_dir(tmp_path / name)
+    box = plugin_box(name)
+
+    def ex():
+        return SweepExecutor(pool=pool, workers=workers)
+
+    full = ex().run_box(box)
+    assert not full.errors and full.stats.total == 6
+    for n in (2, 3):
+        shards = [ex().run_box(box, shard=ShardSpec(i, n)) for i in range(n)]
+        assert all(not s.errors for s in shards)
+        assert sum(s.stats.total for s in shards) == full.stats.total  # cover
+        merged = merge_shard_reports([s.rows for s in shards], box=box)
+        assert merged == full.rows  # bit-for-bit, canonical order
+
+
+def test_sharded_union_matches_unsharded_multi_platform(tmp_path):
+    make_plugin(tmp_path, "mplug")
+    reg.load_plugin_dir(tmp_path / "mplug")
+    box = plugin_box("mplug", platforms=("cpu-host", "dpu-sim"))
+    full = SweepExecutor(workers=3).run_box(box)
+    assert full.stats.total == 12 and not full.errors
+    shards = [SweepExecutor(workers=3).run_box(box, shard=ShardSpec(i, 2)) for i in range(2)]
+    merged = merge_shard_reports([s.rows for s in shards], box=box)
+    assert merged == full.rows
+    assert [r["platform"] for r in merged[:6]] == ["cpu-host"] * 6
+
+
+def test_merge_without_box_is_deterministic(tmp_path):
+    make_plugin(tmp_path, "nbplug")
+    reg.load_plugin_dir(tmp_path / "nbplug")
+    box = plugin_box("nbplug")
+    shards = [SweepExecutor().run_box(box, shard=ShardSpec(i, 2)) for i in range(2)]
+    a = merge_shard_reports([shards[0].rows, shards[1].rows])
+    b = merge_shard_reports([shards[1].rows, shards[0].rows])
+    assert a == b  # shard arrival order cannot change the merged table
+    assert sorted(map(str, a)) == sorted(
+        map(str, shards[0].rows + shards[1].rows)
+    )
+
+
+def test_box_row_order_covers_grid(tmp_path):
+    make_plugin(tmp_path, "ordplug")
+    reg.load_plugin_dir(tmp_path / "ordplug")
+    box = plugin_box("ordplug", platforms=("cpu-host", "dpu-sim"))
+    keys = box_row_order(box)
+    assert len(keys) == 12 and len(set(keys)) == 12
+    assert keys[0][0] == "cpu-host" and keys[-1][0] == "dpu-sim"
+
+
+def test_cache_dedupes_across_shards(tmp_path):
+    make_plugin(tmp_path, "cacheplug")
+    reg.load_plugin_dir(tmp_path / "cacheplug")
+    box = plugin_box("cacheplug")
+    path = tmp_path / "cache.json"
+
+    # Shards populate one shared cache...
+    for i in range(2):
+        res = SweepExecutor(cache=ResultCache(path)).run_box(box, shard=ShardSpec(i, 2))
+        assert res.stats.cached == 0 and res.stats.executed == res.stats.total
+    # ...and the unsharded run re-measures nothing: shard identity == cache identity.
+    full = SweepExecutor(cache=ResultCache(path)).run_box(box)
+    assert full.stats.cached == full.stats.total == 6
+    # Re-running one shard is fully cached too.
+    again = SweepExecutor(cache=ResultCache(path)).run_box(box, shard=ShardSpec(0, 2))
+    assert again.stats.cached == again.stats.total
+
+
+# -- cache trust: task-source fingerprint ------------------------------------
+def test_editing_task_source_misses_cache(tmp_path):
+    d = make_plugin(tmp_path, "fpplug")
+    reg.load_plugin_dir(d)
+    box = plugin_box("fpplug")
+    path = tmp_path / "cache.json"
+
+    first = SweepExecutor(cache=ResultCache(path)).run_box(box)
+    assert first.stats.cached == 0
+    warm = SweepExecutor(cache=ResultCache(path)).run_box(box)
+    assert warm.stats.cached == 6  # unchanged source -> warm
+
+    make_plugin(tmp_path, "fpplug", factor=2.0)  # edit run.py in place
+    stale = SweepExecutor(cache=ResultCache(path)).run_box(box)
+    assert stale.stats.cached == 0  # changed source -> full remeasure
+    assert stale.rows != warm.rows  # and the new code's numbers are reported
+    assert SweepExecutor(cache=ResultCache(path)).run_box(box).stats.cached == 6
+
+
+# -- process-pool plugin-dir bootstrap (regression) --------------------------
+def test_process_pool_runs_plugin_dir_tasks(tmp_path):
+    """Spawn children only see importable built-ins; the parent's plugin
+    dirs must be threaded into their bootstrap payload."""
+    make_plugin(tmp_path, "procplug")
+    reg.load_plugin_dir(tmp_path / "procplug")
+    box = plugin_box("procplug")
+    res = SweepExecutor(pool="process", workers=2).run_box(box)
+    assert not res.errors
+    assert len(res.results) == 6
+    assert res.rows == SweepExecutor().run_box(box).rows
+
+
+# -- remote transport --------------------------------------------------------
+@pytest.fixture()
+def loopback_worker(tmp_path):
+    from repro.core.remote import WorkerServer
+
+    server = WorkerServer()
+    server.serve_in_thread()
+    yield server
+    server.shutdown()
+    server.server_close()
+
+
+def test_remote_rows_match_local_bit_for_bit(tmp_path, loopback_worker):
+    make_plugin(tmp_path, "rplug")
+    reg.load_plugin_dir(tmp_path / "rplug")
+    box = plugin_box("rplug")
+    local = SweepExecutor(workers=2).run_box(box)
+    rem = SweepExecutor(workers=2, remote=loopback_worker.endpoint).run_box(box)
+    assert not rem.errors
+    assert rem.rows == local.rows
+
+
+def test_remote_platform_kind_dispatches(tmp_path, loopback_worker):
+    make_plugin(tmp_path, "rkplug")
+    reg.load_plugin_dir(tmp_path / "rkplug")
+    box = plugin_box("rkplug")
+    plat = remote_platform(loopback_worker.endpoint, base="cpu-host")
+    assert plat.kind == "remote" and plat.flags["endpoint"] == loopback_worker.endpoint
+    rem = SweepExecutor(platforms=[plat]).run_box(box)
+    local = SweepExecutor(platforms=["cpu-host"]).run_box(box)
+    assert not rem.errors and rem.rows == local.rows
+    # Declaring the same platform as a box dict also resolves to remote.
+    spec = {"name": "bf2", "kind": "remote", "endpoint": loopback_worker.endpoint}
+    assert resolve(spec).kind == "remote"
+    assert resolve(spec).flags["endpoint"] == loopback_worker.endpoint
+
+
+def test_remote_worker_streams_samples_back(tmp_path, loopback_worker):
+    from repro.core.executor import _unit_payload
+    from repro.core.remote import get_transport, samples_from_wire
+
+    make_plugin(tmp_path, "splug")
+    reg.load_plugin_dir(tmp_path / "splug")
+    ex = SweepExecutor()
+    unit = ex._expand_units(plugin_box("splug"), ex.platforms)[0]
+    transport = get_transport(loopback_worker.endpoint)
+    resp = transport.run_unit(_unit_payload(unit, ex, want_samples=True))
+    samples = samples_from_wire(resp["samples"])
+    assert samples.times_s == [1e-4, 2e-4]
+    assert samples.ops_per_iter == 100.0
+    # Without the opt-in, samples stay off the wire (and off the process
+    # pool's pickle path).
+    assert "samples" not in transport.run_unit(_unit_payload(unit, ex))
+
+
+def test_remote_error_reporting(tmp_path, loopback_worker):
+    from repro.core.platform import Platform
+    from repro.core.remote import RemoteExecutionError, get_transport
+
+    box = Box.from_dict({"name": "b", "tasks": [{"task": "no_such_task_anywhere"}]})
+    with pytest.raises(KeyError):
+        # Box validation happens locally, before any dispatch.
+        SweepExecutor(remote=loopback_worker.endpoint).run_box(box)
+
+    # A kind="remote" platform without an endpoint fails every unit loudly.
+    make_plugin(tmp_path, "neplug")
+    reg.load_plugin_dir(tmp_path / "neplug")
+    res = SweepExecutor(platforms=[Platform(name="lost", kind="remote")]).run_box(
+        plugin_box("neplug")
+    )
+    assert res.stats.errors == 6 and not res.results
+    assert all("endpoint" in e["error"] for e in res.errors)
+
+    # An unreachable worker surfaces as RemoteExecutionError, not a hang.
+    with pytest.raises(RemoteExecutionError):
+        get_transport("127.0.0.1:9").run_unit({"task": "x"})
+
+
+def test_sharded_remote_union_matches_local(tmp_path, loopback_worker):
+    """The full distributed story: shards x remote == one local run."""
+    make_plugin(tmp_path, "drplug")
+    reg.load_plugin_dir(tmp_path / "drplug")
+    box = plugin_box("drplug")
+    local = SweepExecutor().run_box(box)
+    shards = [
+        SweepExecutor(remote=loopback_worker.endpoint).run_box(box, shard=ShardSpec(i, 2))
+        for i in range(2)
+    ]
+    assert all(not s.errors for s in shards)
+    assert merge_shard_reports([s.rows for s in shards], box=box) == local.rows
+
+
+def test_remote_results_do_not_alias_local_cache(tmp_path, loopback_worker):
+    """--remote measurements are a different measurement: a shared cache
+    must keep them apart from local ones (but dedupe remote-vs-remote)."""
+    make_plugin(tmp_path, "aliasplug")
+    reg.load_plugin_dir(tmp_path / "aliasplug")
+    box = plugin_box("aliasplug")
+    path = tmp_path / "cache.json"
+    local = SweepExecutor(cache=ResultCache(path)).run_box(box)
+    assert local.stats.cached == 0
+    rem = SweepExecutor(cache=ResultCache(path), remote=loopback_worker.endpoint).run_box(box)
+    assert rem.stats.cached == 0  # remote run must NOT hit local entries
+    rem2 = SweepExecutor(cache=ResultCache(path), remote=loopback_worker.endpoint).run_box(box)
+    assert rem2.stats.cached == 6  # ...but does dedupe against itself
+    # Shard assignment ignores the endpoint: local and remote runners
+    # pointed at any workers still cover the grid identically.
+    n_local = [
+        SweepExecutor().run_box(box, shard=ShardSpec(i, 2)).stats.total for i in range(2)
+    ]
+    n_rem = [
+        SweepExecutor(remote=loopback_worker.endpoint)
+        .run_box(box, shard=ShardSpec(i, 2))
+        .stats.total
+        for i in range(2)
+    ]
+    assert n_local == n_rem
+
+
+def test_merge_keeps_legitimate_duplicate_grid_points(tmp_path):
+    """Overlapping task specs emit the same grid point twice; the merged
+    table must keep both rows, exactly like the unsharded run does."""
+    make_plugin(tmp_path, "dupplug")
+    reg.load_plugin_dir(tmp_path / "dupplug")
+    box = Box.from_dict(
+        {
+            "name": "dup_box",
+            "tasks": [
+                {"task": "dupplug", "params": {"a": [1, 2], "b": ["x"]}},
+                {"task": "dupplug", "params": {"a": [2, 3], "b": ["x"]}},
+            ],
+        }
+    )
+    full = SweepExecutor().run_box(box)
+    assert full.stats.total == 4  # a=2 appears twice, once per spec
+    shards = [SweepExecutor().run_box(box, shard=ShardSpec(i, 2)) for i in range(2)]
+    merged = merge_shard_reports([s.rows for s in shards], box=box)
+    assert merged == full.rows
+
+
+def test_worker_subprocess_round_trip(tmp_path):
+    """End-to-end through the real `python -m repro.core.remote worker`."""
+    from repro.core.remote import LocalWorker
+
+    d = make_plugin(tmp_path, "subplug")
+    reg.load_plugin_dir(d)
+    box = plugin_box("subplug")
+    local = SweepExecutor().run_box(box)
+    with LocalWorker(plugin_dirs=[d]) as w:
+        rem = SweepExecutor(remote=w.endpoint).run_box(box)
+    assert not rem.errors
+    assert rem.rows == local.rows
+
+
+def test_parse_endpoint():
+    from repro.core.remote import parse_endpoint
+
+    assert parse_endpoint("127.0.0.1:7177") == ("127.0.0.1", 7177)
+    assert parse_endpoint("tcp://bf2:9000") == ("bf2", 9000)
+    assert parse_endpoint(":8080") == ("127.0.0.1", 8080)
+    with pytest.raises(ValueError):
+        parse_endpoint("no-port")
+
+
+# -- CLI: --shard / --merge / report files -----------------------------------
+def test_runner_cli_shard_merge_matches_full_run(tmp_path):
+    d = make_plugin(tmp_path, "cliplug")
+    bf = tmp_path / "box.json"
+    bf.write_text(
+        json.dumps(
+            {
+                "name": "cli_box",
+                "tasks": [{"task": "cliplug", "params": {"a": [1, 2, 3], "b": ["x", "y"]}}],
+            }
+        )
+    )
+    common = ["--box", str(bf), "--plugin-dir", str(d), "--iters", "2", "--warmup", "0"]
+    full, s0, s1, merged = (tmp_path / n for n in ("full.csv", "s0.csv", "s1.csv", "merged.csv"))
+
+    assert runner_mod.main([*common, "--out", str(full)]) == 0
+    assert runner_mod.main([*common, "--shard", "0/2", "--out", str(s0)]) == 0
+    assert runner_mod.main([*common, "--shard", "1/2", "--out", str(s1)]) == 0
+    assert runner_mod.main([*common, "--merge", str(s0), str(s1), "--out", str(merged)]) == 0
+    assert merged.read_text() == full.read_text()  # row-identical CSV
+
+    # JSON shard reports merge identically (typed round trip).
+    j0, j1, jm = (tmp_path / n for n in ("s0.json", "s1.json", "m.csv"))
+    assert runner_mod.main([*common, "--shard", "0/2", "--format", "json", "--out", str(j0)]) == 0
+    assert runner_mod.main([*common, "--shard", "1/2", "--format", "json", "--out", str(j1)]) == 0
+    assert runner_mod.main([*common, "--merge", str(j0), str(j1), "--out", str(jm)]) == 0
+    assert jm.read_text() == full.read_text()
+    assert load_report_rows(j0) + load_report_rows(j1)  # both parse, non-empty union
