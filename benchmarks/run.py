@@ -8,6 +8,8 @@ Usage:
   python -m benchmarks.run --platforms cpu-host dpu-sim # platform sweep
   python -m benchmarks.run --no-cache                   # force remeasure
   python -m benchmarks.run --shard 0/2                  # one hash-slice of each figure
+  python -m benchmarks.run --shard 0/2@0.25             # weighted (cost-balanced) slice
+  python -m benchmarks.run --shard 0/2 --shard-plan     # preview shard cost shares
   python -m benchmarks.run --merge                      # reassemble shard CSVs
   python -m benchmarks.run --remote 127.0.0.1:7177      # execute on a worker
   python -m benchmarks.run --list
@@ -89,8 +91,19 @@ def main(argv=None) -> int:
     )
     p.add_argument("--pool", choices=("thread", "process"), default="thread")
     p.add_argument(
-        "--shard", default=None, metavar="I/N",
-        help="run only consistent-hash shard I of N of every figure",
+        "--shard", default=None, metavar="I/N[@W]",
+        help="run only shard I of N of every figure; an @ weight suffix "
+        "(0/2@0.25) weights shards and switches to cost-balanced assignment",
+    )
+    p.add_argument(
+        "--weighted-shard", action="store_true",
+        help="balance shards by estimated per-unit cost (cache-fed) instead "
+        "of key count",
+    )
+    p.add_argument(
+        "--shard-plan", action="store_true",
+        help="print each figure's per-shard unit count and estimated cost "
+        "share, then exit without running",
     )
     p.add_argument(
         "--merge", action="store_true",
@@ -102,6 +115,14 @@ def main(argv=None) -> int:
     )
     p.add_argument("--no-cache", action="store_true", help="remeasure everything")
     p.add_argument("--cache-file", default=None, help="cache path (default <out>/cache.json)")
+    p.add_argument(
+        "--cache-max-entries", type=int, default=None, metavar="N",
+        help="evict oldest cache entries beyond N on flush",
+    )
+    p.add_argument(
+        "--cache-max-age", type=float, default=None, metavar="SECONDS",
+        help="evict cache entries older than SECONDS on flush",
+    )
     p.add_argument("--out", default=str(RESULTS))
     p.add_argument("--list", action="store_true")
     args = p.parse_args(argv)
@@ -146,14 +167,20 @@ def main(argv=None) -> int:
             shard = ShardSpec.parse(args.shard)
         except ValueError as e:
             p.error(str(e))
-    if args.remote:
+    if args.shard_plan and shard is None:
+        p.error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
+    if args.remote and not args.shard_plan:
         from repro.core import remote as remote_mod
 
         if not remote_mod.wait_ready(args.remote):
             p.error(f"remote worker {args.remote} is not answering")
     cache = None
     if not args.no_cache:
-        cache = ResultCache(args.cache_file or out_dir / "cache.json")
+        cache = ResultCache(
+            args.cache_file or out_dir / "cache.json",
+            max_entries=args.cache_max_entries,
+            max_age_s=args.cache_max_age,
+        )
     executor = SweepExecutor(
         platforms=args.platforms,
         workers=args.workers,
@@ -162,7 +189,20 @@ def main(argv=None) -> int:
         cache=cache,
         pool=args.pool,
         remote=args.remote,
+        weighted_shard=args.weighted_shard,
     )
+    if args.shard_plan:
+        from repro.core.box import Box
+
+        for fig in figs:
+            box = Box.from_dict(FIGURES[fig])
+            for row in executor.shard_plan(box, shard):
+                print(
+                    f"{fig}: shard {row['shard']}  weight {row['weight']:g}  "
+                    f"units {row['units']}  est_cost {row['est_cost']:.6g}  "
+                    f"share {row['cost_share']:.1%}"
+                )
+        return 0
     all_errors = []
     total_cached = total_tests = 0
     print("figure,task,params,metric,value")

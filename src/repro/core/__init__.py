@@ -1,5 +1,6 @@
 from repro.core.box import Box, TaskSpec
 from repro.core.cache import ResultCache, cache_key
+from repro.core.cost import CostModel
 from repro.core.executor import SweepExecutor, SweepResult, SweepStats
 from repro.core.metrics import Samples, compute_metrics, known_metrics
 from repro.core.platform import (
@@ -11,15 +12,22 @@ from repro.core.platform import (
 )
 from repro.core.report import merge_shard_reports
 from repro.core.runner import Runner, RunnerResult
-from repro.core.shard import ShardSpec, partition, shard_of
+from repro.core.shard import (
+    ShardSpec,
+    cost_partition,
+    cost_shard_map,
+    partition,
+    shard_of,
+)
 from repro.core.task import Task, TaskContext, TestResult
 
 __all__ = [
     "Box", "TaskSpec", "Samples", "compute_metrics", "known_metrics",
     "Runner", "RunnerResult", "Task", "TaskContext", "TestResult",
     "SweepExecutor", "SweepResult", "SweepStats",
-    "ResultCache", "cache_key",
+    "ResultCache", "cache_key", "CostModel",
     "Platform", "get_platform", "known_platforms", "register_platform",
     "remote_platform",
-    "ShardSpec", "shard_of", "partition", "merge_shard_reports",
+    "ShardSpec", "shard_of", "partition", "cost_shard_map", "cost_partition",
+    "merge_shard_reports",
 ]

@@ -13,6 +13,14 @@ cleanly, and can be inspected/deleted by hand.  Anything that changes the
 measurement — different parameter values, iteration counts, platform, the
 cache format version — changes the key or invalidates the file wholesale.
 
+Entries also record the measured wall time (``elapsed_s``) of the unit that
+produced them; :class:`repro.core.cost.CostModel` feeds these back into
+weighted sharding and LPT dispatch on later runs.
+
+Long-lived caches are bounded by an optional eviction policy: construct
+with ``max_entries=`` and/or ``max_age_s=`` and ``flush()`` trims the
+oldest ``saved_unix`` entries (age first, then count) before writing.
+
 Thread-safe: the executor calls ``get``/``put`` from worker threads.
 """
 from __future__ import annotations
@@ -54,13 +62,25 @@ def cache_key(
 class ResultCache:
     """On-disk metrics cache; ``None``-safe drop-in is simply not passing one."""
 
-    def __init__(self, path: str | Path):
+    def __init__(
+        self,
+        path: str | Path,
+        max_entries: int | None = None,
+        max_age_s: float | None = None,
+    ):
+        if max_entries is not None and max_entries < 0:
+            raise ValueError(f"max_entries must be >= 0, got {max_entries}")
+        if max_age_s is not None and max_age_s < 0:
+            raise ValueError(f"max_age_s must be >= 0, got {max_age_s}")
         self.path = Path(path)
+        self.max_entries = max_entries
+        self.max_age_s = max_age_s
         self._lock = threading.Lock()
         self._entries: dict[str, dict[str, Any]] = {}
         self._dirty = False
         self.hits = 0
         self.misses = 0
+        self.evicted = 0
         self._load()
 
     def _load(self) -> None:
@@ -94,6 +114,7 @@ class ResultCache:
         task: str = "",
         params: dict[str, Any] | None = None,
         platform: str = "",
+        elapsed_s: float | None = None,
     ) -> None:
         entry = {
             "metrics": {k: float(v) for k, v in metrics.items()},
@@ -102,13 +123,50 @@ class ResultCache:
             "platform": platform,
             "saved_unix": time.time(),
         }
+        if elapsed_s is not None:
+            # Measured wall cost of the producing unit — scheduling evidence
+            # for CostModel on later runs.
+            entry["elapsed_s"] = float(elapsed_s)
         with self._lock:
             self._entries[key] = entry
             self._dirty = True
 
+    def snapshot(self) -> dict[str, dict[str, Any]]:
+        """Point-in-time copy of all entries (read-only scheduling input)."""
+        with self._lock:
+            return {k: dict(v) for k, v in self._entries.items()}
+
     # -- persistence -------------------------------------------------------
+    def _trim(self) -> int:
+        """Apply the eviction policy (caller holds the lock); returns drops."""
+        dropped = 0
+        if self.max_age_s is not None and self._entries:
+            cutoff = time.time() - self.max_age_s
+            stale = [
+                k
+                for k, e in self._entries.items()
+                if float(e.get("saved_unix", 0.0) or 0.0) < cutoff
+            ]
+            for k in stale:
+                del self._entries[k]
+            dropped += len(stale)
+        if self.max_entries is not None and len(self._entries) > self.max_entries:
+            excess = len(self._entries) - self.max_entries
+            oldest = sorted(
+                self._entries,
+                key=lambda k: (float(self._entries[k].get("saved_unix", 0.0) or 0.0), k),
+            )[:excess]
+            for k in oldest:
+                del self._entries[k]
+            dropped += excess
+        if dropped:
+            self._dirty = True
+            self.evicted += dropped
+        return dropped
+
     def flush(self) -> None:
         with self._lock:
+            self._trim()
             if not self._dirty:
                 return
             payload = {"version": CACHE_VERSION, "entries": self._entries}
@@ -120,8 +178,12 @@ class ResultCache:
 
     def clear(self) -> None:
         with self._lock:
+            had_entries = bool(self._entries)
             self._entries.clear()
-            self._dirty = True
+            # Only mark dirty when there is something to erase: clearing a
+            # cache that never touched disk must not create an empty file.
+            if had_entries or self.path.exists():
+                self._dirty = True
         self.flush()
 
     def __len__(self) -> int:

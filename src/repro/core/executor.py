@@ -24,6 +24,15 @@ on (ROADMAP: sharding, batching, async, caching, multi-backend):
     :mod:`repro.core.shard`); shard reports reassemble with
     ``report.merge_shard_reports``.  Cache keys are shard-independent, so
     shards dedupe against each other through a shared cache.
+  * **Cost-aware scheduling** — a :class:`repro.core.cost.CostModel` (fed by
+    wall times the cache records on every ``put``) drives two decisions:
+    shard specs with ``weights`` (or ``weighted_shard=True``) partition the
+    grid by *estimated cost* instead of key count, and multi-worker pools
+    dispatch longest-processing-time-first so the heaviest unit never runs
+    alone at the tail.  Report rows are still assembled in canonical grid
+    order, so output is byte-identical to sequential execution.
+    ``shard_plan(box, spec)`` previews the per-shard unit counts and cost
+    shares without running anything.
   * **Remote dispatch** — a ``kind="remote"`` platform (or an executor-wide
     ``remote="host:port"`` endpoint) ships units to a
     :mod:`repro.core.remote` worker instead of running them locally.
@@ -36,6 +45,7 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 import traceback
 from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -44,9 +54,10 @@ from typing import Any, Sequence
 from repro.core import cache as cache_mod
 from repro.core import registry, report
 from repro.core.box import Box
+from repro.core.cost import CostModel
 from repro.core.metrics import compute_metrics
 from repro.core.platform import Platform, resolve
-from repro.core.shard import ShardSpec, shard_of
+from repro.core.shard import ShardSpec, cost_shard_map, shard_of
 from repro.core.task import TaskContext, TestResult
 
 
@@ -78,9 +89,12 @@ class SweepResult:
 class _Unit:
     """One concrete test: a point of the (platform x task x params) grid.
 
-    ``ckey`` is always computed: it is both the result-cache key and the
-    consistent-hash shard key, so shard assignment and cache identity agree
-    by construction.
+    ``skey`` is the shard-assignment key (always the endpoint-free cache
+    key, so runners pointing different shards at different workers still
+    cover the grid between them); ``ckey`` is the result-cache key (which
+    DOES see the ``--remote`` endpoint: a remote host's measurement is not
+    the local platform's measurement).  They coincide for local runs, so
+    shard assignment and cache identity agree by construction.
     """
 
     index: int
@@ -89,6 +103,7 @@ class _Unit:
     params: dict[str, Any]
     metrics: tuple[str, ...]
     ckey: str | None = None
+    skey: str | None = None
 
 
 class SweepExecutor:
@@ -102,6 +117,7 @@ class SweepExecutor:
         cache: cache_mod.ResultCache | None = None,
         pool: str = "thread",
         remote: str | None = None,
+        weighted_shard: bool = False,
     ):
         if pool not in ("thread", "process"):
             raise ValueError(f"pool must be 'thread' or 'process', got {pool!r}")
@@ -118,10 +134,16 @@ class SweepExecutor:
         # Endpoint of a repro.core.remote worker; when set, EVERY unit is
         # dispatched there (per-platform remotes use kind="remote" instead).
         self.remote = remote
+        # Balance shard assignment by estimated cost even without explicit
+        # shard weights (ShardSpec.weights implies it regardless).
+        self.weighted_shard = weighted_shard
         # Contexts persist across boxes so prepare is shared; cleaned explicitly.
         self._contexts: dict[tuple[str, str], TaskContext] = {}
         self._prep: dict[tuple[str, str], dict[str, Any]] = {}
         self._lock = threading.Lock()
+        # Per-(platform, task) serialization points: prepare barriers and
+        # context-log appends contend only within one task, not globally.
+        self._task_locks: dict[tuple[str, str], threading.Lock] = {}
 
     # -- shared state ------------------------------------------------------
     def _context(self, platform: Platform, task_name: str) -> TaskContext:
@@ -135,30 +157,39 @@ class SweepExecutor:
                 self._contexts[key] = ctx
         return ctx
 
-    def _ensure_prepared(self, task, platform: Platform, ctx: TaskContext) -> None:
-        """Run prepare exactly once per (platform, task); everyone else waits."""
-        key = (platform.name, task.name)
+    def _task_lock(self, platform_name: str, task_name: str) -> threading.Lock:
+        key = (platform_name, task_name)
         with self._lock:
-            state = self._prep.get(key)
-            owner = state is None
-            if owner:
-                state = {"event": threading.Event(), "error": None}
-                self._prep[key] = state
-        if owner:
-            try:
-                task.prepare(ctx)
-            except BaseException as e:
-                state["error"] = e
-                raise
-            finally:
-                state["event"].set()
-        else:
-            state["event"].wait()
-            if state["error"] is not None:
-                raise RuntimeError(
-                    f"prepare failed for task {task.name!r} on {platform.name!r}: "
-                    f"{state['error']}"
-                ) from state["error"]
+            return self._task_locks.setdefault(key, threading.Lock())
+
+    def _ensure_prepared(self, task, platform: Platform, ctx: TaskContext) -> None:
+        """Run prepare exactly once per (platform, task).
+
+        Serialization is per-(platform, task): units of the same task block
+        on the winner's prepare (holding that key's lock), while units of
+        OTHER tasks prepare and run concurrently — no global barrier.
+        """
+        key = (platform.name, task.name)
+        with self._task_lock(*key):
+            with self._lock:
+                state = self._prep.get(key)
+            if state is None:
+                state = {"error": None}
+                try:
+                    task.prepare(ctx)
+                except BaseException as e:
+                    state["error"] = e
+                    with self._lock:
+                        self._prep[key] = state
+                    raise
+                with self._lock:
+                    self._prep[key] = state
+                return
+        if state["error"] is not None:
+            raise RuntimeError(
+                f"prepare failed for task {task.name!r} on {platform.name!r}: "
+                f"{state['error']}"
+            ) from state["error"]
 
     # -- unit execution ----------------------------------------------------
     def _remote_endpoint(self, unit: _Unit) -> str | None:
@@ -174,8 +205,15 @@ class SweepExecutor:
             return str(endpoint)
         return None
 
-    def _run_unit_remote(self, unit: _Unit, endpoint: str) -> TestResult:
-        """Ship one unit to a worker; prepare/run/transform happen there."""
+    def _run_unit_remote(
+        self, unit: _Unit, endpoint: str
+    ) -> tuple[TestResult, float | None]:
+        """Ship one unit to a worker; prepare/run/transform happen there.
+
+        Returns the result plus the WORKER-measured wall cost of the unit
+        (queue/transport wait excluded — that is scheduling noise, not
+        evidence of what the unit costs).
+        """
         from repro.core import remote as remote_mod
 
         resp = remote_mod.get_transport(endpoint).run_unit(
@@ -183,11 +221,15 @@ class SweepExecutor:
         )
         vals = {k: float(v) for k, v in resp["metrics"].items()}
         ctx = self._context(unit.platform, unit.task_name)
-        with self._lock:
+        with self._task_lock(unit.platform.name, unit.task_name):
             ctx.log.append(
                 {"task": unit.task_name, "params": dict(unit.params), "metrics": dict(vals)}
             )
-        return TestResult(unit.task_name, dict(unit.params), vals, platform=unit.platform.name)
+        elapsed = resp.get("elapsed_s")
+        return (
+            TestResult(unit.task_name, dict(unit.params), vals, platform=unit.platform.name),
+            float(elapsed) if elapsed is not None else None,
+        )
 
     def _run_unit(self, unit: _Unit) -> tuple[TestResult, bool]:
         """Execute (or cache-hit) one unit; returns (result, was_cached)."""
@@ -202,7 +244,7 @@ class SweepExecutor:
                 )
         endpoint = self._remote_endpoint(unit)
         if endpoint is not None:
-            result = self._run_unit_remote(unit, endpoint)
+            result, elapsed = self._run_unit_remote(unit, endpoint)
             if self.cache is not None and unit.ckey is not None:
                 self.cache.put(
                     unit.ckey,
@@ -210,15 +252,20 @@ class SweepExecutor:
                     task=unit.task_name,
                     params=unit.params,
                     platform=unit.platform.name,
+                    elapsed_s=elapsed,
                 )
             return result, False
         task = registry.get(unit.task_name)
         ctx = self._context(unit.platform, unit.task_name)
         self._ensure_prepared(task, unit.platform, ctx)
+        # Cost evidence measures only the repeatable per-unit work: one-time
+        # prepare and lock wait would inflate every racer's recorded cost.
+        t0 = time.perf_counter()
         samples = task.run(ctx, dict(unit.params))
         samples = unit.platform.transform_samples(samples)
         vals = compute_metrics(samples, unit.metrics)
-        with self._lock:
+        elapsed = time.perf_counter() - t0
+        with self._task_lock(unit.platform.name, unit.task_name):
             ctx.log.append(
                 {"task": task.name, "params": dict(unit.params), "metrics": dict(vals)}
             )
@@ -229,13 +276,13 @@ class SweepExecutor:
                 task=task.name,
                 params=unit.params,
                 platform=unit.platform.name,
+                elapsed_s=elapsed,
             )
         return TestResult(task.name, dict(unit.params), vals, platform=unit.platform.name), False
 
     # -- box execution -----------------------------------------------------
-    def _expand_units(
-        self, box: Box, platforms: list[Platform], shard: ShardSpec | None = None
-    ) -> list[_Unit]:
+    def _expand_candidates(self, box: Box, platforms: list[Platform]) -> list[_Unit]:
+        """Expand the FULL (platform x task x params) grid, keys attached."""
         units: list[_Unit] = []
         # Validate the whole box before anything executes.
         fingerprints: dict[str, str] = {}
@@ -249,6 +296,11 @@ class SweepExecutor:
                 task = registry.get(spec.task)
                 metrics = tuple(spec.metrics) or tuple(task.default_metrics)
                 for params in spec.expand():
+                    # Shard assignment must NOT see the --remote endpoint:
+                    # runners pointing different shards at different workers
+                    # still have to cover the grid between them.  The cache
+                    # key MUST see it: a remote host's measurement is not the
+                    # local platform's measurement.
                     skey = cache_mod.cache_key(
                         task.name,
                         params,
@@ -258,13 +310,6 @@ class SweepExecutor:
                         metrics,
                         fingerprint=fingerprints[task.name],
                     )
-                    # Shard assignment must NOT see the --remote endpoint:
-                    # runners pointing different shards at different workers
-                    # still have to cover the grid between them.  The cache
-                    # key MUST see it: a remote host's measurement is not the
-                    # local platform's measurement.
-                    if shard is not None and shard_of(skey, shard.count) != shard.index:
-                        continue
                     ckey = skey
                     if self.remote is not None:
                         ckey = cache_mod.cache_key(
@@ -276,9 +321,84 @@ class SweepExecutor:
                             metrics,
                             fingerprint=fingerprints[task.name],
                         )
-                    units.append(_Unit(idx, platform, task.name, params, metrics, ckey))
+                    units.append(
+                        _Unit(idx, platform, task.name, params, metrics, ckey, skey)
+                    )
                     idx += 1
         return units
+
+    def _shard_owner_map(
+        self, units: list[_Unit], shard: ShardSpec
+    ) -> dict[str, int] | None:
+        """skey -> owning shard for cost-aware specs, None for legacy hash.
+
+        Legacy (unweighted, count-balanced) sharding stays a pure per-key
+        hash — fully resize-stable and independent of any cost evidence.
+        Weighted specs (or ``weighted_shard=True``) balance ESTIMATED COST:
+        runners that must agree on such a partition need the same cost view,
+        i.e. a shared (pre-seeded) cache or none at all.
+        """
+        if shard.weights is None and not self.weighted_shard:
+            return None
+        model = CostModel(self.cache)
+        # Evidence lookups go by skey (endpoint-free): runners pointing
+        # their shards at different --remote workers must still resolve the
+        # same costs, or their partitions diverge and drop grid coverage.
+        costs = model.estimate_many(units, lookup="skey")
+        return cost_shard_map(
+            [u.skey for u in units], shard.count, weights=shard.weights, costs=costs
+        )
+
+    def _expand_units(
+        self, box: Box, platforms: list[Platform], shard: ShardSpec | None = None
+    ) -> list[_Unit]:
+        units = self._expand_candidates(box, platforms)
+        if shard is None:
+            return units
+        owner = self._shard_owner_map(units, shard)
+        if owner is None:
+            units = [u for u in units if shard_of(u.skey, shard.count) == shard.index]
+        else:
+            units = [u for u in units if owner[u.skey] == shard.index]
+        # Reindex: ``index`` is the position in THIS run's canonical row
+        # assembly, which for a shard is its kept subsequence of the grid.
+        for i, u in enumerate(units):
+            u.index = i
+        return units
+
+    def shard_plan(self, box: Box, shard: ShardSpec) -> list[dict[str, Any]]:
+        """Dry-run preview: per-shard unit count and estimated cost share.
+
+        Uses the exact same partition path as execution (cost-aware when the
+        spec carries weights or ``weighted_shard`` is set, legacy hash
+        otherwise), so the plan IS what ``run_box`` would do.
+        """
+        platforms = self._box_platforms(box)
+        units = self._expand_candidates(box, platforms)
+        model = CostModel(self.cache)
+        costs = model.estimate_many(units, lookup="skey")
+        owner = self._shard_owner_map(units, shard)
+        if owner is None:
+            owner = {u.skey: shard_of(u.skey, shard.count) for u in units}
+        n_units = [0] * shard.count
+        loads = [0.0] * shard.count
+        for u in units:
+            i = owner[u.skey]
+            n_units[i] += 1
+            loads[i] += costs.get(u.skey, 1.0)
+        total = sum(loads) or 1.0
+        weights = shard.weights or (1.0,) * shard.count
+        return [
+            {
+                "shard": str(ShardSpec(i, shard.count, shard.weights)),
+                "weight": weights[i],
+                "units": n_units[i],
+                "est_cost": loads[i],
+                "cost_share": loads[i] / total,
+                "measured_points": model.measured_points,
+            }
+            for i in range(shard.count)
+        ]
 
     def _box_platforms(self, box: Box) -> list[Platform]:
         """Box-declared platforms win unless the executor was given some."""
@@ -325,7 +445,10 @@ class SweepExecutor:
                     out.stats.cached += was_cached
             elif self.pool == "thread" or any_remote:
                 with ThreadPoolExecutor(max_workers=self.workers) as pool:
-                    pairs = [(unit, pool.submit(self._run_unit, unit)) for unit in units]
+                    pairs = [
+                        (unit, pool.submit(self._run_unit, unit))
+                        for unit in self._dispatch_order(units)
+                    ]
                     for unit, fut in pairs:
                         try:
                             result, was_cached = fut.result()
@@ -369,6 +492,19 @@ class SweepExecutor:
                 out.rows.extend(rows)
         return out
 
+    def _dispatch_order(self, units: list[_Unit]) -> list[_Unit]:
+        """Pool submission order: longest-processing-time-first.
+
+        Heaviest estimated units start first so the slowest one never ends
+        up running alone after every other worker drained (the classic LPT
+        makespan win).  With no cost evidence estimates are uniform and the
+        stable sort degrades to grid order.  Report rows are assembled by
+        ``unit.index`` regardless, so output is order-independent.
+        """
+        model = CostModel(self.cache)
+        costs = model.estimate_many(units)
+        return sorted(units, key=lambda u: -costs.get(u.skey or "", 1.0))
+
     def _run_process_pool(self, units, ordered, out, record_error) -> None:
         import multiprocessing
 
@@ -389,7 +525,7 @@ class SweepExecutor:
         with ProcessPoolExecutor(max_workers=self.workers, mp_context=ctx) as pool:
             pairs = [
                 (unit, pool.submit(_subprocess_run_unit, _unit_payload(unit, self)))
-                for unit in misses
+                for unit in self._dispatch_order(misses)
             ]
             for unit, fut in pairs:
                 try:
@@ -424,6 +560,7 @@ class SweepExecutor:
                         task=unit.task_name,
                         params=unit.params,
                         platform=unit.platform.name,
+                        elapsed_s=res.get("elapsed_s"),
                     )
 
     # -- cleanup -----------------------------------------------------------
@@ -506,10 +643,15 @@ def _subprocess_run_unit(payload: dict[str, Any]) -> dict[str, Any]:
             )
             task.prepare(ctx)
             _CHILD_CONTEXTS[key] = ctx
+        # Cost evidence measures only the repeatable per-unit work, matching
+        # the in-process path (one-time bootstrap/prepare stays out).
+        t0 = time.perf_counter()
         samples = task.run(ctx, dict(payload["params"]))
         samples = platform.transform_samples(samples)
         vals = compute_metrics(samples, tuple(payload["metrics"]))
-        out = {"ok": True, "metrics": vals}
+        # Wall cost of the unit on THIS host — scheduling evidence for the
+        # parent's cache (CostModel) on later runs.
+        out = {"ok": True, "metrics": vals, "elapsed_s": time.perf_counter() - t0}
         if payload.get("want_samples"):
             # Raw samples ride along so transports can stream the measurement
             # itself, not just the aggregates (repro.core.remote.samples_from_wire).

@@ -55,6 +55,22 @@ class Platform:
             samples, times_s=[t * self.time_scale for t in samples.times_s]
         )
 
+    def cost_scale(self) -> float:
+        """Relative per-unit wall-cost heuristic for scheduling.
+
+        :class:`repro.core.cost.CostModel` falls back to this when no
+        measured wall times exist yet: simulated targets dilate cost by
+        their ``time_scale`` (a dpu-sim unit costs ~3.5x a host unit), and
+        any platform may pin an explicit ``cost_scale`` flag (e.g. a real
+        BlueField profile calibrated once and reused).  Dimensionless —
+        only ratios between platforms matter.
+        """
+        if "cost_scale" in self.flags:
+            return float(self.flags["cost_scale"])
+        if self.kind == "sim" and self.time_scale > 0:
+            return self.time_scale
+        return 1.0
+
     def cache_identity(self) -> dict[str, Any]:
         """What makes this platform's measurements distinct (cache keying).
 

@@ -7,7 +7,7 @@ payload, ships it to a worker, and streams the measured ``Samples`` +
 computed metrics back.  The worker is this same module run as::
 
     python -m repro.core.remote worker --host 127.0.0.1 --port 0 \
-        [--plugin-dir DIR ...]
+        [--capacity N] [--plugin-dir DIR ...]
 
 It binds a TCP socket (port 0 = ephemeral; the chosen endpoint is announced
 as ``listening on HOST:PORT`` on stdout) and executes requests through the
@@ -90,19 +90,30 @@ class _Handler(socketserver.StreamRequestHandler):
 class WorkerServer(socketserver.ThreadingTCPServer):
     """Executes unit payloads for remote runners.
 
-    Units run under a lock: ``_subprocess_run_unit`` keys shared prepared
-    contexts per (platform, task), and serializing requests is the simplest
-    sound prepare-barrier for a single worker.  Scale-out is more workers,
-    not more threads per worker — measurement boxes want an unloaded host
-    anyway.
+    Concurrency model: up to ``capacity`` units execute at once (a
+    multi-core DPU sets ``--capacity`` to its spare cores; the default 1
+    keeps the original fully-serialized behaviour), and units of the SAME
+    (platform, task) always serialize against each other — that per-key
+    lock is the prepare barrier for the shared contexts
+    ``_subprocess_run_unit`` keys per (platform, task).  Disjoint tasks run
+    concurrently; identical tasks queue.
     """
 
     allow_reuse_address = True
     daemon_threads = True
 
-    def __init__(self, host: str = "127.0.0.1", port: int = 0, plugin_dirs: Any = ()):
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        plugin_dirs: Any = (),
+        capacity: int = 1,
+    ):
         super().__init__((host, port), _Handler)
-        self._run_lock = threading.Lock()
+        self.capacity = max(1, int(capacity))
+        self._slots = threading.BoundedSemaphore(self.capacity)
+        self._task_locks: dict[tuple[str, str], threading.Lock] = {}
+        self._locks_guard = threading.Lock()
         registry.load_plugin_dirs(str(d) for d in plugin_dirs)
 
     @property
@@ -110,18 +121,31 @@ class WorkerServer(socketserver.ThreadingTCPServer):
         host, port = self.server_address[:2]
         return f"{host}:{port}"
 
+    def _task_lock(self, payload: dict[str, Any]) -> threading.Lock:
+        platform = payload.get("platform") or {}
+        key = (str(platform.get("name", "?")), str(payload.get("task", "?")))
+        with self._locks_guard:
+            return self._task_locks.setdefault(key, threading.Lock())
+
     def dispatch(self, req: dict[str, Any]) -> dict[str, Any]:
         from repro.core import executor as executor_mod
 
         op = req.get("op")
         if op == "ping":
-            return {"ok": True, "op": "ping", "pid": os.getpid()}
+            return {
+                "ok": True, "op": "ping", "pid": os.getpid(), "capacity": self.capacity
+            }
         if op == "run":
             # Payload plugin dirs load inside _subprocess_run_unit's try, so
             # a broken plugin serializes back as an error response instead of
             # killing the connection.
-            with self._run_lock:
-                return executor_mod._subprocess_run_unit(req.get("payload") or {})
+            payload = req.get("payload") or {}
+            # Task lock OUTSIDE the capacity slot: same-task waiters queue
+            # on their lock without occupying a slot, so disjoint tasks
+            # really do run concurrently up to capacity.  No deadlock: a
+            # slot holder is always executing, never waiting on a lock.
+            with self._task_lock(payload), self._slots:
+                return executor_mod._subprocess_run_unit(payload)
         return {"ok": False, "error": f"unknown op {op!r}"}
 
     def serve_in_thread(self) -> threading.Thread:
@@ -131,52 +155,120 @@ class WorkerServer(socketserver.ThreadingTCPServer):
 
 
 # -- transport (client) ------------------------------------------------------
-class RemoteTransport:
-    """Client for one worker endpoint.  Thread-safe; one pooled connection.
+class _Conn:
+    """One TCP connection to a worker (socket + buffered reader)."""
 
-    Worker-side execution is serialized anyway (see WorkerServer), so a
-    single multiplexed connection costs no parallelism.
+    def __init__(self, host: str, port: int):
+        self.sock = socket.create_connection((host, port), timeout=CONNECT_TIMEOUT_S)
+        self.sock.settimeout(REQUEST_TIMEOUT_S)
+        self.rfile = self.sock.makefile("rb")
+
+    def close(self) -> None:
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+class RemoteTransport:
+    """Client for one worker endpoint.  Thread-safe connection pool.
+
+    Concurrent callers (the executor's thread pool) each check out their
+    own connection — the worker serves one request thread per connection,
+    so a ``--capacity N`` worker really executes N units at once.  Idle
+    connections are pooled and reused; a dead pooled connection (worker
+    restarted between sweeps) retries once on a fresh one.
     """
 
     def __init__(self, endpoint: str):
         self.endpoint = endpoint
         self.host, self.port = parse_endpoint(endpoint)
         self._lock = threading.Lock()
-        self._sock: socket.socket | None = None
-        self._rfile = None
+        self._idle: list[_Conn] = []
+        self._closed = False
+        # In-flight requests are bounded by the worker's advertised capacity
+        # (learned from ping on first use): excess callers queue CLIENT-side,
+        # so worker-side queue wait never ticks against the socket timeout
+        # and a unit is never re-sent while the worker still executes it.
+        self._gate_lock = threading.Lock()
+        self._gate: threading.BoundedSemaphore | None = None
 
-    def _connect(self) -> None:
-        sock = socket.create_connection((self.host, self.port), timeout=CONNECT_TIMEOUT_S)
-        sock.settimeout(REQUEST_TIMEOUT_S)
-        self._sock = sock
-        self._rfile = sock.makefile("rb")
+    def _checkout(self, fresh: bool = False) -> _Conn:
+        """Pop an idle connection, or dial.  ``fresh`` always dials — the
+        retry path must not pick up ANOTHER stale pooled connection after a
+        worker restart invalidated the whole pool."""
+        if not fresh:
+            with self._lock:
+                if self._idle:
+                    return self._idle.pop()
+        return _Conn(self.host, self.port)
+
+    def _checkin(self, conn: _Conn) -> None:
+        with self._lock:
+            if not self._closed:
+                self._idle.append(conn)
+                return
+        conn.close()
 
     def close(self) -> None:
         with self._lock:
-            if self._sock is not None:
-                try:
-                    self._sock.close()
-                finally:
-                    self._sock = None
-                    self._rfile = None
+            idle, self._idle = self._idle, []
+            self._closed = True
+        for conn in idle:
+            conn.close()
+
+    def _probe_capacity(self) -> int | None:
+        """Ping on a dedicated connection; None when unreachable."""
+        try:
+            conn = _Conn(self.host, self.port)
+        except OSError:
+            return None
+        try:
+            conn.sock.sendall(b'{"op": "ping"}\n')
+            line = conn.rfile.readline()
+            if not line:
+                return None
+            cap = int(json.loads(line).get("capacity", 1) or 1)
+            self._checkin(conn)
+            conn = None
+            return max(1, cap)
+        except (OSError, json.JSONDecodeError, TypeError, ValueError):
+            return None
+        finally:
+            if conn is not None:
+                conn.close()
+
+    def _capacity_gate(self) -> "threading.BoundedSemaphore":
+        with self._gate_lock:
+            if self._gate is not None:
+                return self._gate
+        cap = self._probe_capacity()
+        with self._gate_lock:
+            # Only cache a gate learned from a live worker: probing a not-
+            # yet-started worker (wait_ready) must not pin capacity to 1.
+            if self._gate is None and cap is not None:
+                self._gate = threading.BoundedSemaphore(cap)
+            return self._gate or threading.BoundedSemaphore(1)
 
     def request(self, obj: dict[str, Any]) -> dict[str, Any]:
         data = (json.dumps(obj, default=str) + "\n").encode()
-        with self._lock:
-            # One reconnect: a worker restart between sweeps looks like a
-            # dead pooled connection on first use.
+        with self._capacity_gate():
+            # One retry: a stale pooled connection (worker restart between
+            # sweeps) fails on first use; the retry always dials fresh.
             for attempt in (0, 1):
+                conn = None
                 try:
-                    if self._sock is None:
-                        self._connect()
-                    self._sock.sendall(data)
-                    line = self._rfile.readline()
+                    conn = self._checkout(fresh=attempt > 0)
+                    conn.sock.sendall(data)
+                    line = conn.rfile.readline()
                     if not line:
                         raise ConnectionError("worker closed connection")
-                    return json.loads(line)
+                    resp = json.loads(line)
+                    self._checkin(conn)
+                    return resp
                 except (OSError, json.JSONDecodeError) as e:
-                    self._sock = None
-                    self._rfile = None
+                    if conn is not None:
+                        conn.close()
                     if attempt:
                         raise RemoteExecutionError(
                             f"worker {self.endpoint} unreachable: {e}"
@@ -230,9 +322,15 @@ class LocalWorker:
     worker`` and nothing else changes.
     """
 
-    def __init__(self, plugin_dirs: Any = (), startup_timeout: float = 60.0):
+    def __init__(
+        self,
+        plugin_dirs: Any = (),
+        startup_timeout: float = 60.0,
+        capacity: int = 1,
+    ):
         self.plugin_dirs = [str(d) for d in plugin_dirs]
         self.startup_timeout = startup_timeout
+        self.capacity = max(1, int(capacity))
         self.endpoint: str | None = None
         self._proc: subprocess.Popen | None = None
         self._announced = threading.Event()
@@ -248,7 +346,10 @@ class LocalWorker:
     def __enter__(self) -> "LocalWorker":
         import queue
 
-        cmd = [sys.executable, "-m", "repro.core.remote", "worker", "--port", "0"]
+        cmd = [
+            sys.executable, "-m", "repro.core.remote", "worker",
+            "--port", "0", "--capacity", str(self.capacity),
+        ]
         for d in self.plugin_dirs:
             cmd += ["--plugin-dir", d]
         env = dict(os.environ)
@@ -306,6 +407,11 @@ def main(argv: list[str] | None = None) -> int:
     w.add_argument("--host", default="127.0.0.1")
     w.add_argument("--port", type=int, default=0, help="0 = ephemeral")
     w.add_argument(
+        "--capacity", type=int, default=1,
+        help="units executed concurrently (same-task units still serialize; "
+        "set to the host's spare cores on a multi-core DPU)",
+    )
+    w.add_argument(
         "--plugin-dir", action="append", default=[], metavar="DIR",
         help="plugin task directory to preload (repeatable)",
     )
@@ -315,7 +421,9 @@ def main(argv: list[str] | None = None) -> int:
     args = p.parse_args(argv)
 
     if args.cmd == "worker":
-        server = WorkerServer(args.host, args.port, plugin_dirs=args.plugin_dir)
+        server = WorkerServer(
+            args.host, args.port, plugin_dirs=args.plugin_dir, capacity=args.capacity
+        )
         print(f"listening on {server.endpoint}", flush=True)
         try:
             server.serve_forever()

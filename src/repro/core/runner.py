@@ -18,6 +18,12 @@ Distributed sweeps compose three more flags: ``--shard i/n`` executes only
 one consistent-hash slice of the box, ``--merge SHARD...`` reassembles shard
 reports into the canonical unsharded table, and ``--remote host:port``
 dispatches unit execution to a ``repro.core.remote`` worker.
+
+Heterogeneous fleets schedule by cost: ``--shard i/n@w`` weights shards,
+``--weighted-shard`` balances estimated per-unit cost (fed by wall times the
+cache records) instead of key count, ``--shard-plan`` previews each shard's
+unit count and cost share, and ``--cache-max-entries`` /
+``--cache-max-age`` bound long-lived caches on flush.
 """
 from __future__ import annotations
 
@@ -64,6 +70,7 @@ class Runner:
         cache: ResultCache | None = None,
         pool: str = "thread",
         remote: str | None = None,
+        weighted_shard: bool = False,
     ):
         if platforms is not None and platform is not None:
             raise ValueError("pass either platform= or platforms=, not both")
@@ -79,6 +86,7 @@ class Runner:
             cache=cache,
             pool=pool,
             remote=remote,
+            weighted_shard=weighted_shard,
         )
         self.platform = self._exec.platforms[0].describe()
         self.iters = iters
@@ -135,11 +143,31 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--pool", choices=("thread", "process"), default="thread")
     p.add_argument("--cache", default=None, metavar="PATH", help="persistent result cache file")
     p.add_argument("--no-cache", action="store_true", help="ignore --cache / box cache")
+    p.add_argument(
+        "--cache-max-entries", type=int, default=None, metavar="N",
+        help="evict oldest cache entries beyond N on flush",
+    )
+    p.add_argument(
+        "--cache-max-age", type=float, default=None, metavar="SECONDS",
+        help="evict cache entries older than SECONDS on flush",
+    )
     p.add_argument("--format", choices=("csv", "md", "json"), default="csv")
     p.add_argument("--out", default=None, help="write report here instead of stdout")
     p.add_argument(
-        "--shard", default=None, metavar="I/N",
-        help="run only consistent-hash shard I of N (e.g. 0/2)",
+        "--shard", default=None, metavar="I/N[@W]",
+        help="run only shard I of N (e.g. 0/2); an @ weight suffix "
+        "(0/2@0.25, 1/4@0.1:0.3:0.3:0.3) gives shards capacity weights and "
+        "switches to cost-balanced assignment",
+    )
+    p.add_argument(
+        "--weighted-shard", action="store_true",
+        help="balance shards by estimated per-unit cost (cache-fed CostModel) "
+        "instead of key count, even with uniform weights",
+    )
+    p.add_argument(
+        "--shard-plan", action="store_true",
+        help="print each shard's unit count and estimated cost share for "
+        "--shard's N (and weights), then exit without running",
     )
     p.add_argument(
         "--merge", nargs="+", default=None, metavar="REPORT",
@@ -209,14 +237,20 @@ def main(argv: list[str] | None = None) -> int:
             shard = ShardSpec.parse(args.shard)
         except ValueError as e:
             p.error(str(e))
-    if args.remote:
+    if args.shard_plan and shard is None:
+        p.error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
+    if args.remote and not args.shard_plan:
         from repro.core import remote as remote_mod
 
         if not remote_mod.wait_ready(args.remote):
             p.error(f"remote worker {args.remote} is not answering")
     cache = None
     if args.cache and not args.no_cache:
-        cache = ResultCache(args.cache)
+        cache = ResultCache(
+            args.cache,
+            max_entries=args.cache_max_entries,
+            max_age_s=args.cache_max_age,
+        )
     runner = Runner(
         iters=args.iters,
         warmup=args.warmup,
@@ -225,7 +259,23 @@ def main(argv: list[str] | None = None) -> int:
         cache=cache,
         pool=args.pool,
         remote=args.remote,
+        weighted_shard=args.weighted_shard,
     )
+    if args.shard_plan:
+        plan = runner.executor.shard_plan(box, shard)
+        for row in plan:
+            print(
+                f"shard {row['shard']}  weight {row['weight']:g}  "
+                f"units {row['units']}  est_cost {row['est_cost']:.6g}  "
+                f"share {row['cost_share']:.1%}"
+            )
+        measured = plan[0]["measured_points"] if plan else 0
+        print(
+            f"# plan over {sum(r['units'] for r in plan)} units, "
+            f"{measured} measured cost points",
+            file=sys.stderr,
+        )
+        return 0
     res = runner.run_box(box, shard=shard)
     _emit(_format_rows(res.rows, args.format, res.box), args.out)
     if shard is not None:

@@ -18,20 +18,70 @@ cache uses — which buys three properties:
 ``SweepExecutor.run_box(box, shard=ShardSpec(i, n))`` executes only the i-th
 slice; :func:`repro.core.report.merge_shard_reports` reassembles the rows in
 canonical (unsharded) order.
+
+Heterogeneous fleets additionally get **weighted, cost-aware** partitions:
+
+  * Each shard may carry a capacity ``weight`` (``--shard 0/2@0.25`` — a
+    DPU-side shard that should take a quarter of the work;
+    ``--shard 1/4@0.1:0.3:0.3:0.3`` spells out the whole vector).  Weighted
+    rendezvous (:func:`shard_of` with ``weights``) skews expected ownership
+    proportionally while keeping the movers-only-to-new-shard resize law.
+  * With per-key cost estimates (:class:`repro.core.cost.CostModel`, fed by
+    wall times the result cache records), :func:`cost_shard_map` balances
+    *estimated cost* rather than key count: keys are placed heaviest-first
+    onto their rendezvous-preferred shard while it has capacity headroom,
+    overflowing onto the least-loaded (weight-normalized) shard.  The
+    result is still a deterministic disjoint cover — any runner with the
+    same cost evidence computes the same partition — at the price of full
+    hash stability for overflowed keys (documented trade: balance beats
+    stickiness exactly when costs are skewed enough to matter).
 """
 from __future__ import annotations
 
 import hashlib
+import math
 from dataclasses import dataclass
-from typing import Iterable, Sequence
+from typing import Iterable, Mapping, Sequence
+
+
+def _parse_weights(text: str, index: int, count: int) -> tuple[float, ...]:
+    """Weight suffix of a CLI shard spec -> full per-shard weight vector.
+
+    Two forms: ``w0:w1:...`` spells out all ``count`` weights; a single
+    ``w`` is shorthand for "this shard takes fraction w of the work", with
+    the remaining ``1 - w`` split evenly over the other shards — so two
+    runners launched as ``0/2@0.25`` and ``1/2@0.75`` reconstruct the SAME
+    vector (0.25, 0.75) and agree on the partition.
+    """
+    parts = [p for p in text.split(":") if p]
+    vals = [float(p) for p in parts]
+    if len(vals) == 1 and count > 1:
+        w = vals[0]
+        if not 0.0 < w < 1.0:
+            raise ValueError(
+                f"single-weight shorthand needs 0 < w < 1 (fraction of total), got {w}"
+            )
+        rest = (1.0 - w) / (count - 1)
+        return tuple(w if i == index else rest for i in range(count))
+    if len(vals) != count:
+        raise ValueError(
+            f"weight vector has {len(vals)} entries for {count} shards"
+        )
+    return tuple(vals)
 
 
 @dataclass(frozen=True)
 class ShardSpec:
-    """This runner executes shard ``index`` of ``count`` total shards."""
+    """This runner executes shard ``index`` of ``count`` total shards.
+
+    ``weights`` (optional, len == count) are relative capacity weights for
+    ALL shards — every runner needs the full vector to compute the same
+    partition.  ``None`` means uniform.
+    """
 
     index: int
     count: int
+    weights: tuple[float, ...] | None = None
 
     def __post_init__(self) -> None:
         if self.count < 1:
@@ -40,21 +90,60 @@ class ShardSpec:
             raise ValueError(
                 f"shard index must be in [0, {self.count}), got {self.index}"
             )
+        if self.weights is not None:
+            object.__setattr__(self, "weights", tuple(float(w) for w in self.weights))
+            check_weights(self.weights, self.count)
 
     @staticmethod
     def parse(text: str) -> "ShardSpec":
-        """Parse the CLI form ``"i/n"`` (e.g. ``--shard 0/2``)."""
+        """Parse the CLI form ``"i/n"``, ``"i/n@w"`` or ``"i/n@w0:w1:..."``.
+
+        ``0/2`` — uniform; ``0/2@0.25`` — this shard gets 25% of the work
+        (the rest split evenly); ``2/3@0.5:0.25:0.25`` — explicit vector.
+        """
+        spec, sep, wtext = text.partition("@")
         try:
-            idx, _, cnt = text.partition("/")
-            return ShardSpec(int(idx), int(cnt))
+            if sep and not wtext:
+                raise ValueError("empty weight suffix after '@'")
+            idx_s, _, cnt_s = spec.partition("/")
+            idx, cnt = int(idx_s), int(cnt_s)
+            weights = _parse_weights(wtext, idx, cnt) if wtext else None
+            return ShardSpec(idx, cnt, weights)
         except ValueError as e:
-            raise ValueError(f"bad shard spec {text!r}; expected 'i/n' like '0/2'") from e
+            raise ValueError(
+                f"bad shard spec {text!r}; expected 'i/n', 'i/n@w' or 'i/n@w0:w1:...'"
+                f" like '0/2@0.25': {e}"
+            ) from e
 
     def __str__(self) -> str:
-        return f"{self.index}/{self.count}"
+        base = f"{self.index}/{self.count}"
+        if self.weights is None:
+            return base
+        return base + "@" + ":".join(f"{w:g}" for w in self.weights)
+
+    @property
+    def weight(self) -> float:
+        """This shard's own capacity weight (1.0 when uniform)."""
+        return 1.0 if self.weights is None else self.weights[self.index]
 
     def owns(self, key: str) -> bool:
-        return shard_of(key, self.count) == self.index
+        """Does the (weighted) rendezvous hash assign ``key`` to this shard?
+
+        This answers the hash-preference question only.  Cost-aware
+        execution (weighted specs / ``weighted_shard``) may overflow a key
+        off its preferred shard to respect the load bound — the executor's
+        partition is :func:`cost_shard_map` over the WHOLE key set, which a
+        single-key predicate cannot reproduce.
+        """
+        return shard_of(key, self.count, self.weights) == self.index
+
+
+def check_weights(weights: Sequence[float], count: int) -> None:
+    if len(weights) != count:
+        raise ValueError(f"need {count} shard weights, got {len(weights)}")
+    for w in weights:
+        if not math.isfinite(w) or w <= 0.0:
+            raise ValueError(f"shard weights must be finite and > 0, got {w}")
 
 
 def _weight(key: str, shard: int) -> int:
@@ -63,37 +152,157 @@ def _weight(key: str, shard: int) -> int:
     return int.from_bytes(h.digest(), "big")
 
 
-def shard_of(key: str, count: int) -> int:
+def _score(key: str, shard: int, w: float) -> float:
+    """Weighted rendezvous score: -w / ln(u), u = hash mapped into (0, 1).
+
+    For equal w this is a strictly monotone transform of the raw 64-bit
+    hash, so the weighted argmax coincides with the classic unweighted one.
+    """
+    u = (_weight(key, shard) + 1) / (2.0**64 + 2)
+    return -w / math.log(u)
+
+
+def shard_of(key: str, count: int, weights: Sequence[float] | None = None) -> int:
     """Highest-random-weight shard for ``key`` among ``count`` shards.
 
     Each key independently picks the shard whose (key, shard) hash is
-    largest.  Going count -> count+1 only reassigns keys whose new weight
-    beats their old maximum, i.e. an expected 1/(count+1) fraction — the
-    common "add a host" resize keeps >= count/(count+1) of keys in place.
+    largest; with ``weights`` each shard's score is capacity-scaled
+    (``-w/ln(u)``), so expected ownership is proportional to weight.
+    Either way, going count -> count+1 (or appending a shard to the weight
+    vector) only reassigns keys whose NEW shard's score beats their old
+    maximum — movers only ever go to the added shard.
     """
     if count < 1:
         raise ValueError(f"shard count must be >= 1, got {count}")
+    if weights is not None:
+        check_weights(weights, count)
     if count == 1:
         return 0
-    best, best_w = 0, -1
+    if weights is None or len(set(weights)) == 1:
+        # Uniform: exact integer argmax (the original, float-free path).
+        best, best_w = 0, -1
+        for i in range(count):
+            w = _weight(key, i)
+            if w > best_w:
+                best, best_w = i, w
+        return best
+    best, best_s = 0, float("-inf")
     for i in range(count):
-        w = _weight(key, i)
-        if w > best_w:
-            best, best_w = i, w
+        s = _score(key, i, weights[i])
+        if s > best_s:
+            best, best_s = i, s
     return best
 
 
-def partition(keys: Iterable[str], count: int) -> list[list[str]]:
+def rank_shards(key: str, count: int, weights: Sequence[float] | None = None) -> list[int]:
+    """Shards ordered by this key's (weighted) rendezvous preference."""
+    if weights is None:
+        return sorted(range(count), key=lambda i: -_weight(key, i))
+    check_weights(weights, count)
+    return sorted(range(count), key=lambda i: -_score(key, i, weights[i]))
+
+
+def partition(
+    keys: Iterable[str], count: int, weights: Sequence[float] | None = None
+) -> list[list[str]]:
     """Split ``keys`` into ``count`` buckets; bucket i is shard i's work."""
     out: list[list[str]] = [[] for _ in range(count)]
     for k in keys:
-        out[shard_of(k, count)].append(k)
+        out[shard_of(k, count, weights)].append(k)
     return out
 
 
 def assigned(keys: Sequence[str], spec: ShardSpec) -> list[str]:
-    """The subsequence of ``keys`` owned by ``spec`` (original order kept)."""
+    """The subsequence of ``keys`` owned by ``spec`` (original order kept).
+
+    Pure rendezvous view — see :meth:`ShardSpec.owns` for how cost-aware
+    execution can differ; use :func:`cost_partition` to mirror it.
+    """
     return [k for k in keys if spec.owns(k)]
 
 
-__all__ = ["ShardSpec", "shard_of", "partition", "assigned"]
+# -- cost-aware weighted partition -------------------------------------------
+def cost_shard_map(
+    keys: Sequence[str],
+    count: int,
+    weights: Sequence[float] | None = None,
+    costs: Mapping[str, float] | None = None,
+    slack: float = 1.5,
+) -> dict[str, int]:
+    """Deterministic cost-balanced assignment: unique key -> shard index.
+
+    Keys are placed heaviest-first (ties broken by key, so any runner with
+    the same cost evidence computes the same map).  Each key goes to its
+    weighted-rendezvous home shard while that shard's load stays within
+    ``slack`` x its weight-proportional fair share of total cost; otherwise
+    it overflows onto the shard with the least projected weight-normalized
+    load (preferring the key's own rendezvous ranking on ties).  Duplicate
+    keys in the input (overlapping task specs) count once per occurrence
+    toward load and share one assignment.
+
+    Guarantees: disjoint cover; max weight-normalized load <= slack x the
+    fair share whenever a placement under the bound exists, degrading to
+    least-loaded greedy (classic LPT behaviour) when single keys exceed it.
+    """
+    if count < 1:
+        raise ValueError(f"shard count must be >= 1, got {count}")
+    if weights is not None:
+        check_weights(weights, count)
+    if slack < 1.0:
+        raise ValueError(f"slack must be >= 1.0, got {slack}")
+    w = tuple(float(x) for x in (weights or (1.0,) * count))
+    costs = costs or {}
+    # Effective cost per unique key = unit cost x multiplicity.
+    mult: dict[str, int] = {}
+    for k in keys:
+        mult[k] = mult.get(k, 0) + 1
+    eff = {k: max(float(costs.get(k, 1.0)), 0.0) * m for k, m in mult.items()}
+    total = sum(eff.values())
+    if count == 1 or not eff:
+        return {k: 0 for k in mult}
+    wsum = sum(w)
+    fair = [total * wi / wsum for wi in w]
+    loads = [0.0] * count
+    owner: dict[str, int] = {}
+    for k in sorted(eff, key=lambda k: (-eff[k], k)):
+        prefs = rank_shards(k, count, weights)
+        home = prefs[0]
+        if loads[home] + eff[k] <= slack * fair[home]:
+            pick = home
+        else:
+            rank_pos = {s: r for r, s in enumerate(prefs)}
+            pick = min(
+                range(count),
+                key=lambda i: ((loads[i] + eff[k]) / w[i], rank_pos[i]),
+            )
+        loads[pick] += eff[k]
+        owner[k] = pick
+    return owner
+
+
+def cost_partition(
+    keys: Sequence[str],
+    count: int,
+    weights: Sequence[float] | None = None,
+    costs: Mapping[str, float] | None = None,
+    slack: float = 1.5,
+) -> list[list[str]]:
+    """Cost-balanced counterpart of :func:`partition` (input order kept,
+    duplicates preserved in their owner's bucket)."""
+    owner = cost_shard_map(keys, count, weights, costs, slack)
+    out: list[list[str]] = [[] for _ in range(count)]
+    for k in keys:
+        out[owner[k]].append(k)
+    return out
+
+
+__all__ = [
+    "ShardSpec",
+    "shard_of",
+    "rank_shards",
+    "partition",
+    "assigned",
+    "cost_shard_map",
+    "cost_partition",
+    "check_weights",
+]

@@ -1,0 +1,486 @@
+"""Cost-aware scheduling suite: CostModel, weighted partitions, LPT
+dispatch, worker capacity, and cache eviction.
+
+Contract pillars, mirroring the scheduling layer's claims:
+
+  1. *Partition laws* — cost-balanced weighted partitions are a disjoint
+     cover (duplicates included), keep max weight-normalized load within
+     the slack bound under 100:1 skewed costs, and the weighted rendezvous
+     hash keeps the movers-only-to-the-new-shard resize law (property
+     tests via _hypothesis_compat).
+  2. *Schedule-invariance* — LPT pool dispatch and a ``capacity=4`` worker
+     produce report rows bit-identical to sequential / serialized
+     execution (deterministic plugin tasks make equality exact).
+  3. *Evidence plumbing* — every executor path records ``elapsed_s`` into
+     the cache, CostModel consumes it tier by tier, and eviction bounds
+     the cache without touching fresh entries.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import pytest
+from _hypothesis_compat import given, settings, st
+from test_shard import _keys, make_plugin, plugin_box
+
+from repro.core import (
+    CostModel,
+    ResultCache,
+    ShardSpec,
+    SweepExecutor,
+    cost_partition,
+    cost_shard_map,
+    merge_shard_reports,
+    partition,
+    shard_of,
+)
+from repro.core import registry as reg
+from repro.core import runner as runner_mod
+from repro.core.box import Box
+from repro.core.platform import get_platform
+from repro.core.report import to_csv
+
+
+# -- ShardSpec weights -------------------------------------------------------
+def test_shard_spec_weight_parse():
+    s = ShardSpec.parse("0/2@0.25")
+    assert s.weights == (0.25, 0.75) and s.weight == 0.25
+    # The complementary runner reconstructs the SAME vector from its own w.
+    assert ShardSpec.parse("1/2@0.75").weights == (0.25, 0.75)
+    v = ShardSpec.parse("2/3@0.5:0.25:0.25")
+    assert v.weights == (0.5, 0.25, 0.25) and v.weight == 0.25
+    # str round-trips through parse.
+    assert ShardSpec.parse(str(s)) == s
+    assert ShardSpec.parse("0/2") == ShardSpec(0, 2)  # unweighted unchanged
+    for bad in ("0/2@0", "0/2@1.5", "0/3@0.2:0.8", "0/2@a", "0/2@-1:2", "0/2@"):
+        with pytest.raises(ValueError):
+            ShardSpec.parse(bad)
+    with pytest.raises(ValueError):
+        ShardSpec(0, 2, (1.0,))  # wrong vector length
+    with pytest.raises(ValueError):
+        ShardSpec(0, 2, (1.0, 0.0))  # non-positive weight
+
+
+def test_weighted_shard_of_uniform_matches_legacy():
+    keys = _keys(5, 80)
+    for n in (2, 5):
+        for k in keys:
+            assert shard_of(k, n, (1.0,) * n) == shard_of(k, n)
+            assert shard_of(k, n, (2.5,) * n) == shard_of(k, n)
+
+
+# -- partition laws ----------------------------------------------------------
+@settings(max_examples=20)
+@given(st.integers(min_value=1, max_value=8), st.integers(min_value=0, max_value=10**6))
+def test_cost_partition_is_disjoint_cover(n, seed):
+    keys = _keys(seed, 50)
+    weights = tuple(1.0 + (i % 3) for i in range(n))
+    costs = {k: 1.0 + (int(k[:4], 16) % 100) for k in keys}
+    parts = cost_partition(keys, n, weights, costs)
+    assert len(parts) == n
+    union = [k for part in parts for k in part]
+    assert sorted(union) == sorted(keys)
+    owner = cost_shard_map(keys, n, weights, costs)
+    for i, part in enumerate(parts):
+        assert all(owner[k] == i for k in part)
+
+
+def test_cost_partition_keeps_duplicates_together():
+    keys = _keys(9, 30)
+    dup = keys + keys[:7]  # overlapping task specs emit duplicate grid keys
+    parts = cost_partition(dup, 3, costs={k: 2.0 for k in keys})
+    union = [k for part in parts for k in part]
+    assert sorted(union) == sorted(dup)  # every occurrence covered once
+    owner = cost_shard_map(dup, 3, costs={k: 2.0 for k in keys})
+    for k in keys[:7]:  # both occurrences share one owner
+        assert sum(k in part for part in parts) == 1
+
+
+def test_cost_partition_balances_100_to_1_skew():
+    """Acceptance: cost-balanced 4-way stays <= 1.5x mean where the
+    count-balanced hash exceeds 3x (heavy keys chosen adversarially on one
+    hash shard, as a slow-DPU fleet's cache would pin them)."""
+    keys = _keys(3, 160)
+    hash_parts = partition(keys, 4)
+    heavy = set(hash_parts[0])
+    assert len(heavy) >= 20  # sanity: the hash bucket is populated
+    costs = {k: (100.0 if k in heavy else 1.0) for k in keys}
+    total = sum(costs.values())
+    mean = total / 4
+    hash_loads = [sum(costs[k] for k in part) for part in hash_parts]
+    assert max(hash_loads) > 3 * mean  # count-balanced overloads one shard
+    parts = cost_partition(keys, 4, costs=costs)
+    loads = [sum(costs[k] for k in part) for part in parts]
+    assert max(loads) <= 1.5 * mean  # cost-balanced respects the slack bound
+    assert sorted(k for p in parts for k in p) == sorted(keys)
+
+
+@settings(max_examples=15)
+@given(st.integers(min_value=2, max_value=10))
+def test_weighted_resize_moves_only_to_new_shard(n):
+    """Appending a shard to the weight vector: every mover goes TO it."""
+    keys = _keys(11)
+    w = tuple(1.0 + (i % 3) * 0.5 for i in range(n))
+    moved = 0
+    for k in keys:
+        before = shard_of(k, n, w)
+        after = shard_of(k, n + 1, w + (1.25,))
+        if before != after:
+            moved += 1
+            assert after == n
+    assert moved < len(keys)  # and most keys stay put
+
+
+# -- CostModel tiers ---------------------------------------------------------
+def test_cost_model_estimate_tiers(tmp_path):
+    cache = ResultCache(tmp_path / "c.json")
+    cache.put("k1", {"m": 1.0}, task="t", platform="cpu-host", elapsed_s=2.0)
+    cache.put("k2", {"m": 1.0}, task="t", platform="cpu-host", elapsed_s=4.0)
+    cache.put("k3", {"m": 1.0}, task="t", platform="dpu-sim", elapsed_s=30.0)
+    cache.put("k4", {"m": 1.0}, task="t", platform="cpu-host")  # no elapsed
+    m = CostModel(cache)
+    assert m.measured_points == 3
+    host, sim = get_platform("cpu-host"), get_platform("dpu-sim")
+    assert m.explain("k1", task="t", platform=host) == (2.0, "measured")
+    assert m.explain("new", task="t", platform=host) == (3.0, "task-platform-mean")
+    cost, src = m.explain("new", task="t", platform=get_platform("default"))
+    assert src == "task-mean" and cost == pytest.approx(12.0)  # (2+4+30)/3 x 1.0
+    assert m.explain("new", task="other", platform=sim) == (3.5, "heuristic")
+    assert m.explain("new", task="other", platform=host) == (1.0, "uniform")
+    assert CostModel(None).explain(None) == (1.0, "uniform")
+
+
+def test_platform_cost_scale():
+    assert get_platform("cpu-host").cost_scale() == 1.0
+    assert get_platform("dpu-sim").cost_scale() == 3.5  # time_scale heuristic
+    from repro.core.platform import Platform
+
+    assert Platform(name="bf2", flags={"cost_scale": 0.3}).cost_scale() == 0.3
+
+
+def test_executor_records_elapsed(tmp_path):
+    make_plugin(tmp_path, "elplug")
+    reg.load_plugin_dir(tmp_path / "elplug")
+    path = tmp_path / "cache.json"
+    res = SweepExecutor(cache=ResultCache(path)).run_box(plugin_box("elplug"))
+    assert not res.errors
+    entries = ResultCache(path).snapshot()
+    assert len(entries) == 6
+    assert all(e.get("elapsed_s", 0) > 0 for e in entries.values())
+    # ...and the process pool records the child-measured wall cost too.
+    make_plugin(tmp_path, "elplug2")
+    reg.load_plugin_dir(tmp_path / "elplug2")
+    path2 = tmp_path / "cache2.json"
+    res2 = SweepExecutor(cache=ResultCache(path2), pool="process", workers=2).run_box(
+        plugin_box("elplug2")
+    )
+    assert not res2.errors
+    assert all(e.get("elapsed_s", 0) > 0 for e in ResultCache(path2).snapshot().values())
+
+
+# -- LPT dispatch ------------------------------------------------------------
+def test_lpt_dispatch_rows_bit_identical(tmp_path):
+    """Skewed cost evidence reorders pool submission; the CSV must not move."""
+    make_plugin(tmp_path, "slowplug", factor=4.0)
+    make_plugin(tmp_path, "fastplug", factor=1.0)
+    reg.load_plugin_dir(tmp_path / "slowplug")
+    reg.load_plugin_dir(tmp_path / "fastplug")
+    box = Box.from_dict(
+        {
+            "name": "lpt_box",
+            "tasks": [
+                {"task": "fastplug", "params": {"a": [1, 2, 3], "b": ["x", "y"]}},
+                {"task": "slowplug", "params": {"a": [1, 2, 3], "b": ["x", "y"]}},
+            ],
+        }
+    )
+    # Task-mean evidence: slowplug units estimate 100x fastplug units, so
+    # LPT submits them first even though the grid declares them last.
+    cache = ResultCache(tmp_path / "ev.json")
+    cache.put("ev1", {"m": 1.0}, task="slowplug", platform="default", elapsed_s=10.0)
+    cache.put("ev2", {"m": 1.0}, task="fastplug", platform="default", elapsed_s=0.1)
+    seq = SweepExecutor(workers=1).run_box(box)
+    lpt = SweepExecutor(workers=4, cache=cache).run_box(box)
+    assert not seq.errors and not lpt.errors
+    assert lpt.stats.cached == 0  # evidence keys are not unit keys
+    assert lpt.rows == seq.rows
+    assert to_csv(lpt.rows) == to_csv(seq.rows)  # byte-identical CSV
+
+
+def test_dispatch_order_is_heaviest_first(tmp_path):
+    make_plugin(tmp_path, "ordercost")
+    reg.load_plugin_dir(tmp_path / "ordercost")
+    cache = ResultCache(tmp_path / "c.json")
+    ex = SweepExecutor(cache=cache)
+    units = ex._expand_units(plugin_box("ordercost"), ex.platforms)
+    for i, u in enumerate(units):
+        cache.put(u.ckey, {"m": 1.0}, task=u.task_name, platform="default",
+                  elapsed_s=float(i + 1))
+    order = ex._dispatch_order(units)
+    assert [u.index for u in order] == [u.index for u in units][::-1]
+    # No evidence -> stable: grid order preserved.
+    assert [u.index for u in SweepExecutor()._dispatch_order(units)] == [
+        u.index for u in units
+    ]
+
+
+# -- weighted sharding through the executor ----------------------------------
+def test_weighted_shard_union_matches_unsharded(tmp_path):
+    make_plugin(tmp_path, "wplug")
+    reg.load_plugin_dir(tmp_path / "wplug")
+    box = plugin_box("wplug")
+    path = tmp_path / "cache.json"
+    full = SweepExecutor(cache=ResultCache(path)).run_box(box)  # seeds costs
+    specs = [ShardSpec.parse("0/2@0.25"), ShardSpec.parse("1/2@0.75")]
+    shards = [SweepExecutor(cache=ResultCache(path)).run_box(box, shard=s) for s in specs]
+    assert all(not s.errors for s in shards)
+    assert sum(s.stats.total for s in shards) == full.stats.total  # disjoint cover
+    assert all(s.stats.cached == s.stats.total for s in shards)  # shared cache
+    merged = merge_shard_reports([s.rows for s in shards], box=box)
+    assert merged == full.rows  # bit-for-bit, canonical order
+
+
+def test_weighted_shard_flag_without_weights(tmp_path):
+    make_plugin(tmp_path, "wfplug")
+    reg.load_plugin_dir(tmp_path / "wfplug")
+    box = plugin_box("wfplug")
+    path = tmp_path / "cache.json"
+    full = SweepExecutor(cache=ResultCache(path)).run_box(box)
+    shards = [
+        SweepExecutor(cache=ResultCache(path), weighted_shard=True).run_box(
+            box, shard=ShardSpec(i, 3)
+        )
+        for i in range(3)
+    ]
+    assert sum(s.stats.total for s in shards) == full.stats.total
+    merged = merge_shard_reports([s.rows for s in shards], box=box)
+    assert merged == full.rows
+
+
+def test_weighted_partition_agrees_across_remote_settings(tmp_path):
+    """Cost lookups key off skey (endpoint-free): a runner pointing its
+    shard at a --remote worker must compute the SAME weighted partition as
+    a local runner, or the grid loses coverage between them."""
+    make_plugin(tmp_path, "rcplug")
+    reg.load_plugin_dir(tmp_path / "rcplug")
+    box = plugin_box("rcplug")
+    path = tmp_path / "cache.json"
+    SweepExecutor(cache=ResultCache(path)).run_box(box)  # local seed run
+    spec = ShardSpec.parse("0/2@0.25")
+
+    def kept_skeys(**kw):
+        ex = SweepExecutor(cache=ResultCache(path), **kw)
+        return {u.skey for u in ex._expand_units(box, ex.platforms, spec)}
+
+    # No worker is contacted: expansion/partitioning is a local computation.
+    assert kept_skeys() == kept_skeys(remote="10.0.0.2:7177")
+
+
+def test_shard_plan_covers_box(tmp_path):
+    make_plugin(tmp_path, "planplug")
+    reg.load_plugin_dir(tmp_path / "planplug")
+    box = plugin_box("planplug")
+    ex = SweepExecutor()
+    plan = ex.shard_plan(box, ShardSpec.parse("0/2@0.25"))
+    assert len(plan) == 2
+    assert sum(r["units"] for r in plan) == box.total_tests()
+    assert sum(r["cost_share"] for r in plan) == pytest.approx(1.0)
+    assert [r["weight"] for r in plan] == [0.25, 0.75]
+    # Legacy (unweighted) plans preview the pure hash partition.
+    legacy = ex.shard_plan(box, ShardSpec(0, 2))
+    assert sum(r["units"] for r in legacy) == box.total_tests()
+
+
+# -- worker capacity ---------------------------------------------------------
+@pytest.fixture()
+def capacity_worker():
+    from repro.core.remote import WorkerServer
+
+    server = WorkerServer(capacity=4)
+    server.serve_in_thread()
+    yield server
+    server.shutdown()
+    server.server_close()
+
+
+def test_worker_capacity_rows_bit_identical(tmp_path, capacity_worker):
+    """Acceptance: a --capacity 4 worker returns rows bit-identical to the
+    serialized (capacity=1) worker, with disjoint tasks in flight at once."""
+    from repro.core.remote import WorkerServer
+
+    make_plugin(tmp_path, "capa")
+    make_plugin(tmp_path, "capb", factor=2.0)
+    reg.load_plugin_dir(tmp_path / "capa")
+    reg.load_plugin_dir(tmp_path / "capb")
+    box = Box.from_dict(
+        {
+            "name": "cap_box",
+            "tasks": [
+                {"task": "capa", "params": {"a": [1, 2, 3], "b": ["x", "y"]}},
+                {"task": "capb", "params": {"a": [1, 2, 3], "b": ["x", "y"]}},
+            ],
+        }
+    )
+    serial = WorkerServer()  # capacity defaults to 1: the old behaviour
+    serial.serve_in_thread()
+    try:
+        r1 = SweepExecutor(workers=4, remote=serial.endpoint).run_box(box)
+    finally:
+        serial.shutdown()
+        serial.server_close()
+    assert capacity_worker.capacity == 4
+    r4 = SweepExecutor(workers=4, remote=capacity_worker.endpoint).run_box(box)
+    assert not r1.errors and not r4.errors
+    assert r4.rows == r1.rows
+    assert to_csv(r4.rows) == to_csv(r1.rows)
+
+
+def test_worker_ping_reports_capacity(capacity_worker):
+    from repro.core.remote import get_transport
+
+    resp = get_transport(capacity_worker.endpoint).request({"op": "ping"})
+    assert resp["ok"] and resp["capacity"] == 4
+
+
+def test_local_worker_capacity_flag(tmp_path):
+    """--capacity rides the real `python -m repro.core.remote worker` CLI."""
+    from repro.core.remote import LocalWorker, get_transport
+
+    d = make_plugin(tmp_path, "capcli")
+    reg.load_plugin_dir(d)
+    box = plugin_box("capcli")
+    local = SweepExecutor().run_box(box)
+    with LocalWorker(plugin_dirs=[d], capacity=4) as w:
+        assert get_transport(w.endpoint).request({"op": "ping"})["capacity"] == 4
+        rem = SweepExecutor(workers=4, remote=w.endpoint).run_box(box)
+    assert not rem.errors
+    assert rem.rows == local.rows
+
+
+# -- cache eviction + clear --------------------------------------------------
+def test_cache_eviction_max_entries(tmp_path):
+    path = tmp_path / "c.json"
+    c = ResultCache(path, max_entries=3)
+    for i in range(5):
+        c.put(f"k{i}", {"m": float(i)})
+    assert len(c) == 5  # eviction happens on flush, not on put
+    c.flush()
+    assert len(c) == 3 and c.evicted == 2
+    assert len(ResultCache(path)) == 3  # the trimmed set is what persisted
+    # An unbounded reader of the same file sees the same 3 entries.
+    c2 = ResultCache(path, max_entries=3)
+    c2.flush()  # nothing dirty, nothing to trim -> no-op
+    assert len(c2) == 3 and c2.evicted == 0
+
+
+def test_cache_eviction_max_age(tmp_path):
+    path = tmp_path / "c.json"
+    c = ResultCache(path, max_age_s=60.0)
+    c.put("fresh", {"m": 1.0})
+    c.put("stale", {"m": 2.0})
+    c._entries["stale"]["saved_unix"] = time.time() - 3600  # age it out
+    c.flush()
+    assert len(c) == 1 and c.get("fresh") is not None and c.evicted == 1
+    # Age eviction also trims entries that went stale since the last write.
+    c._entries["fresh"]["saved_unix"] = time.time() - 3600
+    c.flush()
+    assert len(c) == 0
+
+
+def test_cache_eviction_validates_args(tmp_path):
+    with pytest.raises(ValueError):
+        ResultCache(tmp_path / "c.json", max_entries=-1)
+    with pytest.raises(ValueError):
+        ResultCache(tmp_path / "c.json", max_age_s=-0.5)
+
+
+def test_clear_does_not_create_cache_file(tmp_path):
+    path = tmp_path / "never.json"
+    c = ResultCache(path)
+    c.clear()
+    assert not path.exists()  # clearing nothing must not touch disk
+    c.put("k", {"m": 1.0})
+    c.clear()
+    assert path.exists()  # there WAS something to erase -> file reflects it
+    assert json.loads(path.read_text())["entries"] == {}
+    c.clear()  # idempotent on an existing (empty) file
+    assert json.loads(path.read_text())["entries"] == {}
+
+
+# -- CLI ---------------------------------------------------------------------
+def test_runner_cli_weighted_shard_merge_matches_full(tmp_path):
+    d = make_plugin(tmp_path, "wcli")
+    bf = tmp_path / "box.json"
+    bf.write_text(
+        json.dumps(
+            {
+                "name": "wcli_box",
+                "tasks": [{"task": "wcli", "params": {"a": [1, 2, 3], "b": ["x", "y"]}}],
+            }
+        )
+    )
+    cache = tmp_path / "cache.json"
+    common = [
+        "--box", str(bf), "--plugin-dir", str(d), "--iters", "2", "--warmup", "0",
+        "--cache", str(cache),
+    ]
+    full, s0, s1, merged = (
+        tmp_path / n for n in ("full.csv", "s0.csv", "s1.csv", "merged.csv")
+    )
+    assert runner_mod.main([*common, "--out", str(full)]) == 0  # seeds costs
+    assert runner_mod.main([*common, "--shard", "0/2@0.25", "--out", str(s0)]) == 0
+    assert runner_mod.main([*common, "--shard", "1/2@0.75", "--out", str(s1)]) == 0
+    assert runner_mod.main([*common, "--merge", str(s0), str(s1), "--out", str(merged)]) == 0
+    assert merged.read_text() == full.read_text()
+
+
+def test_runner_cli_shard_plan(tmp_path, capsys):
+    d = make_plugin(tmp_path, "plancli")
+    bf = tmp_path / "box.json"
+    bf.write_text(
+        json.dumps(
+            {
+                "name": "plan_box",
+                "tasks": [{"task": "plancli", "params": {"a": [1, 2, 3], "b": ["x", "y"]}}],
+            }
+        )
+    )
+    out = tmp_path / "should_not_exist.csv"
+    rc = runner_mod.main(
+        [
+            "--box", str(bf), "--plugin-dir", str(d),
+            "--shard", "0/2@0.25", "--shard-plan", "--out", str(out),
+        ]
+    )
+    assert rc == 0
+    captured = capsys.readouterr().out
+    assert "shard 0/2@0.25:0.75" in captured and "shard 1/2@0.25:0.75" in captured
+    assert "units" in captured and "share" in captured
+    assert not out.exists()  # dry run: nothing executed, nothing written
+    # --shard-plan without --shard is a usage error.
+    with pytest.raises(SystemExit):
+        runner_mod.main(["--box", str(bf), "--shard-plan"])
+
+
+def test_runner_cli_cache_eviction_flags(tmp_path):
+    d = make_plugin(tmp_path, "evcli")
+    bf = tmp_path / "box.json"
+    bf.write_text(
+        json.dumps(
+            {
+                "name": "ev_box",
+                "tasks": [{"task": "evcli", "params": {"a": [1, 2, 3], "b": ["x", "y"]}}],
+            }
+        )
+    )
+    cache = tmp_path / "cache.json"
+    rc = runner_mod.main(
+        [
+            "--box", str(bf), "--plugin-dir", str(d), "--iters", "1", "--warmup", "0",
+            "--cache", str(cache), "--cache-max-entries", "2",
+            "--out", str(tmp_path / "r.csv"),
+        ]
+    )
+    assert rc == 0
+    assert len(json.loads(cache.read_text())["entries"]) == 2  # trimmed on flush
