@@ -9,9 +9,13 @@ Usage:
   python -m benchmarks.run --no-cache                   # force remeasure
   python -m benchmarks.run --shard 0/2                  # one hash-slice of each figure
   python -m benchmarks.run --shard 0/2@0.25             # weighted (cost-balanced) slice
+  python -m benchmarks.run --shard 0/2@auto             # weights calibrated from fleet pings
   python -m benchmarks.run --shard 0/2 --shard-plan     # preview shard cost shares
   python -m benchmarks.run --merge                      # reassemble shard CSVs
   python -m benchmarks.run --remote 127.0.0.1:7177      # execute on a worker
+  python -m benchmarks.run --remote hostA:7177,hostB:7177 --workers 4
+                                                        # dynamic pull across a fleet
+  python -m benchmarks.run --schedule static            # up-front LPT plan instead
   python -m benchmarks.run --list
 
 Per figure: expand the box (paper §3.3), execute through the sweep
@@ -91,9 +95,20 @@ def main(argv=None) -> int:
     )
     p.add_argument("--pool", choices=("thread", "process"), default="thread")
     p.add_argument(
+        "--schedule", choices=("static", "dynamic"), default="dynamic",
+        help="dynamic (default): pull-based fleet scheduler with straggler "
+        "re-dispatch for pooled runs; static: up-front LPT plan",
+    )
+    p.add_argument(
+        "--straggler-factor", type=float, default=4.0, metavar="X",
+        help="dynamic schedule: speculatively re-dispatch a unit once it "
+        "has run X times its calibrated cost estimate (default 4)",
+    )
+    p.add_argument(
         "--shard", default=None, metavar="I/N[@W]",
         help="run only shard I of N of every figure; an @ weight suffix "
-        "(0/2@0.25) weights shards and switches to cost-balanced assignment",
+        "(0/2@0.25) weights shards and switches to cost-balanced "
+        "assignment; @auto calibrates weights from worker pings",
     )
     p.add_argument(
         "--weighted-shard", action="store_true",
@@ -110,8 +125,9 @@ def main(argv=None) -> int:
         help="merge existing per-figure shard CSVs into <figure>.csv and exit",
     )
     p.add_argument(
-        "--remote", default=None, metavar="HOST:PORT",
-        help="dispatch unit execution to a repro.core.remote worker",
+        "--remote", default=None, metavar="HOST:PORT[,HOST:PORT...]",
+        help="dispatch unit execution to repro.core.remote worker(s); "
+        "comma-separate a fleet for dynamic pull + @auto calibration",
     )
     p.add_argument("--no-cache", action="store_true", help="remeasure everything")
     p.add_argument("--cache-file", default=None, help="cache path (default <out>/cache.json)")
@@ -169,11 +185,20 @@ def main(argv=None) -> int:
             p.error(str(e))
     if args.shard_plan and shard is None:
         p.error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
-    if args.remote and not args.shard_plan:
+    if args.remote:
         from repro.core import remote as remote_mod
 
-        if not remote_mod.wait_ready(args.remote):
-            p.error(f"remote worker {args.remote} is not answering")
+        try:
+            endpoints = remote_mod.parse_fleet(args.remote)
+        except ValueError as e:
+            p.error(str(e))
+        if not args.shard_plan:
+            for ep in endpoints:
+                try:
+                    if not remote_mod.wait_ready(ep):
+                        p.error(f"remote worker {ep} is not answering")
+                except remote_mod.RemoteExecutionError as e:
+                    p.error(str(e))
     cache = None
     if not args.no_cache:
         cache = ResultCache(
@@ -190,6 +215,8 @@ def main(argv=None) -> int:
         pool=args.pool,
         remote=args.remote,
         weighted_shard=args.weighted_shard,
+        schedule=args.schedule,
+        straggler_factor=args.straggler_factor,
     )
     if args.shard_plan:
         from repro.core.box import Box

@@ -1,5 +1,5 @@
 from repro.core.box import Box, TaskSpec
-from repro.core.cache import ResultCache, cache_key
+from repro.core.cache import EwmaCostStore, ResultCache, cache_key
 from repro.core.cost import CostModel
 from repro.core.executor import SweepExecutor, SweepResult, SweepStats
 from repro.core.metrics import Samples, compute_metrics, known_metrics
@@ -12,11 +12,13 @@ from repro.core.platform import (
 )
 from repro.core.report import merge_shard_reports
 from repro.core.runner import Runner, RunnerResult
+from repro.core.scheduler import FleetScheduler, Outcome, Sink, WorkItem
 from repro.core.shard import (
     ShardSpec,
     cost_partition,
     cost_shard_map,
     partition,
+    resolve_auto_weights,
     shard_of,
 )
 from repro.core.task import Task, TaskContext, TestResult
@@ -25,9 +27,11 @@ __all__ = [
     "Box", "TaskSpec", "Samples", "compute_metrics", "known_metrics",
     "Runner", "RunnerResult", "Task", "TaskContext", "TestResult",
     "SweepExecutor", "SweepResult", "SweepStats",
-    "ResultCache", "cache_key", "CostModel",
+    "ResultCache", "cache_key", "CostModel", "EwmaCostStore",
+    "FleetScheduler", "Sink", "WorkItem", "Outcome",
     "Platform", "get_platform", "known_platforms", "register_platform",
     "remote_platform",
     "ShardSpec", "shard_of", "partition", "cost_shard_map", "cost_partition",
+    "resolve_auto_weights",
     "merge_shard_reports",
 ]

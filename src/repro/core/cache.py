@@ -15,11 +15,21 @@ cache format version — changes the key or invalidates the file wholesale.
 
 Entries also record the measured wall time (``elapsed_s``) of the unit that
 produced them; :class:`repro.core.cost.CostModel` feeds these back into
-weighted sharding and LPT dispatch on later runs.
+weighted sharding and scheduling on later runs.
 
 Long-lived caches are bounded by an optional eviction policy: construct
 with ``max_entries=`` and/or ``max_age_s=`` and ``flush()`` trims the
 oldest ``saved_unix`` entries (age first, then count) before writing.
+Eviction would throw the scheduling evidence away with the raw entries, so
+each cache keeps an :class:`EwmaCostStore` sidecar (``costs.json`` next to
+the cache file): a bounded EWMA of wall cost per (task, platform), updated
+on every ``put`` and flushed with the cache, surviving both eviction and
+``clear()``.
+
+All on-disk writes go through a fresh ``mkstemp`` file in the target
+directory followed by ``os.replace``, so neither a crash mid-write nor two
+processes flushing the same path concurrently can leave a truncated or
+interleaved JSON file behind.
 
 Thread-safe: the executor calls ``get``/``put`` from worker threads.
 """
@@ -27,12 +37,128 @@ from __future__ import annotations
 
 import hashlib
 import json
+import math
+import os
+import tempfile
 import threading
 import time
 from pathlib import Path
 from typing import Any
 
 CACHE_VERSION = 1
+COSTS_VERSION = 1
+
+#: Smoothing factor shared by every wall-cost EWMA (sidecar + worker pings).
+EWMA_ALPHA = 0.25
+
+
+def _atomic_write_text(path: Path, text: str) -> None:
+    """Crash- and concurrency-safe file replace.
+
+    The temp file is unique per writer (``mkstemp``), so two processes
+    flushing the same path can never interleave bytes in a shared ``.tmp``;
+    ``os.replace`` is atomic on POSIX and Windows, so readers only ever see
+    a complete old or complete new file.
+    """
+    path.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=str(path.parent), prefix=path.name + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+class EwmaCostStore:
+    """Persistent EWMA wall cost per (task, platform) — the ``costs.json``
+    sidecar of a :class:`ResultCache`.
+
+    The cache records exact ``elapsed_s`` per entry, but eviction discards
+    that scheduling evidence with the entries.  This store keeps a bounded
+    summary instead — one exponentially-weighted moving average per
+    (task, platform) — so :class:`repro.core.cost.CostModel` still has
+    per-platform evidence after the raw points are gone, and ``@auto``
+    shard weights have something to calibrate against on a fresh fleet.
+    """
+
+    def __init__(self, path: str | Path, alpha: float = EWMA_ALPHA):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.path = Path(path)
+        self.alpha = float(alpha)
+        self._lock = threading.Lock()
+        self._entries: dict[tuple[str, str], dict[str, float]] = {}
+        self._dirty = False
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            d = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return  # missing/corrupt -> start empty, overwrite on flush
+        if d.get("version") != COSTS_VERSION:
+            return
+        tasks = d.get("entries")
+        if not isinstance(tasks, dict):
+            return
+        for task, platforms in tasks.items():
+            if not isinstance(platforms, dict):
+                continue
+            for platform, e in platforms.items():
+                try:
+                    ewma = float(e["ewma_s"])
+                    n = int(e.get("n", 1))
+                except (KeyError, TypeError, ValueError):
+                    continue
+                if ewma > 0 and math.isfinite(ewma):
+                    self._entries[(str(task), str(platform))] = {"ewma_s": ewma, "n": max(1, n)}
+
+    def observe(self, task: str, platform: str, elapsed_s: Any) -> None:
+        """Fold one measured unit wall time into the (task, platform) EWMA."""
+        try:
+            x = float(elapsed_s)
+        except (TypeError, ValueError):
+            return
+        if not task or x <= 0 or not math.isfinite(x):
+            return
+        key = (str(task), str(platform))
+        with self._lock:
+            e = self._entries.get(key)
+            if e is None:
+                self._entries[key] = {"ewma_s": x, "n": 1}
+            else:
+                e["ewma_s"] = self.alpha * x + (1.0 - self.alpha) * e["ewma_s"]
+                e["n"] += 1
+            self._dirty = True
+
+    def get(self, task: str, platform: str) -> float | None:
+        with self._lock:
+            e = self._entries.get((task, platform))
+            return float(e["ewma_s"]) if e else None
+
+    def snapshot(self) -> dict[tuple[str, str], dict[str, float]]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._entries.items()}
+
+    def flush(self) -> None:
+        with self._lock:
+            if not self._dirty:
+                return
+            tasks: dict[str, dict[str, dict[str, float]]] = {}
+            for (task, platform), e in sorted(self._entries.items()):
+                tasks.setdefault(task, {})[platform] = dict(e)
+            payload = {"version": COSTS_VERSION, "alpha": self.alpha, "entries": tasks}
+            _atomic_write_text(self.path, json.dumps(payload, indent=1, default=str))
+            self._dirty = False
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
 
 
 def cache_key(
@@ -67,6 +193,8 @@ class ResultCache:
         path: str | Path,
         max_entries: int | None = None,
         max_age_s: float | None = None,
+        costs_path: str | Path | None = None,
+        cost_sidecar: bool = True,
     ):
         if max_entries is not None and max_entries < 0:
             raise ValueError(f"max_entries must be >= 0, got {max_entries}")
@@ -75,6 +203,11 @@ class ResultCache:
         self.path = Path(path)
         self.max_entries = max_entries
         self.max_age_s = max_age_s
+        # Cost-model persistence: EWMA per (task, platform) kept next to the
+        # cache so scheduling evidence survives entry eviction.
+        self.costs: EwmaCostStore | None = None
+        if cost_sidecar:
+            self.costs = EwmaCostStore(costs_path or self.path.with_name("costs.json"))
         self._lock = threading.Lock()
         self._entries: dict[str, dict[str, Any]] = {}
         self._dirty = False
@@ -130,6 +263,8 @@ class ResultCache:
         with self._lock:
             self._entries[key] = entry
             self._dirty = True
+        if self.costs is not None and elapsed_s is not None:
+            self.costs.observe(task, platform, elapsed_s)
 
     def snapshot(self) -> dict[str, dict[str, Any]]:
         """Point-in-time copy of all entries (read-only scheduling input)."""
@@ -167,16 +302,17 @@ class ResultCache:
     def flush(self) -> None:
         with self._lock:
             self._trim()
-            if not self._dirty:
-                return
-            payload = {"version": CACHE_VERSION, "entries": self._entries}
-            self.path.parent.mkdir(parents=True, exist_ok=True)
-            tmp = self.path.with_suffix(self.path.suffix + ".tmp")
-            tmp.write_text(json.dumps(payload, indent=1, default=str))
-            tmp.replace(self.path)
-            self._dirty = False
+            if self._dirty:
+                payload = {"version": CACHE_VERSION, "entries": self._entries}
+                _atomic_write_text(self.path, json.dumps(payload, indent=1, default=str))
+                self._dirty = False
+        if self.costs is not None:
+            self.costs.flush()
 
     def clear(self) -> None:
+        """Erase the cached RESULTS.  The cost sidecar deliberately
+        survives: it is aggregate scheduling evidence, not results, and
+        outliving eviction/clearing is its whole purpose."""
         with self._lock:
             had_entries = bool(self._entries)
             self._entries.clear()

@@ -15,6 +15,10 @@ estimate, in strictly decreasing order of trust:
      on real numbers.
   2. **Task+platform mean** — the mean measured cost of the same task on the
      same platform (other parameter points), when the exact point is new.
+  2b. **Persisted EWMA** — the cache's ``costs.json`` sidecar
+     (:class:`repro.core.cache.EwmaCostStore`) keeps an EWMA per
+     (task, platform) that survives entry eviction; consulted when the live
+     entries hold no mean for the pair.
   3. **Task mean × platform scale** — the task's mean across all platforms,
      scaled by the target platform's :meth:`~repro.core.platform.Platform.
      cost_scale` heuristic (``time_scale`` for simulated wimpy cores).
@@ -45,7 +49,7 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 DEFAULT_COST = 1.0
 
 #: estimate() provenance labels, most to least trusted.
-SOURCES = ("measured", "task-platform-mean", "task-mean", "heuristic", "uniform")
+SOURCES = ("measured", "task-platform-mean", "ewma", "task-mean", "heuristic", "uniform")
 
 
 class CostModel:
@@ -56,8 +60,18 @@ class CostModel:
         self._exact: dict[str, float] = {}
         self._task_platform: dict[tuple[str, str], list[float]] = {}
         self._task: dict[str, list[float]] = {}
+        self._ewma: dict[tuple[str, str], float] = {}
         if cache is not None:
             self._ingest(cache.snapshot())
+            costs = getattr(cache, "costs", None)
+            if costs is not None:
+                for key, e in costs.snapshot().items():
+                    try:
+                        v = float(e.get("ewma_s", 0.0) or 0.0)
+                    except (TypeError, ValueError):
+                        continue
+                    if v > 0:
+                        self._ewma[key] = v
 
     def _ingest(self, entries: Mapping[str, Mapping[str, Any]]) -> None:
         for key, entry in entries.items():
@@ -79,6 +93,16 @@ class CostModel:
     def measured_points(self) -> int:
         """How many exact measurements back this model."""
         return len(self._exact)
+
+    @property
+    def mean_elapsed_s(self) -> float | None:
+        """Mean measured unit wall time — a "typical unit costs X seconds"
+        scale for auto-weight fallbacks; sidecar EWMAs stand in when every
+        raw entry was evicted.  ``None`` with no evidence at all."""
+        vals = list(self._exact.values()) or list(self._ewma.values())
+        if not vals:
+            return None
+        return sum(vals) / len(vals)
 
     def estimate(
         self,
@@ -105,6 +129,9 @@ class CostModel:
             tp = self._task_platform.get((task, platform.name))
             if tp:
                 return sum(tp) / len(tp), "task-platform-mean"
+            ew = self._ewma.get((task, platform.name))
+            if ew is not None:
+                return ew, "ewma"
         if task:
             t = self._task.get(task)
             if t:

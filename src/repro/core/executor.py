@@ -25,17 +25,28 @@ on (ROADMAP: sharding, batching, async, caching, multi-backend):
     ``report.merge_shard_reports``.  Cache keys are shard-independent, so
     shards dedupe against each other through a shared cache.
   * **Cost-aware scheduling** — a :class:`repro.core.cost.CostModel` (fed by
-    wall times the cache records on every ``put``) drives two decisions:
-    shard specs with ``weights`` (or ``weighted_shard=True``) partition the
-    grid by *estimated cost* instead of key count, and multi-worker pools
-    dispatch longest-processing-time-first so the heaviest unit never runs
-    alone at the tail.  Report rows are still assembled in canonical grid
-    order, so output is byte-identical to sequential execution.
+    wall times the cache records on every ``put``, persisted across
+    eviction by the ``costs.json`` EWMA sidecar) drives shard specs with
+    ``weights`` (or ``weighted_shard=True``): the grid partitions by
+    *estimated cost* instead of key count.  ``--shard i/n@auto`` resolves
+    the weight vector from fleet pings (worker capacity + measured EWMA
+    throughput) plus local cost evidence instead of operator guesses.
     ``shard_plan(box, spec)`` previews the per-shard unit counts and cost
     shares without running anything.
+  * **Dynamic scheduling** (default for pooled runs) — a pull-based
+    :class:`repro.core.scheduler.FleetScheduler`: one cost-descending work
+    queue, drained by sink workers (local thread/process slots plus one
+    sink per remote endpoint at its advertised capacity) as they free up;
+    stragglers past ``straggler_factor x`` their calibrated estimate are
+    speculatively re-dispatched to idle sinks, first completion wins.
+    ``schedule="static"`` keeps the up-front plan: LPT submission order
+    (``_dispatch_order``) into a fixed thread/process pool.  Either way,
+    report rows are assembled in canonical grid order, so output is
+    byte-identical to sequential execution.
   * **Remote dispatch** — a ``kind="remote"`` platform (or an executor-wide
-    ``remote="host:port"`` endpoint) ships units to a
-    :mod:`repro.core.remote` worker instead of running them locally.
+    ``remote="host:port"`` endpoint; comma-separate several for a fleet)
+    ships units to :mod:`repro.core.remote` workers instead of running
+    them locally.
 
 Process-pool note: tasks registered only via ``_register_for_tests`` are
 invisible to spawned children; plugin directories ARE threaded into the
@@ -57,8 +68,26 @@ from repro.core.box import Box
 from repro.core.cost import CostModel
 from repro.core.metrics import compute_metrics
 from repro.core.platform import Platform, resolve
-from repro.core.shard import ShardSpec, cost_shard_map, shard_of
+from repro.core.scheduler import (
+    DEFAULT_STRAGGLER_FACTOR,
+    FleetScheduler,
+    Sink,
+    WorkItem,
+)
+from repro.core.shard import ShardSpec, cost_shard_map, resolve_auto_weights, shard_of
 from repro.core.task import TaskContext, TestResult
+
+
+class _ChildFailure(RuntimeError):
+    """A process-pool child (or worker) serialized a failure back.
+
+    Carries the child-side traceback so error reports show where the task
+    actually died, not where the parent re-raised.
+    """
+
+    def __init__(self, message: str, child_traceback: str = ""):
+        super().__init__(message)
+        self.child_traceback = child_traceback
 
 
 @dataclass
@@ -67,6 +96,8 @@ class SweepStats:
     executed: int = 0
     cached: int = 0
     errors: int = 0
+    # Units that got a speculative straggler copy under dynamic scheduling.
+    speculated: int = 0
 
 
 @dataclass
@@ -118,9 +149,15 @@ class SweepExecutor:
         pool: str = "thread",
         remote: str | None = None,
         weighted_shard: bool = False,
+        schedule: str = "dynamic",
+        straggler_factor: float = DEFAULT_STRAGGLER_FACTOR,
     ):
         if pool not in ("thread", "process"):
             raise ValueError(f"pool must be 'thread' or 'process', got {pool!r}")
+        if schedule not in ("static", "dynamic"):
+            raise ValueError(f"schedule must be 'static' or 'dynamic', got {schedule!r}")
+        if straggler_factor <= 0:
+            raise ValueError(f"straggler_factor must be > 0, got {straggler_factor}")
         self._platforms_explicit = platforms is not None
         self.platforms = [resolve(p) for p in (platforms or ["default"])]
         if len({p.name for p in self.platforms}) != len(self.platforms):
@@ -131,12 +168,18 @@ class SweepExecutor:
         self.fail_fast = fail_fast
         self.cache = cache
         self.pool = pool
-        # Endpoint of a repro.core.remote worker; when set, EVERY unit is
+        # Endpoint(s) of repro.core.remote workers; when set, EVERY unit is
         # dispatched there (per-platform remotes use kind="remote" instead).
+        # A comma-separated fleet gives the dynamic scheduler one sink per
+        # worker; static dispatch targets the first endpoint.
         self.remote = remote
         # Balance shard assignment by estimated cost even without explicit
         # shard weights (ShardSpec.weights implies it regardless).
         self.weighted_shard = weighted_shard
+        # "dynamic" (default): pull-based FleetScheduler for pooled runs;
+        # "static": the original up-front LPT plan into a fixed pool.
+        self.schedule = schedule
+        self.straggler_factor = float(straggler_factor)
         # Contexts persist across boxes so prepare is shared; cleaned explicitly.
         self._contexts: dict[tuple[str, str], TaskContext] = {}
         self._prep: dict[tuple[str, str], dict[str, Any]] = {}
@@ -192,18 +235,22 @@ class SweepExecutor:
             ) from state["error"]
 
     # -- unit execution ----------------------------------------------------
+    def _remote_endpoints(self) -> list[str]:
+        """The executor-wide worker fleet (empty when ``remote`` is unset)."""
+        from repro.core import remote as remote_mod
+
+        return remote_mod.parse_fleet(self.remote)
+
     def _remote_endpoint(self, unit: _Unit) -> str | None:
-        """Worker endpoint for this unit, or None for local execution."""
-        if self.remote is not None:
-            return self.remote
-        if unit.platform.kind == "remote":
-            endpoint = unit.platform.flags.get("endpoint")
-            if not endpoint:
-                raise ValueError(
-                    f"remote platform {unit.platform.name!r} has no 'endpoint' flag"
-                )
-            return str(endpoint)
-        return None
+        """Worker endpoint for this unit, or None for local execution.
+
+        With a multi-endpoint fleet this is the *static* answer (the first
+        endpoint); dynamic scheduling overrides per sink instead.
+        """
+        endpoints = self._remote_endpoints()
+        if endpoints:
+            return endpoints[0]
+        return unit.platform.endpoint()
 
     def _run_unit_remote(
         self, unit: _Unit, endpoint: str
@@ -231,8 +278,13 @@ class SweepExecutor:
             float(elapsed) if elapsed is not None else None,
         )
 
-    def _run_unit(self, unit: _Unit) -> tuple[TestResult, bool]:
-        """Execute (or cache-hit) one unit; returns (result, was_cached)."""
+    def _run_unit(self, unit: _Unit, endpoint: str | None = None) -> tuple[TestResult, bool]:
+        """Execute (or cache-hit) one unit; returns (result, was_cached).
+
+        ``endpoint`` forces dispatch to one specific worker (a dynamic
+        sink's home); ``None`` resolves statically from the executor/
+        platform configuration.
+        """
         if self.cache is not None and unit.ckey is not None:
             hit = self.cache.get(unit.ckey)
             if hit is not None:
@@ -242,7 +294,8 @@ class SweepExecutor:
                     ),
                     True,
                 )
-        endpoint = self._remote_endpoint(unit)
+        if endpoint is None:
+            endpoint = self._remote_endpoint(unit)
         if endpoint is not None:
             result, elapsed = self._run_unit_remote(unit, endpoint)
             if self.cache is not None and unit.ckey is not None:
@@ -327,6 +380,59 @@ class SweepExecutor:
                     idx += 1
         return units
 
+    def _endpoint_capacity(self, endpoint: str, fallback: int = 1) -> int:
+        """A worker's advertised concurrency (ping), else ``fallback``."""
+        from repro.core import remote as remote_mod
+
+        info = remote_mod.get_transport(endpoint).info()
+        if info is not None:
+            try:
+                return max(1, int(info.get("capacity", fallback) or fallback))
+            except (TypeError, ValueError):
+                pass
+        return max(1, int(fallback))
+
+    def _auto_weights(self, count: int) -> tuple[float, ...]:
+        """Resolve ``@auto`` shard weights from fleet pings + cost evidence.
+
+        Fleet endpoint i is shard i's home worker: its ping-advertised
+        capacity and measured EWMA unit time size the shard.  Shards beyond
+        the fleet (or the whole vector, with no fleet) are sized from local
+        evidence: this executor's ``workers`` slots at the local CostModel's
+        mean unit time.
+
+        Determinism caveat: local evidence is per-runner.  Runners sharding
+        the same box must resolve identical vectors or the grid loses
+        coverage, so with a partial fleet (fewer endpoints than shards)
+        every runner must use the same ``--workers`` and a shared cache;
+        with a full fleet the inputs are the workers' own pings, which
+        agree as long as the fleet is quiescent between resolutions (the
+        lattice quantization in :func:`resolve_auto_weights` absorbs small
+        EWMA jitter).  With no fleet at all the evidence is identical per
+        shard, so resolution is uniform regardless of runner settings.
+        """
+        from repro.core import remote as remote_mod
+
+        model = CostModel(self.cache)
+        endpoints = self._remote_endpoints()
+        evidence: list[dict[str, Any]] = []
+        for i in range(count):
+            if i < len(endpoints):
+                info = remote_mod.get_transport(endpoints[i]).info() or {}
+                throughput = info.get("throughput") or {}
+                evidence.append(
+                    {"capacity": info.get("capacity", 1), "ewma_s": throughput.get("ewma_s")}
+                )
+            else:
+                evidence.append({"capacity": self.workers, "ewma_s": model.mean_elapsed_s})
+        return resolve_auto_weights(count, evidence, default_unit_s=model.mean_elapsed_s)
+
+    def _resolve_shard(self, shard: ShardSpec | None) -> ShardSpec | None:
+        """Concretize an ``@auto`` spec; anything else passes through."""
+        if shard is None or not shard.is_auto:
+            return shard
+        return shard.resolved(self._auto_weights(shard.count))
+
     def _shard_owner_map(
         self, units: list[_Unit], shard: ShardSpec
     ) -> dict[str, int] | None:
@@ -355,6 +461,7 @@ class SweepExecutor:
         units = self._expand_candidates(box, platforms)
         if shard is None:
             return units
+        shard = self._resolve_shard(shard)
         owner = self._shard_owner_map(units, shard)
         if owner is None:
             units = [u for u in units if shard_of(u.skey, shard.count) == shard.index]
@@ -370,9 +477,11 @@ class SweepExecutor:
         """Dry-run preview: per-shard unit count and estimated cost share.
 
         Uses the exact same partition path as execution (cost-aware when the
-        spec carries weights or ``weighted_shard`` is set, legacy hash
-        otherwise), so the plan IS what ``run_box`` would do.
+        spec carries weights or ``weighted_shard`` is set, ``@auto`` weights
+        resolved from fleet pings, legacy hash otherwise), so the plan IS
+        what ``run_box`` would do.
         """
+        shard = self._resolve_shard(shard)
         platforms = self._box_platforms(box)
         units = self._expand_candidates(box, platforms)
         model = CostModel(self.cache)
@@ -413,26 +522,49 @@ class SweepExecutor:
         out.stats.total = len(units)
         ordered: list[TestResult | None] = [None] * len(units)
 
-        def record_error(unit: _Unit, exc: Exception) -> None:
+        def record_error(unit: _Unit, exc: BaseException) -> None:
+            # Child failures already carry "Type: message" plus the
+            # child-side traceback; don't re-wrap them in the parent's.
+            if isinstance(exc, _ChildFailure):
+                err, tb = str(exc), exc.child_traceback
+            else:
+                err = f"{type(exc).__name__}: {exc}"
+                # The dynamic path records errors after the worker thread
+                # unwound, so format from the exception's own traceback —
+                # format_exc() would see no active exception there.
+                if exc.__traceback__ is not None:
+                    tb = "".join(traceback.format_exception(type(exc), exc, exc.__traceback__))
+                else:
+                    tb = traceback.format_exc()
             out.stats.errors += 1
             out.errors.append(
                 {
                     "task": unit.task_name,
                     "params": json.dumps(unit.params, default=str),
                     "platform": unit.platform.name,
-                    "error": f"{type(exc).__name__}: {exc}",
-                    "traceback": traceback.format_exc(),
+                    "error": err,
+                    "traceback": tb,
                 }
             )
 
         # Remote units are network-bound and must not re-execute locally in
         # a spawned child, so remote dispatch always goes through the
-        # in-process (sequential/thread) paths.
+        # in-process (sequential/thread/dynamic-sink) paths.
         any_remote = self.remote is not None or any(
             u.platform.kind == "remote" for u in units
         )
+        # Dynamic (pull-based) scheduling is the default for pooled runs:
+        # more than one local worker slot, or a multi-worker remote fleet.
+        # Single-worker local runs keep the exact sequential seed path.
+        dynamic = (
+            self.schedule == "dynamic"
+            and len(units) > 1
+            and (self.workers > 1 or len(self._remote_endpoints()) > 1)
+        )
         try:
-            if self.workers == 1 or len(units) <= 1:
+            if dynamic:
+                self._run_dynamic(units, ordered, out, record_error)
+            elif self.workers == 1 or len(units) <= 1:
                 for unit in units:
                     try:
                         result, was_cached = self._run_unit(unit)
@@ -491,6 +623,142 @@ class SweepExecutor:
                     rows = [{**row, "platform": platform.name} for row in rows]
                 out.rows.extend(rows)
         return out
+
+    # -- dynamic (pull-based) scheduling -----------------------------------
+    def _run_unit_process(self, unit: _Unit, proc_pool: ProcessPoolExecutor) -> tuple[TestResult, bool]:
+        """A dynamic local sink's unit path under ``pool="process"``."""
+        if self.cache is not None and unit.ckey is not None:
+            hit = self.cache.get(unit.ckey)
+            if hit is not None:
+                return (
+                    TestResult(
+                        unit.task_name, dict(unit.params), hit, platform=unit.platform.name
+                    ),
+                    True,
+                )
+        res = proc_pool.submit(_subprocess_run_unit, _unit_payload(unit, self)).result()
+        if not res["ok"]:
+            raise _ChildFailure(res["error"], res.get("traceback", ""))
+        vals = res["metrics"]
+        if self.cache is not None and unit.ckey is not None:
+            self.cache.put(
+                unit.ckey,
+                vals,
+                task=unit.task_name,
+                params=unit.params,
+                platform=unit.platform.name,
+                elapsed_s=res.get("elapsed_s"),
+            )
+        return TestResult(unit.task_name, dict(unit.params), vals, platform=unit.platform.name), False
+
+    def _dynamic_sinks(
+        self, units: list[_Unit]
+    ) -> tuple[list[Sink], list[WorkItem], ProcessPoolExecutor | None]:
+        """Build the pull sinks and eligibility-tagged work items.
+
+        With an executor-wide fleet, every unit may run on any fleet sink
+        (the fleet identity — not the individual endpoint — is the cache
+        identity, so first-completion-wins speculation dedupes cleanly).
+        Otherwise each unit binds to the one sink that matches its
+        measurement target: its remote platform's endpoint, or the local
+        thread/process slots.
+        """
+        model = CostModel(self.cache)
+        costs = model.estimate_many(units)
+        sinks: list[Sink] = []
+        items: list[WorkItem] = []
+        endpoints = self._remote_endpoints()
+        if endpoints:
+            for ep in endpoints:
+                sinks.append(
+                    Sink(
+                        name=ep,
+                        capacity=self._endpoint_capacity(ep),
+                        run=lambda u, _ep=ep: self._run_unit(u, endpoint=_ep),
+                    )
+                )
+            ids = tuple(range(len(sinks)))
+            items = [WorkItem(u, costs.get(u.skey or "", 1.0), ids) for u in units]
+            return sinks, items, None
+        proc_pool: ProcessPoolExecutor | None = None
+        sink_of_endpoint: dict[str, int] = {}
+        local_id: int | None = None
+        for u in units:
+            ep = u.platform.endpoint()
+            if ep is not None:
+                sid = sink_of_endpoint.get(ep)
+                if sid is None:
+                    fallback = int(u.platform.flags.get("capacity", 1) or 1)
+                    sinks.append(
+                        Sink(
+                            name=ep,
+                            capacity=self._endpoint_capacity(ep, fallback=fallback),
+                            run=lambda x, _ep=ep: self._run_unit(x, endpoint=_ep),
+                        )
+                    )
+                    sid = sink_of_endpoint[ep] = len(sinks) - 1
+            else:
+                if local_id is None:
+                    if self.pool == "process":
+                        import multiprocessing
+
+                        proc_pool = ProcessPoolExecutor(
+                            max_workers=self.workers,
+                            mp_context=multiprocessing.get_context("spawn"),
+                        )
+                        pool_ref = proc_pool
+                        run = lambda x: self._run_unit_process(x, pool_ref)  # noqa: E731
+                    else:
+                        run = self._run_unit
+                    sinks.append(Sink(name="local", capacity=self.workers, run=run))
+                    local_id = len(sinks) - 1
+                sid = local_id
+            items.append(WorkItem(u, costs.get(u.skey or "", 1.0), (sid,)))
+        return sinks, items, proc_pool
+
+    def _run_dynamic(self, units, ordered, out, record_error) -> None:
+        sinks, items, proc_pool = self._dynamic_sinks(units)
+        try:
+            scheduler = FleetScheduler(
+                sinks,
+                straggler_factor=self.straggler_factor,
+                fail_fast=self.fail_fast,
+            )
+            outcomes = scheduler.run(items)
+        finally:
+            if proc_pool is not None:
+                # Don't wait: a wedged child (the reason its unit was
+                # speculated) must not block the sweep's return.
+                proc_pool.shutdown(wait=False, cancel_futures=True)
+        for oc in outcomes:
+            unit = oc.item.unit
+            out.stats.speculated += bool(oc.speculated)
+            if oc.error is not None:
+                if self.fail_fast:
+                    raise oc.error
+                record_error(unit, oc.error)
+            elif oc.result is not None:
+                ordered[unit.index] = oc.result
+                out.stats.cached += oc.was_cached
+                if (
+                    oc.speculated
+                    and not oc.was_cached
+                    and self.cache is not None
+                    and unit.ckey is not None
+                ):
+                    # Both attempts of a speculated unit share one cache key;
+                    # a losing attempt finishing AFTER the winner would have
+                    # overwritten the entry with its own measurement.
+                    # Re-assert the winner so the cache agrees with the
+                    # emitted row.
+                    self.cache.put(
+                        unit.ckey,
+                        oc.result.metrics,
+                        task=unit.task_name,
+                        params=unit.params,
+                        platform=unit.platform.name,
+                        elapsed_s=oc.elapsed_s,
+                    )
 
     def _dispatch_order(self, units: list[_Unit]) -> list[_Unit]:
         """Pool submission order: longest-processing-time-first.

@@ -71,6 +71,21 @@ class Platform:
             return self.time_scale
         return 1.0
 
+    def endpoint(self) -> str | None:
+        """Worker endpoint for ``kind == "remote"`` platforms, else None.
+
+        A remote platform without an ``endpoint`` flag is a configuration
+        error — there is nowhere to dispatch its units.  An optional
+        ``capacity`` flag hints the sink's concurrency when the worker's
+        ping cannot be reached (a live ping always wins).
+        """
+        if self.kind != "remote":
+            return None
+        ep = self.flags.get("endpoint")
+        if not ep:
+            raise ValueError(f"remote platform {self.name!r} has no 'endpoint' flag")
+        return str(ep)
+
     def cache_identity(self) -> dict[str, Any]:
         """What makes this platform's measurements distinct (cache keying).
 

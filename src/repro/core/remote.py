@@ -37,9 +37,10 @@ import sys
 import threading
 import time
 from pathlib import Path
-from typing import Any
+from typing import Any, Sequence
 
 from repro.core import registry
+from repro.core.cache import EWMA_ALPHA
 from repro.core.metrics import Samples
 
 CONNECT_TIMEOUT_S = 10.0
@@ -57,6 +58,27 @@ def parse_endpoint(endpoint: str) -> tuple[str, int]:
     if not port.isdigit():
         raise ValueError(f"bad endpoint {endpoint!r}; expected host:port")
     return host or "127.0.0.1", int(port)
+
+
+def parse_fleet(remote: "str | Sequence[str] | None") -> list[str]:
+    """``--remote`` value -> list of worker endpoints.
+
+    A single endpoint stays a one-element fleet; a comma-separated string
+    (``hostA:7177,hostB:7177``) or a sequence names several workers — the
+    dynamic scheduler gives each its own pull sink, and ``@auto`` shard
+    weights calibrate from their pings (fleet endpoint i is shard i's home
+    worker).  Every endpoint is validated up front.
+    """
+    if not remote:
+        return []
+    if isinstance(remote, str):
+        parts = [p.strip() for p in remote.split(",")]
+    else:
+        parts = [str(p).strip() for p in remote]
+    endpoints = [p for p in parts if p]
+    for ep in endpoints:
+        parse_endpoint(ep)
+    return endpoints
 
 
 def samples_from_wire(d: dict[str, Any]) -> Samples:
@@ -114,6 +136,13 @@ class WorkerServer(socketserver.ThreadingTCPServer):
         self._slots = threading.BoundedSemaphore(self.capacity)
         self._task_locks: dict[tuple[str, str], threading.Lock] = {}
         self._locks_guard = threading.Lock()
+        # Measured throughput, advertised on ping: EWMA of this worker's own
+        # unit wall times (overall + per task).  Auto-weight calibration
+        # (``--shard i/n@auto``) sizes shards from capacity / ewma_s.
+        self._stats_lock = threading.Lock()
+        self._units_done = 0
+        self._ewma_s: float | None = None
+        self._task_ewma_s: dict[str, float] = {}
         registry.load_plugin_dirs(str(d) for d in plugin_dirs)
 
     @property
@@ -127,13 +156,42 @@ class WorkerServer(socketserver.ThreadingTCPServer):
         with self._locks_guard:
             return self._task_locks.setdefault(key, threading.Lock())
 
+    def _observe(self, task: str, elapsed_s: Any) -> None:
+        """Fold one finished unit's wall time into the advertised EWMAs."""
+        try:
+            x = float(elapsed_s)
+        except (TypeError, ValueError):
+            return
+        if x <= 0:
+            return
+        with self._stats_lock:
+            self._units_done += 1
+            self._ewma_s = (
+                x if self._ewma_s is None
+                else EWMA_ALPHA * x + (1.0 - EWMA_ALPHA) * self._ewma_s
+            )
+            prev = self._task_ewma_s.get(task)
+            self._task_ewma_s[task] = (
+                x if prev is None else EWMA_ALPHA * x + (1.0 - EWMA_ALPHA) * prev
+            )
+
+    def throughput(self) -> dict[str, Any]:
+        """The measured-throughput payload advertised on ping."""
+        with self._stats_lock:
+            return {
+                "units": self._units_done,
+                "ewma_s": self._ewma_s,
+                "per_task": dict(self._task_ewma_s),
+            }
+
     def dispatch(self, req: dict[str, Any]) -> dict[str, Any]:
         from repro.core import executor as executor_mod
 
         op = req.get("op")
         if op == "ping":
             return {
-                "ok": True, "op": "ping", "pid": os.getpid(), "capacity": self.capacity
+                "ok": True, "op": "ping", "pid": os.getpid(),
+                "capacity": self.capacity, "throughput": self.throughput(),
             }
         if op == "run":
             # Payload plugin dirs load inside _subprocess_run_unit's try, so
@@ -145,7 +203,10 @@ class WorkerServer(socketserver.ThreadingTCPServer):
             # really do run concurrently up to capacity.  No deadlock: a
             # slot holder is always executing, never waiting on a lock.
             with self._task_lock(payload), self._slots:
-                return executor_mod._subprocess_run_unit(payload)
+                resp = executor_mod._subprocess_run_unit(payload)
+            if resp.get("ok"):
+                self._observe(str(payload.get("task", "?")), resp.get("elapsed_s"))
+            return resp
         return {"ok": False, "error": f"unknown op {op!r}"}
 
     def serve_in_thread(self) -> threading.Thread:
@@ -281,6 +342,16 @@ class RemoteTransport:
         except RemoteExecutionError:
             return False
 
+    def info(self) -> dict[str, Any] | None:
+        """Full ping payload (capacity, measured throughput) from a live
+        worker; ``None`` when the worker is unreachable or answered with an
+        error payload."""
+        try:
+            resp = self.request({"op": "ping"})
+        except RemoteExecutionError:
+            return None
+        return resp if resp.get("ok") else None
+
     def run_unit(self, payload: dict[str, Any]) -> dict[str, Any]:
         resp = self.request({"op": "run", "payload": payload})
         if not resp.get("ok"):
@@ -304,13 +375,31 @@ def get_transport(endpoint: str) -> RemoteTransport:
 
 
 def wait_ready(endpoint: str, timeout: float = 30.0) -> bool:
-    """Poll until the worker answers ping (workers announce asynchronously)."""
+    """Poll until the worker answers ping (workers announce asynchronously).
+
+    Only *unreachable* states keep polling (connection refused / reset /
+    timed out — the worker just hasn't bound yet).  A worker that ANSWERS
+    ping with an error payload is alive but broken (bad plugin, protocol
+    mismatch); waiting the full timeout on it would only mask the real
+    failure, so that raises :class:`RemoteExecutionError` immediately with
+    the worker's own payload in the message.
+    """
     deadline = time.monotonic() + timeout
-    while time.monotonic() < deadline:
-        if get_transport(endpoint).ping():
+    transport = get_transport(endpoint)
+    while True:
+        try:
+            resp = transport.request({"op": "ping"})
+        except RemoteExecutionError:
+            if time.monotonic() >= deadline:
+                return False
+            time.sleep(0.1)
+            continue
+        if resp.get("ok"):
             return True
-        time.sleep(0.1)
-    return False
+        raise RemoteExecutionError(
+            f"worker {endpoint} answered ping with an error payload: "
+            f"{resp.get('error', resp)!r}"
+        )
 
 
 # -- loopback worker subprocess ----------------------------------------------
@@ -433,7 +522,11 @@ def main(argv: list[str] | None = None) -> int:
             server.server_close()
         return 0
     if args.cmd == "ping":
-        ok = wait_ready(args.endpoint, timeout=args.timeout)
+        try:
+            ok = wait_ready(args.endpoint, timeout=args.timeout)
+        except RemoteExecutionError as e:
+            print(f"error: {e}")
+            return 1
         print("ok" if ok else "unreachable")
         return 0 if ok else 1
     return 2
@@ -451,5 +544,6 @@ __all__ = [
     "get_transport",
     "wait_ready",
     "parse_endpoint",
+    "parse_fleet",
     "samples_from_wire",
 ]

@@ -20,10 +20,17 @@ reports into the canonical unsharded table, and ``--remote host:port``
 dispatches unit execution to a ``repro.core.remote`` worker.
 
 Heterogeneous fleets schedule by cost: ``--shard i/n@w`` weights shards,
-``--weighted-shard`` balances estimated per-unit cost (fed by wall times the
-cache records) instead of key count, ``--shard-plan`` previews each shard's
-unit count and cost share, and ``--cache-max-entries`` /
-``--cache-max-age`` bound long-lived caches on flush.
+``--shard i/n@auto`` calibrates the weight vector from worker pings + cost
+evidence, ``--weighted-shard`` balances estimated per-unit cost (fed by
+wall times the cache records) instead of key count, ``--shard-plan``
+previews each shard's unit count and cost share, and
+``--cache-max-entries`` / ``--cache-max-age`` bound long-lived caches on
+flush (an EWMA cost sidecar survives the eviction).
+
+Pooled runs default to ``--schedule dynamic``: a pull-based fleet scheduler
+(one cost-descending queue, sinks per worker endpoint honoring advertised
+capacity, speculative re-dispatch of stragglers past ``--straggler-factor``
+times their estimate).  ``--schedule static`` keeps the up-front LPT plan.
 """
 from __future__ import annotations
 
@@ -71,6 +78,8 @@ class Runner:
         pool: str = "thread",
         remote: str | None = None,
         weighted_shard: bool = False,
+        schedule: str = "dynamic",
+        straggler_factor: float = 4.0,
     ):
         if platforms is not None and platform is not None:
             raise ValueError("pass either platform= or platforms=, not both")
@@ -87,6 +96,8 @@ class Runner:
             pool=pool,
             remote=remote,
             weighted_shard=weighted_shard,
+            schedule=schedule,
+            straggler_factor=straggler_factor,
         )
         self.platform = self._exec.platforms[0].describe()
         self.iters = iters
@@ -154,10 +165,21 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--format", choices=("csv", "md", "json"), default="csv")
     p.add_argument("--out", default=None, help="write report here instead of stdout")
     p.add_argument(
+        "--schedule", choices=("static", "dynamic"), default="dynamic",
+        help="dynamic (default): pull-based fleet scheduler with straggler "
+        "re-dispatch for pooled runs; static: up-front LPT plan",
+    )
+    p.add_argument(
+        "--straggler-factor", type=float, default=4.0, metavar="X",
+        help="dynamic schedule: speculatively re-dispatch a unit once it "
+        "has run X times its calibrated cost estimate (default 4)",
+    )
+    p.add_argument(
         "--shard", default=None, metavar="I/N[@W]",
         help="run only shard I of N (e.g. 0/2); an @ weight suffix "
         "(0/2@0.25, 1/4@0.1:0.3:0.3:0.3) gives shards capacity weights and "
-        "switches to cost-balanced assignment",
+        "switches to cost-balanced assignment; @auto calibrates the vector "
+        "from worker pings + cost evidence",
     )
     p.add_argument(
         "--weighted-shard", action="store_true",
@@ -174,8 +196,10 @@ def main(argv: list[str] | None = None) -> int:
         help="merge shard report files (.csv/.json) into one table and exit",
     )
     p.add_argument(
-        "--remote", default=None, metavar="HOST:PORT",
-        help="dispatch unit execution to a repro.core.remote worker",
+        "--remote", default=None, metavar="HOST:PORT[,HOST:PORT...]",
+        help="dispatch unit execution to repro.core.remote worker(s); "
+        "comma-separate a fleet — the dynamic schedule gives each worker "
+        "its own sink, and @auto shard weights calibrate from their pings",
     )
     p.add_argument(
         "--plugin-dir", action="append", default=[], metavar="DIR",
@@ -239,11 +263,20 @@ def main(argv: list[str] | None = None) -> int:
             p.error(str(e))
     if args.shard_plan and shard is None:
         p.error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
-    if args.remote and not args.shard_plan:
+    if args.remote:
         from repro.core import remote as remote_mod
 
-        if not remote_mod.wait_ready(args.remote):
-            p.error(f"remote worker {args.remote} is not answering")
+        try:
+            endpoints = remote_mod.parse_fleet(args.remote)
+        except ValueError as e:
+            p.error(str(e))
+        if not args.shard_plan:
+            for ep in endpoints:
+                try:
+                    if not remote_mod.wait_ready(ep):
+                        p.error(f"remote worker {ep} is not answering")
+                except remote_mod.RemoteExecutionError as e:
+                    p.error(str(e))
     cache = None
     if args.cache and not args.no_cache:
         cache = ResultCache(
@@ -260,6 +293,8 @@ def main(argv: list[str] | None = None) -> int:
         pool=args.pool,
         remote=args.remote,
         weighted_shard=args.weighted_shard,
+        schedule=args.schedule,
+        straggler_factor=args.straggler_factor,
     )
     if args.shard_plan:
         plan = runner.executor.shard_plan(box, shard)
@@ -282,6 +317,11 @@ def main(argv: list[str] | None = None) -> int:
         print(f"# shard {shard}: {res.stats.total} units", file=sys.stderr)
     if cache is not None:
         print(f"# cached={res.stats.cached}/{res.stats.total}", file=sys.stderr)
+    if res.stats.speculated:
+        print(
+            f"# speculated={res.stats.speculated} straggler unit(s) re-dispatched",
+            file=sys.stderr,
+        )
     for err in res.errors:
         print(f"ERROR {err['task']} {err['params']}: {err['error']}", file=sys.stderr)
     return 1 if res.errors else 0

@@ -1,0 +1,355 @@
+"""Pull-based dynamic fleet scheduler (ROADMAP: straggler re-dispatch).
+
+Static dispatch (``SweepExecutor`` with ``schedule="static"``) decides
+everything up front: LPT submission order and per-shard ownership are fixed
+before the first unit runs, so a mis-weighted shard or one hung remote unit
+stalls the whole sweep — exactly the asymmetric host-vs-SmartNIC behaviour
+the BlueField-2 characterizations document.  This module reacts to measured
+progress instead:
+
+  * a single **priority work queue** (cost-descending, fed by
+    :class:`repro.core.cost.CostModel` estimates) holds every unit;
+  * **sink workers** — local thread/process slots and one sink per remote
+    worker endpoint, each honoring the worker's advertised capacity — PULL
+    the heaviest unit they are eligible for as a slot frees up, so a fast
+    sink that drains early keeps taking work instead of idling behind a
+    static plan;
+  * when the queue is empty and a unit has run longer than
+    ``straggler_factor x`` its (runtime-calibrated) cost estimate, a
+    **speculative copy** is re-enqueued for the other eligible sinks; the
+    first completion wins and the loser is discarded.  Both attempts share
+    one cache-key identity, so the duplicate dedupes through the result
+    cache and report rows stay byte-identical to a sequential run.
+
+The scheduler is execution-agnostic: a :class:`Sink` is just a name, a
+capacity, and a ``run(unit)`` callable, so tests drive it with
+controllable-latency fakes and the executor drives it with its
+``_run_unit`` / process-pool / remote-transport closures.
+
+Calibration note: cost estimates are *relative* weights, not seconds.  The
+monitor learns the seconds-per-cost scale from completed attempts (median of
+``elapsed / cost``) and only calls a unit a straggler once its runtime
+exceeds ``straggler_factor x cost x scale`` (never less than
+``min_straggler_s``), so a uniformly slow fleet is not speculated against —
+and with nothing completed yet there is no scale, hence no speculation at
+all.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Sequence
+
+#: Re-dispatch a unit once its runtime exceeds this multiple of its
+#: calibrated cost estimate (and the queue has drained).
+DEFAULT_STRAGGLER_FACTOR = 4.0
+#: Never call a unit a straggler before it has run at least this long.
+DEFAULT_MIN_STRAGGLER_S = 0.25
+
+
+@dataclass
+class Sink:
+    """One pull-capable execution endpoint (local slots or a remote worker).
+
+    ``run`` executes one unit and returns ``(result, was_cached)``; it is
+    called from up to ``capacity`` puller threads at once and may raise to
+    report a unit failure.
+    """
+
+    name: str
+    capacity: int
+    run: Callable[[Any], tuple[Any, bool]]
+
+
+@dataclass
+class WorkItem:
+    """One schedulable unit: an opaque payload plus its scheduling inputs.
+
+    ``cost`` is the relative wall-cost estimate (queue priority is
+    cost-descending); ``sinks`` restricts execution to those sink indexes
+    (``None`` = any sink) — a unit bound to a specific measurement target
+    (its remote platform's endpoint) must not run elsewhere.
+    """
+
+    unit: Any
+    cost: float = 1.0
+    sinks: tuple[int, ...] | None = None
+
+
+@dataclass
+class Outcome:
+    """What happened to one work item.
+
+    ``attempts`` counts every claim (errored tries on dead sinks and the
+    speculative copy included); ``error`` is only set when NO attempt
+    succeeded — a unit that errored on one sink is retried on each
+    remaining eligible sink before the error becomes terminal.
+    ``elapsed_s`` is the winning attempt's wall time (None for errors).
+    """
+
+    item: WorkItem
+    result: Any = None
+    was_cached: bool = False
+    error: BaseException | None = None
+    sink: str | None = None
+    attempts: int = 0
+    speculated: bool = False
+    elapsed_s: float | None = None
+
+
+class _Tracked:
+    """Scheduler-internal state for one work item."""
+
+    __slots__ = (
+        "item", "eligible", "waves", "live", "claims", "started",
+        "running_on", "tried", "speculated", "done", "outcome",
+    )
+
+    def __init__(self, item: WorkItem, eligible: tuple[int, ...]):
+        self.item = item
+        self.eligible = eligible
+        self.waves: set[int] = set()  # open (not yet claimed) enqueue waves
+        self.live = 0  # attempts currently executing
+        self.claims = 0
+        self.started = 0.0  # monotonic claim time of the latest attempt
+        self.running_on: int | None = None
+        self.tried: set[int] = set()  # sinks that have attempted this unit
+        self.speculated = False
+        self.done = False
+        self.outcome = Outcome(item)
+
+
+class FleetScheduler:
+    """Cost-descending work queue drained by pulling sinks.
+
+    Tickets, not assignments: enqueueing a unit pushes one *ticket* per
+    eligible sink (a "wave"); the first sink to pop any of the wave's
+    tickets claims the unit and the others discard their now-stale copies
+    when they surface.  Work therefore flows to whichever eligible sink
+    frees up first — no ownership is decided ahead of execution.
+    """
+
+    def __init__(
+        self,
+        sinks: Sequence[Sink],
+        *,
+        straggler_factor: float = DEFAULT_STRAGGLER_FACTOR,
+        min_straggler_s: float = DEFAULT_MIN_STRAGGLER_S,
+        fail_fast: bool = False,
+        poll_s: float = 0.05,
+    ):
+        if not sinks:
+            raise ValueError("need at least one sink")
+        for s in sinks:
+            if s.capacity < 1:
+                raise ValueError(f"sink {s.name!r} capacity must be >= 1, got {s.capacity}")
+        if straggler_factor <= 0:
+            raise ValueError(f"straggler_factor must be > 0, got {straggler_factor}")
+        self.sinks = list(sinks)
+        self.straggler_factor = float(straggler_factor)
+        self.min_straggler_s = float(min_straggler_s)
+        self.fail_fast = fail_fast
+        self.poll_s = float(poll_s)
+        self._cv = threading.Condition()
+        self._heaps: list[list[tuple[float, int, int, _Tracked]]] = [[] for _ in self.sinks]
+        self._seq = 0
+        self._next_wave = 0
+        self._open_tickets = 0  # open waves across all tracked units
+        self._done_count = 0
+        self._stop = False
+        self._scale_samples: list[float] = []
+        self._tracked: list[_Tracked] = []
+
+    # -- queue (all helpers assume self._cv is held) ------------------------
+    def _push_wave_locked(self, t: _Tracked, sink_ids: Sequence[int]) -> None:
+        wave = self._next_wave
+        self._next_wave += 1
+        t.waves.add(wave)
+        self._open_tickets += 1
+        for sid in sink_ids:
+            self._seq += 1
+            # seq breaks cost ties in submission (grid) order, so with no
+            # cost evidence sinks pull in canonical order like static LPT.
+            heapq.heappush(self._heaps[sid], (-max(t.item.cost, 0.0), self._seq, wave, t))
+        self._cv.notify_all()
+
+    def _claim_locked(self, sid: int) -> _Tracked | None:
+        heap = self._heaps[sid]
+        while heap:
+            _, _, wave, t = heapq.heappop(heap)
+            if t.done or wave not in t.waves:
+                continue  # stale ticket: claimed elsewhere or already finished
+            t.waves.discard(wave)
+            self._open_tickets -= 1
+            t.live += 1
+            t.claims += 1
+            t.started = time.monotonic()
+            t.running_on = sid
+            t.tried.add(sid)
+            return t
+        return None
+
+    # -- pullers ------------------------------------------------------------
+    def _puller(self, sid: int) -> None:
+        sink = self.sinks[sid]
+        while True:
+            with self._cv:
+                t = None
+                while not self._stop:
+                    t = self._claim_locked(sid)
+                    if t is not None:
+                        break
+                    self._cv.wait()
+                if t is None:
+                    return
+            t0 = time.monotonic()
+            try:
+                result, was_cached = sink.run(t.item.unit)
+            except BaseException as e:  # noqa: BLE001 - reported per unit
+                self._finish(t, sid, error=e)
+            else:
+                self._finish(
+                    t, sid, result=result, was_cached=bool(was_cached),
+                    elapsed=time.monotonic() - t0,
+                )
+
+    def _finish(
+        self,
+        t: _Tracked,
+        sid: int,
+        result: Any = None,
+        was_cached: bool = False,
+        error: BaseException | None = None,
+        elapsed: float | None = None,
+    ) -> None:
+        with self._cv:
+            t.live -= 1
+            if t.done:
+                # The losing attempt of a speculated unit: its result was
+                # already deduped through the shared cache identity; drop it.
+                self._cv.notify_all()
+                return
+            if error is not None:
+                t.outcome.error = error
+                if t.live > 0 or t.waves:
+                    return  # another attempt may still win this unit
+                untried = tuple(s for s in t.eligible if s not in t.tried)
+                if untried:
+                    # An error is only terminal once every eligible sink has
+                    # had a go: a crashed fleet worker fast-fails its claims,
+                    # and without this hand-off it would out-claim the
+                    # healthy sinks and drain the queue into errors.
+                    self._push_wave_locked(t, untried)
+                    return
+            else:
+                t.outcome.result = result
+                t.outcome.was_cached = was_cached
+                t.outcome.error = None
+                t.outcome.sink = self.sinks[sid].name
+                t.outcome.elapsed_s = elapsed
+                if elapsed is not None and not was_cached and t.item.cost > 0:
+                    # Cache hits return in microseconds and would collapse
+                    # the seconds-per-cost scale, flagging every genuinely
+                    # executing unit as a straggler on warm-cache runs.
+                    self._scale_samples.append(elapsed / t.item.cost)
+            t.outcome.attempts = t.claims
+            t.outcome.speculated = t.speculated
+            t.done = True
+            # Retire still-open waves: a speculative ticket for a unit that
+            # just completed must never be claimed.
+            self._open_tickets -= len(t.waves)
+            t.waves.clear()
+            self._done_count += 1
+            if t.outcome.error is not None and self.fail_fast:
+                self._stop = True
+            self._cv.notify_all()
+
+    # -- straggler monitor ---------------------------------------------------
+    def _scale_locked(self) -> float | None:
+        """Median observed seconds-per-cost over completed attempts."""
+        if not self._scale_samples:
+            return None
+        s = sorted(self._scale_samples)
+        return s[len(s) // 2]
+
+    def _maybe_speculate_locked(self) -> None:
+        if self._open_tickets:
+            return  # work still queued: no sink is starving yet
+        scale = self._scale_locked()
+        if scale is None:
+            # Nothing has completed: there is no basis to call anything a
+            # straggler, and speculating against an arbitrary scale would
+            # double-run legitimately long units on a cold cache.
+            return
+        now = time.monotonic()
+        for t in self._tracked:
+            if t.done or t.live != 1 or t.speculated or t.waves:
+                continue
+            threshold = max(
+                self.min_straggler_s,
+                self.straggler_factor * max(t.item.cost, 0.0) * scale,
+            )
+            if now - t.started <= threshold:
+                continue
+            # Re-dispatch to the other eligible sinks (they are idle: the
+            # queue is empty).  A single-sink unit retries on another slot /
+            # connection of the same sink — that still beats a wedged one.
+            others = tuple(s for s in t.eligible if s != t.running_on) or t.eligible
+            t.speculated = True
+            self._push_wave_locked(t, others)
+
+    # -- entry point ---------------------------------------------------------
+    def run(self, items: Sequence[WorkItem]) -> list[Outcome]:
+        """Execute every item; returns outcomes in input order.
+
+        Returns when all items completed (or, under ``fail_fast``, as soon
+        as one unit finally errors — unstarted items then carry neither
+        result nor error).  Attempts still executing at return are
+        abandoned on daemon threads; their late results are discarded.
+        """
+        all_ids = tuple(range(len(self.sinks)))
+        with self._cv:
+            self._tracked = []
+            for item in items:
+                eligible = tuple(item.sinks) if item.sinks is not None else all_ids
+                if not eligible:
+                    raise ValueError(f"work item {item.unit!r} has no eligible sink")
+                for sid in eligible:
+                    if not 0 <= sid < len(self.sinks):
+                        raise ValueError(f"work item {item.unit!r} names unknown sink {sid}")
+                self._tracked.append(_Tracked(item, eligible))
+            for t in self._tracked:
+                self._push_wave_locked(t, t.eligible)
+        threads = []
+        for sid, sink in enumerate(self.sinks):
+            for slot in range(sink.capacity):
+                th = threading.Thread(
+                    target=self._puller, args=(sid,), daemon=True,
+                    name=f"sink-{sink.name}-{slot}",
+                )
+                th.start()
+                threads.append(th)
+        try:
+            with self._cv:
+                while self._done_count < len(self._tracked) and not self._stop:
+                    self._cv.wait(timeout=self.poll_s)
+                    self._maybe_speculate_locked()
+        finally:
+            with self._cv:
+                self._stop = True
+                self._cv.notify_all()
+        for th in threads:
+            th.join(timeout=0.1)
+        return [t.outcome for t in self._tracked]
+
+
+__all__ = [
+    "FleetScheduler",
+    "Sink",
+    "WorkItem",
+    "Outcome",
+    "DEFAULT_STRAGGLER_FACTOR",
+    "DEFAULT_MIN_STRAGGLER_S",
+]

@@ -35,13 +35,76 @@ Heterogeneous fleets additionally get **weighted, cost-aware** partitions:
     same cost evidence computes the same partition — at the price of full
     hash stability for overflowed keys (documented trade: balance beats
     stickiness exactly when costs are skewed enough to matter).
+  * **Auto-calibrated weights** (``--shard i/n@auto``): instead of operator
+    guesses, the weight vector is resolved by :func:`resolve_auto_weights`
+    from fleet evidence — each worker's ping-advertised concurrency
+    capacity and measured per-unit EWMA wall time, with local
+    :class:`~repro.core.cost.CostModel` evidence standing in for workers
+    that have not measured anything yet.  Resolved shares are snapped to a
+    coarse lattice so two runners resolving against the same (quiescent)
+    fleet moments apart still agree on the exact same vector, hence the
+    same partition.
 """
 from __future__ import annotations
 
 import hashlib
 import math
 from dataclasses import dataclass
-from typing import Iterable, Mapping, Sequence
+from typing import Any, Iterable, Mapping, Sequence
+
+#: Sentinel accepted wherever a weight vector is: resolve from fleet
+#: evidence (worker pings + local cost model) instead of operator guesses.
+AUTO_WEIGHTS = "auto"
+
+
+def resolve_auto_weights(
+    count: int,
+    evidence: Sequence[Mapping[str, Any] | None] | None = None,
+    default_unit_s: float | None = None,
+    grid: int = 64,
+) -> tuple[float, ...]:
+    """Concrete per-shard capacity weights from fleet evidence.
+
+    ``evidence[i]`` describes shard i's home worker: ``capacity`` (units it
+    executes concurrently, from its ping) and ``ewma_s`` (its measured
+    per-unit wall-time EWMA, also ping-advertised).  A shard's relative
+    speed is ``capacity / ewma_s``; workers with no measurements yet fall
+    back to ``default_unit_s`` (typically the local CostModel's mean unit
+    time) so a fresh worker is sized by capacity alone.  Missing evidence
+    entries count as one capacity unit at the default speed.
+
+    Shares are snapped onto a ``1/grid`` lattice (at least one cell each):
+    every runner of a sharded sweep resolves this vector independently, and
+    quantization absorbs the EWMA jitter between their resolutions so they
+    still compute identical partitions.  Resolve against a quiescent fleet
+    — a worker measuring units *between* two runners' resolutions can still
+    move its share across a lattice boundary.
+    """
+    if count < 1:
+        raise ValueError(f"shard count must be >= 1, got {count}")
+    if grid < count:
+        raise ValueError(f"grid must be >= shard count, got {grid} < {count}")
+    if count == 1:
+        return (1.0,)
+    ev = list(evidence or [])
+    speeds: list[float] = []
+    for i in range(count):
+        e = ev[i] if i < len(ev) and ev[i] else {}
+        try:
+            cap = float(e.get("capacity") or 1.0)
+        except (TypeError, ValueError):
+            cap = 1.0
+        try:
+            unit_s = float(e.get("ewma_s") or default_unit_s or 1.0)
+        except (TypeError, ValueError):
+            unit_s = 1.0
+        speeds.append(max(cap, 1e-9) / max(unit_s, 1e-9))
+    total = sum(speeds)
+    if total <= 0 or not math.isfinite(total):
+        return (1.0 / count,) * count
+    cells = [max(1, round(s / total * grid)) for s in speeds]
+    csum = sum(cells)
+    return tuple(c / csum for c in cells)
 
 
 def _parse_weights(text: str, index: int, count: int) -> tuple[float, ...]:
@@ -76,12 +139,15 @@ class ShardSpec:
 
     ``weights`` (optional, len == count) are relative capacity weights for
     ALL shards — every runner needs the full vector to compute the same
-    partition.  ``None`` means uniform.
+    partition.  ``None`` means uniform.  The string ``"auto"``
+    (:data:`AUTO_WEIGHTS`, CLI ``i/n@auto``) defers to fleet calibration:
+    the executor resolves it into a concrete vector via
+    :func:`resolve_auto_weights` before any hashing happens.
     """
 
     index: int
     count: int
-    weights: tuple[float, ...] | None = None
+    weights: tuple[float, ...] | str | None = None
 
     def __post_init__(self) -> None:
         if self.count < 1:
@@ -90,16 +156,23 @@ class ShardSpec:
             raise ValueError(
                 f"shard index must be in [0, {self.count}), got {self.index}"
             )
-        if self.weights is not None:
+        if isinstance(self.weights, str):
+            if self.weights != AUTO_WEIGHTS:
+                raise ValueError(
+                    f"weights must be a vector, None, or {AUTO_WEIGHTS!r}; "
+                    f"got {self.weights!r}"
+                )
+        elif self.weights is not None:
             object.__setattr__(self, "weights", tuple(float(w) for w in self.weights))
             check_weights(self.weights, self.count)
 
     @staticmethod
     def parse(text: str) -> "ShardSpec":
-        """Parse the CLI form ``"i/n"``, ``"i/n@w"`` or ``"i/n@w0:w1:..."``.
+        """Parse ``"i/n"``, ``"i/n@w"``, ``"i/n@w0:w1:..."`` or ``"i/n@auto"``.
 
         ``0/2`` — uniform; ``0/2@0.25`` — this shard gets 25% of the work
-        (the rest split evenly); ``2/3@0.5:0.25:0.25`` — explicit vector.
+        (the rest split evenly); ``2/3@0.5:0.25:0.25`` — explicit vector;
+        ``0/2@auto`` — weights calibrated from fleet pings + cost evidence.
         """
         spec, sep, wtext = text.partition("@")
         try:
@@ -107,23 +180,42 @@ class ShardSpec:
                 raise ValueError("empty weight suffix after '@'")
             idx_s, _, cnt_s = spec.partition("/")
             idx, cnt = int(idx_s), int(cnt_s)
-            weights = _parse_weights(wtext, idx, cnt) if wtext else None
+            if wtext == AUTO_WEIGHTS:
+                weights: tuple[float, ...] | str | None = AUTO_WEIGHTS
+            else:
+                weights = _parse_weights(wtext, idx, cnt) if wtext else None
             return ShardSpec(idx, cnt, weights)
         except ValueError as e:
             raise ValueError(
-                f"bad shard spec {text!r}; expected 'i/n', 'i/n@w' or 'i/n@w0:w1:...'"
-                f" like '0/2@0.25': {e}"
+                f"bad shard spec {text!r}; expected 'i/n', 'i/n@w', "
+                f"'i/n@w0:w1:...' or 'i/n@auto' like '0/2@0.25': {e}"
             ) from e
 
     def __str__(self) -> str:
         base = f"{self.index}/{self.count}"
         if self.weights is None:
             return base
+        if isinstance(self.weights, str):
+            return base + "@" + self.weights
         return base + "@" + ":".join(f"{w:g}" for w in self.weights)
+
+    @property
+    def is_auto(self) -> bool:
+        """Weights deferred to fleet calibration (``@auto``), unresolved."""
+        return self.weights == AUTO_WEIGHTS
+
+    def resolved(self, weights: Sequence[float]) -> "ShardSpec":
+        """A concrete copy of this spec carrying the resolved vector."""
+        return ShardSpec(self.index, self.count, tuple(float(w) for w in weights))
 
     @property
     def weight(self) -> float:
         """This shard's own capacity weight (1.0 when uniform)."""
+        if isinstance(self.weights, str):
+            raise ValueError(
+                "auto weights are unresolved; resolve with resolve_auto_weights "
+                "(the executor does this from fleet pings) before reading weight"
+            )
         return 1.0 if self.weights is None else self.weights[self.index]
 
     def owns(self, key: str) -> bool:
@@ -139,6 +231,11 @@ class ShardSpec:
 
 
 def check_weights(weights: Sequence[float], count: int) -> None:
+    if isinstance(weights, str):
+        raise ValueError(
+            f"{weights!r} weights are unresolved; resolve them with "
+            "resolve_auto_weights(...) before hashing"
+        )
     if len(weights) != count:
         raise ValueError(f"need {count} shard weights, got {len(weights)}")
     for w in weights:
@@ -225,9 +322,10 @@ def assigned(keys: Sequence[str], spec: ShardSpec) -> list[str]:
 def cost_shard_map(
     keys: Sequence[str],
     count: int,
-    weights: Sequence[float] | None = None,
+    weights: Sequence[float] | str | None = None,
     costs: Mapping[str, float] | None = None,
     slack: float = 1.5,
+    evidence: Sequence[Mapping[str, Any] | None] | None = None,
 ) -> dict[str, int]:
     """Deterministic cost-balanced assignment: unique key -> shard index.
 
@@ -240,12 +338,20 @@ def cost_shard_map(
     keys in the input (overlapping task specs) count once per occurrence
     toward load and share one assignment.
 
+    ``weights=AUTO_WEIGHTS`` resolves the vector from ``evidence`` (per-
+    shard worker capacity/EWMA dicts) via :func:`resolve_auto_weights`
+    first; with no evidence the resolution is uniform.
+
     Guarantees: disjoint cover; max weight-normalized load <= slack x the
     fair share whenever a placement under the bound exists, degrading to
     least-loaded greedy (classic LPT behaviour) when single keys exceed it.
     """
     if count < 1:
         raise ValueError(f"shard count must be >= 1, got {count}")
+    if isinstance(weights, str):
+        if weights != AUTO_WEIGHTS:
+            raise ValueError(f"weights must be a vector, None, or {AUTO_WEIGHTS!r}")
+        weights = resolve_auto_weights(count, evidence)
     if weights is not None:
         check_weights(weights, count)
     if slack < 1.0:
@@ -283,13 +389,14 @@ def cost_shard_map(
 def cost_partition(
     keys: Sequence[str],
     count: int,
-    weights: Sequence[float] | None = None,
+    weights: Sequence[float] | str | None = None,
     costs: Mapping[str, float] | None = None,
     slack: float = 1.5,
+    evidence: Sequence[Mapping[str, Any] | None] | None = None,
 ) -> list[list[str]]:
     """Cost-balanced counterpart of :func:`partition` (input order kept,
     duplicates preserved in their owner's bucket)."""
-    owner = cost_shard_map(keys, count, weights, costs, slack)
+    owner = cost_shard_map(keys, count, weights, costs, slack, evidence)
     out: list[list[str]] = [[] for _ in range(count)]
     for k in keys:
         out[owner[k]].append(k)
@@ -297,6 +404,7 @@ def cost_partition(
 
 
 __all__ = [
+    "AUTO_WEIGHTS",
     "ShardSpec",
     "shard_of",
     "rank_shards",
@@ -305,4 +413,5 @@ __all__ = [
     "cost_shard_map",
     "cost_partition",
     "check_weights",
+    "resolve_auto_weights",
 ]

@@ -1,0 +1,501 @@
+"""Dynamic fleet scheduler suite: pull dispatch, speculative straggler
+re-dispatch, auto-calibrated shard weights, and cost-model persistence.
+
+Contract pillars, mirroring the scheduler's claims:
+
+  1. *Schedule-invariance* — dynamic (pull-based) execution produces report
+     rows byte-for-bit identical to sequential execution, for thread and
+     process local sinks and for a skewed-capacity remote fleet
+     (deterministic plugin tasks make equality exact).
+  2. *Straggler tolerance* — with one sink wedged on a single unit, the
+     sweep re-dispatches a speculative copy to an idle sink and finishes in
+     bounded time; the first completion wins and the loser is discarded.
+  3. *Calibration* — ``@auto`` shard weights resolved from worker-ping
+     throughput EWMAs converge toward a synthetic 4:1 speed skew, and the
+     ``costs.json`` EWMA sidecar keeps feeding CostModel after every raw
+     cache entry has been evicted.
+
+Scheduler-level tests drive controllable-latency fake sinks (a
+:class:`Sink` is just a name, capacity, and callable), so no timing
+assertion depends on real task execution speed.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import pytest
+from test_shard import make_plugin, plugin_box
+
+from repro.core import (
+    CostModel,
+    ResultCache,
+    ShardSpec,
+    SweepExecutor,
+    merge_shard_reports,
+    resolve_auto_weights,
+)
+from repro.core import registry as reg
+from repro.core import runner as runner_mod
+from repro.core.platform import get_platform
+from repro.core.report import to_csv
+from repro.core.scheduler import FleetScheduler, Sink, WorkItem
+from repro.core.shard import AUTO_WEIGHTS
+
+
+# -- fake-sink helpers -------------------------------------------------------
+def _fast_sink(name: str, capacity: int = 1, latency: float = 0.005, log=None):
+    def run(unit):
+        if log is not None:
+            log.append((name, unit))
+        time.sleep(latency)
+        return (f"{name}:{unit}", False)
+
+    return Sink(name, capacity, run)
+
+
+# -- pull dispatch basics ----------------------------------------------------
+def test_scheduler_outcomes_in_input_order_all_complete():
+    log: list = []
+    sinks = [_fast_sink("A", 1, log=log), _fast_sink("B", 2, log=log)]
+    items = [WorkItem(f"u{i}", cost=float(8 - i)) for i in range(8)]
+    outcomes = FleetScheduler(sinks).run(items)
+    assert [oc.item.unit for oc in outcomes] == [f"u{i}" for i in range(8)]
+    assert all(oc.error is None and oc.result is not None for oc in outcomes)
+    assert all(oc.attempts == 1 and not oc.speculated for oc in outcomes)
+    assert len(log) == 8  # no unit executed twice
+    assert {u for _, u in log} == {f"u{i}" for i in range(8)}
+
+
+def test_scheduler_respects_sink_eligibility():
+    log: list = []
+    sinks = [_fast_sink("A", 2, log=log), _fast_sink("B", 2, log=log)]
+    items = [WorkItem(f"a{i}", sinks=(0,)) for i in range(3)]
+    items += [WorkItem(f"b{i}", sinks=(1,)) for i in range(3)]
+    outcomes = FleetScheduler(sinks).run(items)
+    assert all(oc.error is None for oc in outcomes)
+    ran_on = {u: n for n, u in log}
+    assert all(ran_on[f"a{i}"] == "A" for i in range(3))
+    assert all(ran_on[f"b{i}"] == "B" for i in range(3))
+    with pytest.raises(ValueError, match="no eligible sink"):
+        FleetScheduler(sinks).run([WorkItem("x", sinks=())])
+    with pytest.raises(ValueError, match="unknown sink"):
+        FleetScheduler(sinks).run([WorkItem("x", sinks=(7,))])
+
+
+def test_scheduler_records_errors_per_unit():
+    def run(unit):
+        if unit == "bad":
+            raise RuntimeError("kaput")
+        return (f"ok:{unit}", False)
+
+    sinks = [Sink("A", 2, run)]
+    outcomes = FleetScheduler(sinks).run([WorkItem("bad"), WorkItem("good")])
+    by_unit = {oc.item.unit: oc for oc in outcomes}
+    assert "kaput" in str(by_unit["bad"].error)
+    assert by_unit["good"].error is None and by_unit["good"].result == "ok:good"
+
+
+def test_scheduler_fail_fast_stops_early():
+    started: list = []
+
+    def run(unit):
+        started.append(unit)
+        if unit == "bad":
+            raise RuntimeError("kaput")
+        time.sleep(0.01)
+        return (unit, False)
+
+    # One slot: "bad" (heaviest) goes first; fail_fast must stop the rest.
+    items = [WorkItem("bad", cost=10.0)] + [WorkItem(f"u{i}", cost=1.0) for i in range(20)]
+    outcomes = FleetScheduler([Sink("A", 1, run)], fail_fast=True).run(items)
+    assert outcomes[0].error is not None
+    assert len(started) < len(items)  # the tail was never claimed
+
+
+# -- speculative straggler re-dispatch ---------------------------------------
+def test_straggler_redispatched_to_idle_sink():
+    """Acceptance: one sink wedged on a single unit; the sweep finishes in
+    bounded time (vs. the 15s the wedge would block), the speculative copy
+    wins, and the loser is discarded."""
+    stall = threading.Event()
+    attempts: dict = {}
+    lock = threading.Lock()
+    log: list = []
+
+    def make(name):
+        def run(unit):
+            with lock:
+                n = attempts[unit] = attempts.get(unit, 0) + 1
+                log.append((name, unit, n))
+            if unit == "slow" and n == 1:
+                stall.wait(timeout=15.0)  # first attempt wedges
+                return (f"{name}:slow:hung", False)
+            time.sleep(0.01)
+            return (f"{name}:{unit}", False)
+
+        return run
+
+    sinks = [Sink("A", 1, make("A")), Sink("B", 1, make("B"))]
+    sched = FleetScheduler(
+        sinks, straggler_factor=2.0, min_straggler_s=0.05, poll_s=0.02
+    )
+    # "slow" is heaviest, so it is claimed first and wedges one sink while
+    # the other drains the queue — the exact tail-blocking scenario.
+    items = [WorkItem("slow", cost=5.0)] + [WorkItem(f"u{i}", cost=1.0) for i in range(8)]
+    t0 = time.monotonic()
+    try:
+        outcomes = sched.run(items)
+    finally:
+        stall.set()  # release the wedged thread
+    wall = time.monotonic() - t0
+    by_unit = {oc.item.unit: oc for oc in outcomes}
+    slow = by_unit["slow"]
+    assert slow.error is None
+    assert not slow.result.endswith(":hung")  # the speculative copy won
+    assert slow.speculated and slow.attempts == 2
+    assert attempts["slow"] == 2  # exactly one speculative copy
+    first_sink = next(n for n, u, a in log if u == "slow" and a == 1)
+    second_sink = next(n for n, u, a in log if u == "slow" and a == 2)
+    assert second_sink != first_sink  # re-dispatched to the OTHER (idle) sink
+    assert all(oc.result is not None for oc in outcomes)
+    assert wall < 5.0  # finished without waiting on the wedged attempt
+
+
+def test_no_speculation_on_a_healthy_fleet():
+    sinks = [_fast_sink("A", 2), _fast_sink("B", 2)]
+    outcomes = FleetScheduler(sinks).run([WorkItem(f"u{i}") for i in range(10)])
+    assert all(not oc.speculated and oc.attempts == 1 for oc in outcomes)
+
+
+def test_errored_unit_hands_off_to_remaining_sinks():
+    """A crashed fleet worker fast-fails its claims; every unit it errored
+    must be retried on the healthy sink before any error is terminal."""
+
+    def dead(unit):
+        raise RuntimeError("connection refused")
+
+    log: list = []
+    sinks = [Sink("dead", 2, dead), _fast_sink("ok", 1, log=log)]
+    outcomes = FleetScheduler(sinks).run([WorkItem(f"u{i}") for i in range(10)])
+    assert all(oc.error is None for oc in outcomes)  # nothing terminal-errored
+    assert {u for _, u in log} == {f"u{i}" for i in range(10)}
+    assert any(oc.attempts == 2 for oc in outcomes)  # dead sink did claim some
+    # When EVERY eligible sink has failed the unit, the error is terminal.
+    only_dead = FleetScheduler([Sink("dead", 1, dead)]).run([WorkItem("x")])
+    assert "connection refused" in str(only_dead[0].error)
+
+
+def test_cache_hits_do_not_calibrate_straggler_scale():
+    """Warm-cache completions return in microseconds; feeding them into the
+    seconds-per-cost scale would flag every real unit as a straggler."""
+
+    def run(unit):
+        if unit == "real":
+            time.sleep(0.4)  # >> min_straggler_s: would be speculated if the
+            return ("real", False)  # hits had collapsed the scale
+        return (f"hit:{unit}", True)
+
+    sinks = [Sink("A", 1, run), Sink("B", 1, run)]
+    sched = FleetScheduler(sinks, straggler_factor=2.0, min_straggler_s=0.05, poll_s=0.02)
+    items = [WorkItem("real", cost=1.0)] + [WorkItem(f"h{i}", cost=1.0) for i in range(8)]
+    outcomes = sched.run(items)
+    by_unit = {oc.item.unit: oc for oc in outcomes}
+    assert by_unit["real"].error is None
+    assert not by_unit["real"].speculated  # hits alone calibrated nothing
+    assert by_unit["real"].attempts == 1
+    assert by_unit["real"].elapsed_s > 0.3  # winner wall time is reported
+
+
+# -- executor integration: schedule invariance -------------------------------
+def test_dynamic_rows_byte_identical_to_sequential(tmp_path):
+    make_plugin(tmp_path, "dynplug")
+    reg.load_plugin_dir(tmp_path / "dynplug")
+    box = plugin_box("dynplug")
+    seq = SweepExecutor(workers=1).run_box(box)
+    dyn = SweepExecutor(workers=4, schedule="dynamic").run_box(box)
+    assert not dyn.errors and dyn.stats.total == 6
+    assert dyn.rows == seq.rows
+    assert to_csv(dyn.rows) == to_csv(seq.rows)  # byte-for-bit
+    assert dyn.stats.speculated == 0
+    static = SweepExecutor(workers=4, schedule="static").run_box(box)
+    assert static.rows == seq.rows  # the fallback path is preserved
+
+
+def test_dynamic_process_pool_rows_identical(tmp_path):
+    make_plugin(tmp_path, "dynproc")
+    reg.load_plugin_dir(tmp_path / "dynproc")
+    box = plugin_box("dynproc")
+    seq = SweepExecutor(workers=1).run_box(box)
+    path = tmp_path / "cache.json"
+    dyn = SweepExecutor(workers=2, pool="process", cache=ResultCache(path)).run_box(box)
+    assert not dyn.errors
+    assert dyn.rows == seq.rows
+    # The dynamic process sink records elapsed_s scheduling evidence too.
+    entries = ResultCache(path).snapshot()
+    assert len(entries) == 6
+    assert all(e.get("elapsed_s", 0) > 0 for e in entries.values())
+
+
+def test_dynamic_remote_fleet_rows_identical(tmp_path):
+    from repro.core.remote import WorkerServer
+
+    make_plugin(tmp_path, "fleetplug")
+    d = tmp_path / "fleetplug"
+    reg.load_plugin_dir(d)
+    box = plugin_box("fleetplug")
+    seq = SweepExecutor(workers=1).run_box(box)
+    a, b = WorkerServer(capacity=1), WorkerServer(capacity=4)
+    a.serve_in_thread()
+    b.serve_in_thread()
+    try:
+        fleet = f"{a.endpoint},{b.endpoint}"
+        rem = SweepExecutor(workers=2, remote=fleet).run_box(box)
+        assert not rem.errors
+        assert rem.rows == seq.rows
+        ta, tb = a.throughput(), b.throughput()
+        assert ta["units"] + tb["units"] == 6  # every unit ran exactly once
+        # Workers advertise their measured EWMA for @auto calibration.
+        done = [t for t in (ta, tb) if t["units"]]
+        assert all(t["ewma_s"] and t["ewma_s"] > 0 for t in done)
+    finally:
+        a.shutdown()
+        a.server_close()
+        b.shutdown()
+        b.server_close()
+
+
+# -- @auto weight calibration ------------------------------------------------
+def test_shard_spec_auto_parse_and_resolve():
+    s = ShardSpec.parse("0/2@auto")
+    assert s.is_auto and s.weights == AUTO_WEIGHTS
+    assert str(s) == "0/2@auto"
+    assert ShardSpec.parse(str(s)) == s
+    with pytest.raises(ValueError, match="unresolved"):
+        _ = s.weight
+    concrete = s.resolved((0.25, 0.75))
+    assert not concrete.is_auto and concrete.weights == (0.25, 0.75)
+    with pytest.raises(ValueError):
+        ShardSpec(0, 2, "automatic")  # only the exact sentinel is accepted
+    from repro.core.shard import shard_of
+
+    with pytest.raises(ValueError, match="unresolved"):
+        shard_of("k", 2, AUTO_WEIGHTS)
+
+
+def test_auto_weights_converge_toward_throughput_skew():
+    """Acceptance (c): a 4:1 synthetic throughput skew resolves to ~4:1
+    weights, within the determinism-lattice quantization."""
+    w = resolve_auto_weights(
+        2, [{"capacity": 1, "ewma_s": 1.0}, {"capacity": 1, "ewma_s": 0.25}]
+    )
+    assert sum(w) == pytest.approx(1.0)
+    assert w[1] / w[0] == pytest.approx(4.0, rel=0.15)
+    # Capacity-only skew (fresh workers, no measurements yet).
+    w = resolve_auto_weights(2, [{"capacity": 1}, {"capacity": 4}])
+    assert w[1] / w[0] == pytest.approx(4.0, rel=0.15)
+    # Worker-side EWMA converges onto the true per-unit time, so the
+    # resolved ratio approaches 4:1 as observations accumulate.
+    from repro.core.remote import WorkerServer
+
+    a, b = WorkerServer(), WorkerServer()
+    try:
+        for _ in range(40):
+            a._observe("t", 1.0)
+            b._observe("t", 0.25)
+        ewma_a, ewma_b = a.throughput()["ewma_s"], b.throughput()["ewma_s"]
+        assert ewma_a == pytest.approx(1.0, rel=0.05)
+        assert ewma_b == pytest.approx(0.25, rel=0.05)
+        w = resolve_auto_weights(
+            2,
+            [{"capacity": 1, "ewma_s": ewma_a}, {"capacity": 1, "ewma_s": ewma_b}],
+        )
+        assert w[1] / w[0] == pytest.approx(4.0, rel=0.15)
+    finally:
+        a.server_close()
+        b.server_close()
+    # Quantization absorbs EWMA jitter: two near-identical resolutions
+    # produce the exact same vector (partition agreement across runners).
+    w1 = resolve_auto_weights(2, [{"ewma_s": 1.0}, {"ewma_s": 0.2504}])
+    w2 = resolve_auto_weights(2, [{"ewma_s": 1.001}, {"ewma_s": 0.25}])
+    assert w1 == w2
+    # No evidence at all degrades to uniform.
+    assert resolve_auto_weights(3) == pytest.approx((1 / 3,) * 3)
+
+
+def test_auto_shard_fleet_union_matches_full(tmp_path):
+    """Two runners sharding ``@auto`` against the same quiescent fleet
+    resolve identical weight vectors, so their union covers the grid and
+    the merged report is byte-identical to the full run."""
+    from repro.core.remote import WorkerServer
+
+    make_plugin(tmp_path, "autoplug")
+    reg.load_plugin_dir(tmp_path / "autoplug")
+    box = plugin_box("autoplug")
+    path = tmp_path / "cache.json"
+    a, b = WorkerServer(capacity=1), WorkerServer(capacity=4)
+    a.serve_in_thread()
+    b.serve_in_thread()
+    try:
+        fleet = f"{a.endpoint},{b.endpoint}"
+        # Seed run executes on the fleet and fills the shared cache, so the
+        # shard runs below are fully cached (workers quiescent between the
+        # two runners' @auto resolutions — the documented requirement).
+        full = SweepExecutor(workers=2, remote=fleet, cache=ResultCache(path)).run_box(box)
+        assert not full.errors
+        shards = [
+            SweepExecutor(workers=2, remote=fleet, cache=ResultCache(path)).run_box(
+                box, shard=ShardSpec.parse(f"{i}/2@auto")
+            )
+            for i in range(2)
+        ]
+        assert all(not s.errors for s in shards)
+        assert sum(s.stats.total for s in shards) == full.stats.total == 6
+        assert all(s.stats.cached == s.stats.total for s in shards)
+        merged = merge_shard_reports([s.rows for s in shards], box=box)
+        assert merged == full.rows
+        # The capacity skew actually moved work: the fat worker got more.
+        weights = SweepExecutor(workers=2, remote=fleet, cache=ResultCache(path))._auto_weights(2)
+        assert weights[1] > weights[0]
+    finally:
+        a.shutdown()
+        a.server_close()
+        b.shutdown()
+        b.server_close()
+
+
+# -- cost-model persistence (EWMA sidecar) -----------------------------------
+def test_ewma_sidecar_survives_cache_eviction(tmp_path):
+    make_plugin(tmp_path, "evplug")
+    reg.load_plugin_dir(tmp_path / "evplug")
+    box = plugin_box("evplug")
+    path = tmp_path / "cache.json"
+    res = SweepExecutor(cache=ResultCache(path, max_entries=0)).run_box(box)
+    assert not res.errors
+    assert len(ResultCache(path)) == 0  # every raw entry was evicted...
+    assert (tmp_path / "costs.json").exists()  # ...but the evidence persists
+    model = CostModel(ResultCache(path))
+    assert model.measured_points == 0
+    cost, src = model.explain("unseen", task="evplug", platform=get_platform("default"))
+    assert src == "ewma" and cost > 0
+    assert model.mean_elapsed_s and model.mean_elapsed_s > 0
+    # clear() erases results, never the scheduling evidence.
+    c2 = ResultCache(path)
+    c2.clear()
+    assert (tmp_path / "costs.json").exists()
+    assert CostModel(ResultCache(path)).explain(
+        "unseen", task="evplug", platform=get_platform("default")
+    )[1] == "ewma"
+
+
+def test_sidecar_roundtrip_and_validation(tmp_path):
+    from repro.core.cache import EwmaCostStore
+
+    store = EwmaCostStore(tmp_path / "costs.json", alpha=0.5)
+    store.observe("t", "p", 1.0)
+    store.observe("t", "p", 3.0)  # 0.5*3 + 0.5*1
+    store.observe("t", "", 2.0)  # empty platform is still keyed
+    store.observe("", "p", 9.0)  # no task: ignored
+    store.observe("t", "p", -1.0)  # non-positive: ignored
+    store.observe("t", "p", "nan")  # junk: ignored
+    assert store.get("t", "p") == pytest.approx(2.0)
+    store.flush()
+    again = EwmaCostStore(tmp_path / "costs.json", alpha=0.5)
+    assert again.get("t", "p") == pytest.approx(2.0)
+    assert len(again) == 2
+    # Corrupt sidecars are ignored, not fatal.
+    (tmp_path / "costs.json").write_text("{ nope")
+    assert len(EwmaCostStore(tmp_path / "costs.json")) == 0
+    with pytest.raises(ValueError):
+        EwmaCostStore(tmp_path / "c.json", alpha=0.0)
+
+
+# -- satellite: concurrent/crash-safe cache flush ----------------------------
+def test_concurrent_flushes_never_corrupt_cache_file(tmp_path):
+    """Several writers flushing the same path + a racing reader: every
+    observable file state must parse (unique temp file + os.replace)."""
+    path = tmp_path / "c.json"
+    caches = [ResultCache(path) for _ in range(3)]
+    stop = threading.Event()
+    corrupt: list = []
+
+    def reader():
+        while not stop.is_set():
+            if path.exists():
+                try:
+                    json.loads(path.read_text())
+                except json.JSONDecodeError as e:  # pragma: no cover - failure
+                    corrupt.append(str(e))
+
+    def hammer(c, i):
+        for k in range(30):
+            c.put(f"k{i}:{k}", {"m": float(k)}, task="t", platform="p", elapsed_s=0.01)
+            c.flush()
+
+    rt = threading.Thread(target=reader)
+    rt.start()
+    writers = [threading.Thread(target=hammer, args=(c, i)) for i, c in enumerate(caches)]
+    for t in writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    rt.join()
+    assert not corrupt
+    assert json.loads(path.read_text())["entries"]  # final state is valid
+    assert not list(tmp_path.glob("*.tmp"))  # no temp litter left behind
+
+
+# -- satellite: wait_ready connection-refused vs error payload ----------------
+def test_wait_ready_fast_fails_on_error_payload():
+    from repro.core.remote import RemoteExecutionError, WorkerServer, wait_ready
+
+    class _Broken(WorkerServer):
+        def dispatch(self, req):
+            return {"ok": False, "error": "plugin exploded on load"}
+
+    server = _Broken()
+    server.serve_in_thread()
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(RemoteExecutionError, match="plugin exploded"):
+            wait_ready(server.endpoint, timeout=30.0)
+        assert time.monotonic() - t0 < 5.0  # fail fast, not the full timeout
+    finally:
+        server.shutdown()
+        server.server_close()
+
+
+def test_wait_ready_keeps_polling_when_unreachable():
+    from repro.core.remote import wait_ready
+
+    t0 = time.monotonic()
+    assert wait_ready("127.0.0.1:9", timeout=0.4) is False
+    assert time.monotonic() - t0 < 10.0
+
+
+# -- CLI ---------------------------------------------------------------------
+def test_runner_cli_dynamic_matches_static(tmp_path):
+    d = make_plugin(tmp_path, "dyncli")
+    bf = tmp_path / "box.json"
+    bf.write_text(
+        json.dumps(
+            {
+                "name": "dyncli_box",
+                "tasks": [{"task": "dyncli", "params": {"a": [1, 2, 3], "b": ["x", "y"]}}],
+            }
+        )
+    )
+    common = ["--box", str(bf), "--plugin-dir", str(d), "--iters", "1", "--warmup", "0"]
+    out_dyn, out_static = tmp_path / "dyn.csv", tmp_path / "static.csv"
+    rc = runner_mod.main(
+        [*common, "--workers", "4", "--schedule", "dynamic",
+         "--straggler-factor", "8", "--out", str(out_dyn)]
+    )
+    assert rc == 0
+    rc = runner_mod.main(
+        [*common, "--workers", "4", "--schedule", "static", "--out", str(out_static)]
+    )
+    assert rc == 0
+    assert out_dyn.read_text() == out_static.read_text()
