@@ -165,7 +165,20 @@ FIGURES: dict[str, dict] = {
                     "plan": ["baseline", "pushdown", "pushdown_kernel"],
                 },
                 "metrics": ["items_per_s"],
-            }
+            },
+            # Fused-vs-unfused comparison rows: the same pushdown plan with
+            # compaction routed through the block_compact kernel (impl of
+            # the rows above defaults to the unfused jnp nonzero+gather).
+            {
+                "task": "pushdown",
+                "params": {
+                    "scale": ["0.01", "0.1"],
+                    "selectivity": [0.01, 0.1, 0.5],
+                    "plan": ["pushdown"],
+                    "impl": ["kernel"],
+                },
+                "metrics": ["items_per_s"],
+            },
         ],
     },
     # ---- §7.2 index offloading (Fig. 14) ------------------------------------
@@ -189,12 +202,15 @@ FIGURES: dict[str, dict] = {
     "fig15_dbms": {
         "name": "fig15_dbms",
         "tasks": [
+            # impl sweeps the execution plan: unfused jnp graph vs the
+            # single-pass fused group_filter_agg kernel plan.
             {
                 "task": "dbms",
                 "params": {
                     "scale": ["0.001", "0.01", "0.1"],
                     "query": ["q1", "q6", "q12"],
                     "mode": ["cold", "hot"],
+                    "impl": ["unfused", "fused"],
                 },
                 "metrics": ["avg_latency_us", "items_per_s"],
             },

@@ -88,6 +88,11 @@ def main(argv=None) -> int:
     p.add_argument("--only", nargs="*", default=None, help="figure ids to run")
     p.add_argument("--iters", type=int, default=3)
     p.add_argument("--warmup", type=int, default=1)
+    p.add_argument(
+        "--min-time", type=float, default=0.0, metavar="SECONDS",
+        help="keep sampling each test past --iters until this much measured "
+        "wall time accumulates (part of the cache identity when set)",
+    )
     p.add_argument("--workers", type=int, default=1, help="concurrent test workers")
     p.add_argument(
         "--platforms", nargs="+", default=["cpu-host"],
@@ -211,6 +216,7 @@ def main(argv=None) -> int:
         workers=args.workers,
         iters=args.iters,
         warmup=args.warmup,
+        min_time_s=args.min_time,
         cache=cache,
         pool=args.pool,
         remote=args.remote,

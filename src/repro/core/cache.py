@@ -169,6 +169,7 @@ def cache_key(
     warmup: int,
     metrics: tuple[str, ...],
     fingerprint: str = "",
+    min_time_s: float = 0.0,
 ) -> str:
     ident = {
         "task": task,
@@ -181,6 +182,10 @@ def cache_key(
         # only valid while the measuring code is unchanged (Task.source_fingerprint).
         "fingerprint": fingerprint,
     }
+    if min_time_s:
+        # Part of the measurement identity like iters/warmup; only folded in
+        # when set so pre-existing cache entries stay addressable.
+        ident["min_time_s"] = min_time_s
     blob = json.dumps(ident, sort_keys=True, default=str)
     return hashlib.sha256(blob.encode()).hexdigest()
 

@@ -151,6 +151,7 @@ class SweepExecutor:
         weighted_shard: bool = False,
         schedule: str = "dynamic",
         straggler_factor: float = DEFAULT_STRAGGLER_FACTOR,
+        min_time_s: float = 0.0,
     ):
         if pool not in ("thread", "process"):
             raise ValueError(f"pool must be 'thread' or 'process', got {pool!r}")
@@ -165,6 +166,9 @@ class SweepExecutor:
         self.workers = max(1, int(workers))
         self.iters = iters
         self.warmup = warmup
+        # Floor on measured wall time per test (core.timing.measure): tasks
+        # that honor it keep sampling past `iters` until it accumulates.
+        self.min_time_s = float(min_time_s)
         self.fail_fast = fail_fast
         self.cache = cache
         self.pool = pool
@@ -195,7 +199,10 @@ class SweepExecutor:
             ctx = self._contexts.get(key)
             if ctx is None:
                 ctx = TaskContext(
-                    platform=platform.describe(), iters=self.iters, warmup=self.warmup
+                    platform=platform.describe(),
+                    iters=self.iters,
+                    warmup=self.warmup,
+                    min_time_s=self.min_time_s,
                 )
                 self._contexts[key] = ctx
         return ctx
@@ -362,6 +369,7 @@ class SweepExecutor:
                         self.warmup,
                         metrics,
                         fingerprint=fingerprints[task.name],
+                        min_time_s=self.min_time_s,
                     )
                     ckey = skey
                     if self.remote is not None:
@@ -373,6 +381,7 @@ class SweepExecutor:
                             self.warmup,
                             metrics,
                             fingerprint=fingerprints[task.name],
+                            min_time_s=self.min_time_s,
                         )
                     units.append(
                         _Unit(idx, platform, task.name, params, metrics, ckey, skey)
@@ -884,6 +893,7 @@ def _unit_payload(unit: _Unit, ex: SweepExecutor, want_samples: bool = False) ->
         "platform": platform,
         "iters": ex.iters,
         "warmup": ex.warmup,
+        "min_time_s": ex.min_time_s,
         # Spawned children / remote workers start from a fresh interpreter:
         # hand over the plugin dirs loaded in this process so directory
         # plugin tasks resolve there too.
@@ -908,9 +918,19 @@ def _subprocess_run_unit(payload: dict[str, Any]) -> dict[str, Any]:
                 platform=platform.describe(),
                 iters=payload["iters"],
                 warmup=payload["warmup"],
+                min_time_s=float(payload.get("min_time_s", 0.0)),
             )
             task.prepare(ctx)
             _CHILD_CONTEXTS[key] = ctx
+        else:
+            # Long-lived workers reuse the prepared context across client
+            # runs; the measurement knobs are per-request (and part of the
+            # client's cache identity), so refresh them every time.  Same-key
+            # requests are serialized by the worker's per-(platform, task)
+            # locks, so this mutation cannot race a running unit.
+            ctx.iters = payload["iters"]
+            ctx.warmup = payload["warmup"]
+            ctx.min_time_s = float(payload.get("min_time_s", 0.0))
         # Cost evidence measures only the repeatable per-unit work, matching
         # the in-process path (one-time bootstrap/prepare stays out).
         t0 = time.perf_counter()

@@ -80,6 +80,7 @@ class Runner:
         weighted_shard: bool = False,
         schedule: str = "dynamic",
         straggler_factor: float = 4.0,
+        min_time_s: float = 0.0,
     ):
         if platforms is not None and platform is not None:
             raise ValueError("pass either platform= or platforms=, not both")
@@ -98,6 +99,7 @@ class Runner:
             weighted_shard=weighted_shard,
             schedule=schedule,
             straggler_factor=straggler_factor,
+            min_time_s=min_time_s,
         )
         self.platform = self._exec.platforms[0].describe()
         self.iters = iters
@@ -146,6 +148,12 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--box", dest="box_opt", default=None, help="path to box JSON (same as the positional)")
     p.add_argument("--iters", type=int, default=5)
     p.add_argument("--warmup", type=int, default=2)
+    p.add_argument(
+        "--min-time", type=float, default=0.0, metavar="SECONDS",
+        help="keep sampling each test past --iters until this much measured "
+        "wall time accumulates (microsecond-scale points stop being "
+        "5-sample noise); part of the cache identity when set",
+    )
     p.add_argument("--workers", type=int, default=1, help="concurrent test workers")
     p.add_argument(
         "--platforms", nargs="+", default=None,
@@ -287,6 +295,7 @@ def main(argv: list[str] | None = None) -> int:
     runner = Runner(
         iters=args.iters,
         warmup=args.warmup,
+        min_time_s=args.min_time,
         workers=args.workers,
         platforms=args.platforms,
         cache=cache,

@@ -39,6 +39,10 @@ class TaskContext:
     log: list[dict[str, Any]] = field(default_factory=list)
     iters: int = 5
     warmup: int = 2
+    # Minimum measured wall time per test: tasks keep iterating past `iters`
+    # until this much time accumulates (core.timing.measure's min_time_s),
+    # so microsecond-scale points aren't noise-dominated by 5 samples.
+    min_time_s: float = 0.0
 
 
 @dataclass

@@ -39,13 +39,31 @@ def filter_mask(table: Table, *preds: Callable[[Table], jax.Array]) -> jax.Array
     return mask
 
 
-def compact(table: Table, mask: jax.Array, max_rows: int) -> tuple[Table, jax.Array]:
+def compact(
+    table: Table, mask: jax.Array, max_rows: int, use_pallas: bool = False
+) -> tuple[Table, jax.Array]:
     """Gather qualifying rows into a fixed-size buffer (static shapes).
 
     Rows beyond max_rows are dropped; returns (table, count). This is the
     'return qualified tuples' half of predicate pushdown — the network
     payload is max_rows-bounded rather than data-dependent.
+
+    ``use_pallas=True`` routes through the fused ``block_compact`` kernel
+    (one pass: per-block mask count + prefix-offset scatter) instead of
+    ``nonzero`` + one gather per column; only 1-D columns whose values are
+    exactly representable in f32 survive the kernel's column matrix, so the
+    caller selects the scanned columns first (the pushdown plan does).
     """
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        names = table.names
+        colmat = jnp.stack([table[n].astype(jnp.float32) for n in names])
+        packed, cnt = kops.block_compact(colmat, mask, max_rows)
+        out = Table(
+            {n: packed[i].astype(table[n].dtype) for i, n in enumerate(names)}
+        )
+        return out, cnt
     idx = jnp.nonzero(mask, size=max_rows, fill_value=table.num_rows)[0]
     in_range = idx < table.num_rows
     safe = jnp.where(in_range, idx, 0)

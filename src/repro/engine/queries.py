@@ -8,14 +8,30 @@ Q12 — join lineitem x orders + grouped conditional counts.
 Each query is a jit-able Table -> dict[str, Array] function; benchmarks
 compare host-style execution vs pushdown-style (see tasks/pushdown.py) and
 Pallas-accelerated variants.
+
+The ``*_fused`` variants (FUSED_QUERIES) express the same queries as ONE
+``group_filter_agg`` kernel pass each: the predicate program evaluates the
+WHERE clause in registers, derived columns (Q1's disc_price/charge) are
+term products computed in-flight, and the grouped sums/counts accumulate in
+a VMEM tile — instead of the unfused jnp graph's one-HBM-pass-per-aggregate
+``segment_sum`` plan.  Counts and integer-valued aggregates match the
+unfused results exactly; float sums agree to accumulation-order tolerance.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.engine import datagen, ops
 from repro.engine.table import Table
+from repro.kernels import ops as kops
+from repro.kernels.group_filter_agg import encode_aggregates, encode_predicates
+
+
+def _le_bound(cutoff: float) -> float:
+    """The exclusive f32 upper bound equivalent to ``col <= cutoff``."""
+    return float(np.nextafter(np.float32(cutoff), np.float32(np.inf)))
 
 
 def q1(lineitem: Table, delta_days: float = 90.0) -> dict[str, jax.Array]:
@@ -74,6 +90,11 @@ def q6_columns(lineitem: Table, year: int = 1994, discount: float = 0.06, qty: f
     return cols, (lo, hi, discount - 0.011, discount + 0.011)
 
 
+# Q12's shipmode IN-list, resolved against the dictionary order once so the
+# fused and unfused plans can't drift apart.
+Q12_SHIPMODES = tuple(datagen.SHIPMODE.index(m) for m in ("MAIL", "SHIP"))
+
+
 def q12(lineitem: Table, orders: Table, year: int = 1994):
     """Shipping modes & order priority: join + grouped conditional counts."""
     lo = datagen.date(year)
@@ -81,7 +102,7 @@ def q12(lineitem: Table, orders: Table, year: int = 1994):
     joined = ops.fk_index_join(lineitem, "l_orderkey", orders, "o_orderkey", ("o_orderpriority",))
     mask = ops.filter_mask(
         joined,
-        lambda t: ops.pred_in(t["l_shipmode"], (2, 5)),  # MAIL, SHIP
+        lambda t: ops.pred_in(t["l_shipmode"], Q12_SHIPMODES),
         lambda t: t["l_commitdate"] < t["l_receiptdate"],
         lambda t: t["l_shipdate"] < t["l_commitdate"],
         lambda t: ops.pred_between(t["l_receiptdate"], lo, hi),
@@ -97,4 +118,142 @@ def q12(lineitem: Table, orders: Table, year: int = 1994):
     return agg
 
 
+# ---------------------------------------------------------------------------
+# Fused variants: each query as one group_filter_agg pass.
+def q1_fused(
+    lineitem: Table, delta_days: float = 90.0, use_pallas: bool = True
+) -> dict[str, jax.Array]:
+    """Q1 as a single kernel pass: 6 groups x 5 aggregates + count, with
+    disc_price/charge evaluated in-register by the term program."""
+    cutoff = datagen.date(1998, 12, 1) - delta_days
+    cols = jnp.stack(
+        [
+            lineitem["l_shipdate"],  # 0: predicate
+            lineitem["l_quantity"],  # 1
+            lineitem["l_extendedprice"],  # 2
+            lineitem["l_discount"],  # 3
+            lineitem["l_tax"],  # 4
+        ]
+    )
+    keys = lineitem["l_returnflag"] * 2 + lineitem["l_linestatus"]
+    pred_ops, pred_consts = encode_predicates(
+        [("range", 0, None, _le_bound(cutoff))]  # shipdate <= cutoff
+    )
+    agg_ops, agg_consts = encode_aggregates(
+        [
+            [("col", 1)],  # sum_qty
+            [("col", 2)],  # sum_base_price
+            [("col", 2), ("one_minus", 3)],  # sum_disc_price
+            [("col", 2), ("one_minus", 3), ("one_plus", 4)],  # sum_charge
+            [("col", 3)],  # sum_disc
+        ]
+    )
+    out = kops.group_filter_agg(
+        cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
+        num_groups=6, use_pallas=use_pallas,
+    )
+    agg = {
+        "sum_qty": out[:, 0],
+        "sum_base_price": out[:, 1],
+        "sum_disc_price": out[:, 2],
+        "sum_charge": out[:, 3],
+        "sum_disc": out[:, 4],
+        "count": out[:, 5],
+    }
+    cnt = jnp.maximum(agg["count"], 1.0)
+    agg["avg_qty"] = agg["sum_qty"] / cnt
+    agg["avg_price"] = agg["sum_base_price"] / cnt
+    agg["avg_disc"] = agg["sum_disc"] / cnt
+    return agg
+
+
+def q6_fused(
+    lineitem: Table,
+    year: int = 1994,
+    discount: float = 0.06,
+    qty: float = 24.0,
+    use_pallas: bool = True,
+):
+    """Q6 as a 1-group program: three range predicates + one product-sum.
+
+    Unlike ``q6_columns`` (which pre-masks the quantity predicate into the
+    value column to fit ``filter_agg``'s fixed two-predicate shape), the
+    general kernel expresses all three predicates, so the returned row
+    count matches ``q6`` exactly too.
+    """
+    lo = datagen.date(year)
+    hi = datagen.date(year + 1)
+    cols = jnp.stack(
+        [
+            lineitem["l_shipdate"],  # 0
+            lineitem["l_discount"],  # 1
+            lineitem["l_quantity"],  # 2
+            lineitem["l_extendedprice"],  # 3
+        ]
+    )
+    keys = jnp.zeros((lineitem.num_rows,), jnp.int32)
+    pred_ops, pred_consts = encode_predicates(
+        [
+            ("range", 0, lo, hi),
+            ("range", 1, discount - 0.011, discount + 0.011),
+            ("range", 2, None, qty),  # quantity < qty
+        ]
+    )
+    agg_ops, agg_consts = encode_aggregates([[("col", 3), ("col", 1)]])
+    out = kops.group_filter_agg(
+        cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
+        num_groups=1, use_pallas=use_pallas,
+    )
+    return {"revenue": out[0, 0], "rows": out[0, 1].astype(jnp.int32)}
+
+
+def q12_fused(
+    lineitem: Table, orders: Table, year: int = 1994, use_pallas: bool = True
+):
+    """Q12 as join-gather + one kernel pass over all 7 shipmode groups.
+
+    The ``shipmode IN (MAIL, SHIP)`` membership predicate is equivalent to
+    selecting those groups of the full grouped result (rows of other
+    shipmodes land in other groups), so it becomes a post-kernel group mask
+    instead of a row predicate — counts stay integer-exact.
+    """
+    lo = datagen.date(year)
+    hi = datagen.date(year + 1)
+    joined = ops.fk_index_join(lineitem, "l_orderkey", orders, "o_orderkey", ("o_orderpriority",))
+    cols = jnp.stack(
+        [
+            joined["l_commitdate"],  # 0
+            joined["l_receiptdate"],  # 1
+            joined["l_shipdate"],  # 2
+            joined["o_orderpriority"].astype(jnp.float32),  # 3
+        ]
+    )
+    keys = joined["l_shipmode"]
+    pred_ops, pred_consts = encode_predicates(
+        [
+            ("lt", 0, 1),  # commitdate < receiptdate
+            ("lt", 2, 0),  # shipdate < commitdate
+            ("range", 1, lo, hi),  # receiptdate in the year window
+        ]
+    )
+    agg_ops, agg_consts = encode_aggregates(
+        [
+            [("le", 3, 1.0)],  # high priority: 1-URGENT, 2-HIGH
+            [("gt", 3, 1.0)],  # low priority
+        ]
+    )
+    num_groups = len(datagen.SHIPMODE)
+    out = kops.group_filter_agg(
+        cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
+        num_groups=num_groups, use_pallas=use_pallas,
+    )
+    sel = jnp.zeros((num_groups,), jnp.float32).at[jnp.asarray(Q12_SHIPMODES)].set(1.0)
+    return {
+        "high_line_count": out[:, 0] * sel,
+        "low_line_count": out[:, 1] * sel,
+        "count": out[:, 2] * sel,
+    }
+
+
 QUERIES = {"q1": q1, "q6": q6, "q12": q12}
+FUSED_QUERIES = {"q1": q1_fused, "q6": q6_fused, "q12": q12_fused}

@@ -1,0 +1,118 @@
+"""Fused block compaction kernel (the pushdown "return qualifying rows" path).
+
+``engine.ops.compact`` materializes qualifying rows with ``jnp.nonzero`` +
+gather: one full pass to build the index vector in HBM, then one gather pass
+per column.  The fused plan is one pass: each input block computes its mask
+count and in-block prefix offsets (exclusive cumsum of the mask), converts
+the offsets into a scatter permutation, and writes its qualifying rows
+densely into a capacity-bounded output buffer at the running global offset.
+
+Mechanics per SUB-row sub-tile (SUB = 512, keeps the permutation matrix at
+SUB x SUB f32 = 1 MB):
+
+  * ``pos = cumsum(mask) - mask`` — each qualifying row's slot among the
+    sub-tile's qualifiers;
+  * scatter-as-matmul: ``P[r, j] = mask[r] & (pos[r] == j)``, and
+    ``cols_sub [C, SUB] @ P [SUB, SUB]`` lands every qualifying row at its
+    slot (MXU work instead of an unsupported vector scatter);
+  * the compacted sub-tile is stored at ``out[:, base : base + SUB]`` where
+    ``base`` is the global running count — slots past the sub-tile's own
+    count hold zeros and are overwritten by the next sub-tile's store (TPU
+    grids iterate sequentially, so later stores win).
+
+Capacity semantics match the ``nonzero(size=cap)`` oracle: qualifying rows
+with global position >= cap are dropped, slots in [count, cap) are zero.
+The output buffer is padded by one sub-tile so an almost-full store never
+writes out of bounds (stores whose base would pass ``cap`` clamp into the
+trimmed pad region).
+
+The returned count is exact and independent of ``cap``; it rides in an i32
+[1, LANES] tile that doubles as the running-offset carry between grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro.kernels.compat import CompilerParams
+
+LANES = 128
+SUB = 512  # sub-tile width: the scatter permutation is [SUB, SUB] f32
+
+
+def _kernel(cols_ref, mask_ref, out_ref, cnt_ref, *, cap: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    bn = cols_ref.shape[1]
+    slot_ids = jax.lax.broadcasted_iota(jnp.int32, (SUB, SUB), 1)
+
+    def body(s, base):
+        m = mask_ref[:, pl.ds(s * SUB, SUB)]  # [1, SUB] i32
+        sub = cols_ref[:, pl.ds(s * SUB, SUB)]  # [C, SUB]
+        pos = jnp.cumsum(m, axis=1) - m  # exclusive prefix: target slot
+        cnt = jnp.sum(m)
+        # P[r, j] = qualifying row r goes to slot j; scatter via MXU.
+        perm = (
+            (pos.reshape(SUB, 1) == slot_ids) & (m.reshape(SUB, 1) != 0)
+        ).astype(jnp.float32)
+        packed = jax.lax.dot_general(
+            sub, perm, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        # Rows past cap are dropped: clamp the store into the pad region,
+        # where it only ever overwrites other dropped rows.
+        start = jnp.minimum(base, cap)
+        out_ref[:, pl.ds(start, SUB)] = packed
+        return base + cnt
+
+    base0 = cnt_ref[0, 0]
+    total = jax.lax.fori_loop(0, bn // SUB, body, base0)
+    cnt_ref[...] = jnp.full((1, LANES), total, jnp.int32)
+
+
+def block_compact(
+    cols: jax.Array,  # [C, N] f32 column block
+    mask: jax.Array,  # [1, N] i32 (0/1) row mask
+    cap: int,
+    *,
+    block_n: int = 65536,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (out [C, cap] f32, count i32 scalar).
+
+    ``out[:, j]`` is the j-th qualifying row for ``j < min(count, cap)``,
+    zero beyond; ``count`` is the total mask population regardless of cap.
+    """
+    c, n = cols.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    assert bn % SUB == 0, (bn, SUB)
+    assert cap >= 1
+
+    out, cnt = pl.pallas_call(
+        functools.partial(_kernel, cap=cap),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((c, bn), lambda i: (0, i)),
+            pl.BlockSpec((1, bn), lambda i: (0, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((c, cap + SUB), lambda i: (0, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((c, cap + SUB), jnp.float32),
+            jax.ShapeDtypeStruct((1, LANES), jnp.int32),
+        ),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(cols, mask)
+    return out[:, :cap], cnt[0, 0]

@@ -12,8 +12,6 @@ lo <= col0 < hi AND lo2 <= col1 < hi2. Bounds arrive via SMEM (scalars).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -23,7 +21,7 @@ from repro.kernels.compat import CompilerParams
 LANES = 128
 
 
-def _kernel(bounds_ref, cols_ref, out_ref, *, nb):
+def _kernel(bounds_ref, cols_ref, out_ref):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -58,12 +56,11 @@ def filter_agg(
     _, n = cols.shape
     bn = min(block_n, n)
     assert n % bn == 0, (n, bn)
-    nb = n // bn
     bounds = jnp.asarray([lo, hi, lo2, hi2], jnp.float32)
 
     out = pl.pallas_call(
-        functools.partial(_kernel, nb=nb),
-        grid=(nb,),
+        _kernel,
+        grid=(n // bn,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec((4, bn), lambda i: (0, i)),

@@ -14,9 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.block_compact import SUB as _COMPACT_SUB
+from repro.kernels.block_compact import block_compact as _compact_kernel
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.filter_scan import filter_agg as _filter_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.group_filter_agg import group_filter_agg as _group_kernel
 from repro.kernels.moe_gmm import gmm as _gmm_kernel
 from repro.kernels.ssd_scan import ssd_intra as _ssd_kernel
 
@@ -73,13 +76,9 @@ def decode_attention(q, k, v, kv_len, *, block_k: int = 512, use_pallas: bool = 
 def ssd_intra(x, bmat, cmat, dt, a, *, chunk: int = 128, use_pallas: bool = True):
     """Intra-chunk SSD; see kernels/ssd_scan.py. Falls back to a vmapped oracle."""
     if not use_pallas:
-        b, s, h, p = x.shape
+        _, s, _, _ = x.shape
         q = min(chunk, s)
         nc = s // q
-        xr = x.reshape(b * nc, q, h, p) if False else None  # noqa - clarity below
-        def one(args):
-            xc, bc, cc, dtc = args
-            return ref.ssd_intra_ref(xc[None], bc[None], cc[None], dtc[None], a)
         ys, sts = [], []
         for c in range(nc):
             sl = slice(c * q, (c + 1) * q)
@@ -116,3 +115,58 @@ def filter_agg(cols, lo, hi, lo2, hi2, *, block_n: int = 16384, use_pallas: bool
         filler = jnp.full((4, pad), jnp.finfo(jnp.float32).max, cols.dtype)
         cols_p = jnp.concatenate([cols, filler], axis=1)
     return _filter_kernel(cols_p, lo, hi, lo2, hi2, block_n=block_n, interpret=_interpret())
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_groups", "block_n", "use_pallas")
+)
+def group_filter_agg(
+    cols, keys, pred_ops, pred_consts, agg_ops, agg_consts, *,
+    num_groups: int, block_n: int = 16384, use_pallas: bool = True,
+):
+    """Single-pass grouped filter+aggregate over a [C, N] column block.
+
+    ``pred_ops``/``pred_consts``/``agg_ops``/``agg_consts`` encode the
+    predicate and aggregate programs (see kernels/group_filter_agg.py —
+    ``encode_predicates`` / ``encode_aggregates`` build them).  Returns
+    [num_groups, A + 1]: per-group aggregate sums, then the masked count.
+    """
+    if not use_pallas:
+        return ref.group_filter_agg_ref(
+            cols, keys, pred_ops, pred_consts, agg_ops, agg_consts, num_groups
+        )
+    keys = keys.reshape(1, -1).astype(jnp.int32)
+    n = cols.shape[1]
+    bn = min(block_n, n)
+    target = -(-n // bn) * bn
+    if target != n:
+        # Padded rows carry key -1: they match no group regardless of what
+        # the predicate program evaluates to on the zero-filled columns.
+        cols = jnp.pad(cols, ((0, 0), (0, target - n)))
+        keys = jnp.pad(keys, ((0, 0), (0, target - n)), constant_values=-1)
+    return _group_kernel(
+        cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
+        num_groups=num_groups, block_n=bn, interpret=_interpret(),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "block_n", "use_pallas"))
+def block_compact(cols, mask, cap: int, *, block_n: int = 65536, use_pallas: bool = True):
+    """Compact the masked rows of a [C, N] block into a [C, cap] buffer.
+
+    Returns (out, count): ``out[:, j]`` is the j-th qualifying row for
+    ``j < min(count, cap)``, zero beyond; ``count`` is the total mask
+    population.  One fused pass instead of ``nonzero`` + per-column gather.
+    """
+    if not use_pallas:
+        return ref.block_compact_ref(cols, mask, cap)
+    mask = (mask.reshape(1, -1) != 0).astype(jnp.int32)
+    n = cols.shape[1]
+    # Blocks must hold whole sub-tiles; pad the tail with mask=0 rows.
+    bn = min(-(-block_n // _COMPACT_SUB) * _COMPACT_SUB,
+             -(-n // _COMPACT_SUB) * _COMPACT_SUB)
+    target = -(-n // bn) * bn
+    if target != n:
+        cols = jnp.pad(cols, ((0, 0), (0, target - n)))
+        mask = jnp.pad(mask, ((0, 0), (0, target - n)))
+    return _compact_kernel(cols, mask, cap, block_n=bn, interpret=_interpret())

@@ -84,6 +84,85 @@ def gmm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+def _program_mask(cols: jax.Array, pred_ops: jax.Array, pred_consts: jax.Array) -> jax.Array:
+    """Row mask [N] from a group_filter_agg predicate program."""
+    n = cols.shape[1]
+    mask = jnp.ones((n,), bool)
+    for k in range(pred_ops.shape[0]):
+        kind, a, b = pred_ops[k, 0], pred_ops[k, 1], pred_ops[k, 2]
+        lo, hi = pred_consts[k, 0], pred_consts[k, 1]
+        ca = jax.lax.dynamic_index_in_dim(cols, a, 0, keepdims=False)
+        cb = jax.lax.dynamic_index_in_dim(cols, b, 0, keepdims=False)
+        mask &= jnp.where(kind == 0, (ca >= lo) & (ca < hi), ca < cb)
+    return mask
+
+
+def _program_values(cols: jax.Array, agg_ops: jax.Array, agg_consts: jax.Array) -> jax.Array:
+    """Per-row aggregate values [A, N] from a group_filter_agg term program."""
+    num_aggs, n = agg_ops.shape[0], cols.shape[1]
+    max_terms = agg_consts.shape[1]
+    vals = []
+    for a in range(num_aggs):
+        v = jnp.ones((n,), jnp.float32)
+        for t in range(max_terms):
+            mode, col = agg_ops[a, 2 * t], agg_ops[a, 2 * t + 1]
+            const = agg_consts[a, t]
+            c = jax.lax.dynamic_index_in_dim(cols, col, 0, keepdims=False)
+            c = c.astype(jnp.float32)
+            term = jnp.where(mode == 1, c, 1.0)
+            term = jnp.where(mode == 2, 1.0 - c, term)
+            term = jnp.where(mode == 3, 1.0 + c, term)
+            term = jnp.where(mode == 4, (c <= const).astype(jnp.float32), term)
+            term = jnp.where(mode == 5, (c > const).astype(jnp.float32), term)
+            v = v * term
+        vals.append(v)
+    return jnp.stack(vals)
+
+
+def group_filter_agg_ref(
+    cols: jax.Array,  # [C, N] f32
+    keys: jax.Array,  # [1, N] or [N] i32 group ids (negative = dropped)
+    pred_ops: jax.Array,  # [K, 3] i32 — see kernels/group_filter_agg.py
+    pred_consts: jax.Array,  # [K, 2] f32
+    agg_ops: jax.Array,  # [A, 2*MAX_TERMS] i32
+    agg_consts: jax.Array,  # [A, MAX_TERMS] f32
+    num_groups: int,
+) -> jax.Array:
+    """Fused grouped filter+aggregate oracle.  Returns [G, A + 1] f32:
+    per-group masked aggregate sums, then the masked row count."""
+    keys = keys.reshape(-1)
+    w = _program_mask(cols, pred_ops, pred_consts).astype(jnp.float32)
+    # Out-of-range keys (the wrapper's -1 padding) must contribute nothing.
+    w = w * ((keys >= 0) & (keys < num_groups)).astype(jnp.float32)
+    seg_keys = jnp.clip(keys, 0, num_groups - 1)
+    vals = _program_values(cols, agg_ops, agg_consts)
+    parts = [
+        jax.ops.segment_sum(vals[a] * w, seg_keys, num_segments=num_groups)
+        for a in range(agg_ops.shape[0])
+    ]
+    parts.append(jax.ops.segment_sum(w, seg_keys, num_segments=num_groups))
+    return jnp.stack(parts, axis=1)
+
+
+def block_compact_ref(
+    cols: jax.Array,  # [C, N] f32
+    mask: jax.Array,  # [1, N] or [N] — nonzero selects the row
+    cap: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Compaction oracle: (out [C, cap] with the first min(count, cap)
+    qualifying rows then zeros, total count).  Matches engine.ops.compact's
+    nonzero+gather semantics."""
+    mask = mask.reshape(-1) != 0
+    n = mask.shape[0]
+    idx = jnp.nonzero(mask, size=cap, fill_value=n)[0]
+    in_range = idx < n
+    safe = jnp.where(in_range, idx, 0)
+    out = jnp.take(cols, safe, axis=1)
+    out = jnp.where(in_range[None, :], out, 0.0)
+    return out, jnp.sum(mask.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
 def filter_agg_ref(
     cols: jax.Array,  # [4, N] f32: (key, lo-col, hi-col, value) layout per op
     lo: jax.Array,  # scalar predicate bounds on cols[0]

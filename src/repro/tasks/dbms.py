@@ -6,13 +6,18 @@ Execution modes mirror the paper exactly:
          pays XLA compile + first-touch staging, the TPU-pod equivalent);
   hot  — steady-state, executable and data resident.
 
-Params: scale x query x mode. Metric: query latency (avg/p99) and rows/s.
-A second workload axis runs the LM train/serve step of any configured
-architecture as the "full system" (the paper's DBMS stands in for whole-
-application offload; ours is the end-to-end model step) — see param `app`.
+Params: scale x query x mode x impl. `impl` picks the execution plan:
+`unfused` is the plain jnp graph (one HBM pass per mask/derived-column/
+aggregate), `fused` routes through the single-pass `group_filter_agg`
+Pallas plan (engine.queries.FUSED_QUERIES). Metric: query latency
+(avg/p99) and rows/s. A second workload axis runs the LM train/serve step
+of any configured architecture as the "full system" (the paper's DBMS
+stands in for whole-application offload; ours is the end-to-end model
+step) — see param `app`.
 """
 from __future__ import annotations
 
+import time
 from typing import Any
 
 import jax
@@ -34,6 +39,7 @@ class DBMSTask(Task):
         "scale": list(_SCALES),
         "query": ["q1", "q6", "q12"],
         "mode": ["cold", "hot"],
+        "impl": ["unfused", "fused"],
     }
     default_metrics = ("avg_latency_us", "p99_latency_us", "items_per_s")
 
@@ -47,17 +53,17 @@ class DBMSTask(Task):
         scale = params.get("scale", "0.01")
         qname = params.get("query", "q6")
         mode = params.get("mode", "hot")
+        impl = params.get("impl", "unfused")
         li = ctx.scratch[f"li_{scale}"]
         od = ctx.scratch[f"od_{scale}"]
-        qfn = queries.QUERIES[qname]
+        table = queries.QUERIES if impl == "unfused" else queries.FUSED_QUERIES
+        qfn = table[qname]
 
         def call(f):
             return f(li, od) if qname == "q12" else f(li)
 
         if mode == "cold":
             # fresh jit each iteration: compile + execute (the paper's cold run)
-            import time
-
             times = []
             for _ in range(max(2, ctx.iters // 2)):
                 f = jax.jit(qfn)
@@ -67,7 +73,14 @@ class DBMSTask(Task):
                 f.clear_cache()
         else:
             f = jax.jit(qfn)
-            times = measure(lambda: call(f), iters=ctx.iters, warmup=ctx.warmup)
+            # Tiny scales finish in microseconds: min_time_s keeps sampling
+            # until the measurement is long enough to mean something.
+            times = measure(
+                lambda: call(f),
+                iters=ctx.iters,
+                warmup=ctx.warmup,
+                min_time_s=ctx.min_time_s,
+            )
 
         return Samples(times_s=times, items_per_iter=float(li.num_rows))
 
@@ -108,8 +121,6 @@ class AppStepTask(Task):
             items = 2
 
         if params.get("mode", "hot") == "cold":
-            import time
-
             t0 = time.perf_counter()
             block(fn(*args))
             times = [time.perf_counter() - t0]

@@ -9,6 +9,13 @@ across "storage owner" devices. Two plans for `SELECT ... WHERE pred`:
   pushdown — filter at the data owners (shard_map local predicate +
              fixed-capacity compact), only qualifying rows move. Bytes on
              the wire ~ selectivity x table (+ capacity padding).
+             `impl=kernel` swaps the nonzero+gather compaction for the
+             fused `block_compact` Pallas kernel (one pass: per-block mask
+             count + prefix-offset scatter); `impl=jnp` keeps the unfused
+             plan. `impl` is ignored by the other plans.
+  pushdown_kernel — fully fused filter+aggregate at the owners (the Q6
+             filter_agg kernel): zero row movement, only the aggregate
+             travels.
 
 On >1 device both plans execute their real collectives; on one device the
 data movement collapses but the compute asymmetry (and the dry-run's wire
@@ -38,6 +45,18 @@ def _pred_bounds(selectivity: float) -> tuple[float, float]:
     return float(lo), float(lo + width)
 
 
+def kernel_scan_columns(table) -> jax.Array:
+    """[4, N] column matrix for the fused filter_agg plan: shipdate and
+    discount as the two filter columns, extendedprice x 1.0 as the value
+    product.  The single source for the plan's column layout — the CI smoke
+    and tests reuse it so they validate the exact plan the task measures."""
+    n = table.num_rows
+    return jnp.stack(
+        [table["l_shipdate"], table["l_discount"],
+         table["l_extendedprice"], jnp.ones((n,), jnp.float32)]
+    )
+
+
 @register
 class PushdownTask(Task):
     name = "pushdown"
@@ -45,6 +64,7 @@ class PushdownTask(Task):
         "scale": list(_SCALES),
         "selectivity": [0.01, 0.1, 0.5],
         "plan": ["baseline", "pushdown", "pushdown_kernel"],
+        "impl": ["jnp", "kernel"],
     }
     default_metrics = ("items_per_s",)
 
@@ -57,6 +77,7 @@ class PushdownTask(Task):
         table = ctx.scratch[params.get("scale", "0.01")]
         sel = float(params.get("selectivity", 0.1))
         plan = params.get("plan", "pushdown")
+        use_kernel = params.get("impl", "jnp") == "kernel"
         lo, hi = _pred_bounds(sel)
         n = table.num_rows
         cap = max(1024, int(1.5 * sel * n))
@@ -79,18 +100,19 @@ class PushdownTask(Task):
             @jax.jit
             def fn(t):
                 mask = ops.pred_between(t["l_shipdate"], lo, hi)
-                out, cnt = ops.compact(t, mask, cap)
-                return ops.masked_sum(out["l_extendedprice"], out["l_extendedprice"] != 0), cnt
+                out, cnt = ops.compact(t, mask, cap, use_pallas=use_kernel)
+                # compact already returns the true count; slots < cnt are the
+                # qualifying rows (masking on value != 0 would silently drop
+                # genuine zero-valued qualifying rows).
+                valid = jnp.arange(cap) < cnt
+                return ops.masked_sum(out["l_extendedprice"], valid), cnt
 
             times = measure(fn, scanned, iters=ctx.iters, warmup=ctx.warmup)
             moved_bytes = cap * 16  # 4 cols x 4 B per qualifying row
         else:  # pushdown_kernel: fused Pallas filter+aggregate, zero row movement
             from repro.kernels import ops as kops
 
-            colmat = jnp.stack(
-                [table["l_shipdate"], table["l_discount"],
-                 table["l_extendedprice"], jnp.ones((n,), jnp.float32)]
-            )
+            colmat = kernel_scan_columns(table)
 
             def fn(c):
                 return kops.filter_agg(c, lo, hi, -1.0, 1.0)

@@ -9,6 +9,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ops, ref
+from repro.kernels.group_filter_agg import encode_aggregates, encode_predicates
 
 KEY = jax.random.PRNGKey(7)
 
@@ -167,3 +168,127 @@ def test_filter_agg_property(n, lo, width):
     c = np.asarray(cols)
     mask = (c[0] >= lo) & (c[0] < hi) & (c[1] >= 0.2) & (c[1] < 0.9)
     assert int(out[1]) == int(mask.sum())
+
+
+# ---------------------------------------------------------------------------
+# group_filter_agg: the generalized single-pass grouped filter+aggregate.
+def _gfa_case(n, num_groups, lo, width, seed):
+    cols = jax.random.uniform(jax.random.fold_in(KEY, seed), (5, n), jnp.float32)
+    keys = jax.random.randint(jax.random.fold_in(KEY, seed + 1), (n,), 0, num_groups)
+    pred_ops, pred_consts = encode_predicates(
+        [("range", 0, lo, lo + width), ("lt", 1, 2)]
+    )
+    agg_ops, agg_consts = encode_aggregates(
+        [
+            [("col", 3)],
+            [("col", 3), ("one_minus", 4)],
+            [("col", 3), ("one_minus", 4), ("one_plus", 2)],
+            [("le", 1, 0.5)],
+            [("gt", 1, 0.5)],
+        ]
+    )
+    return cols, keys, pred_ops, pred_consts, agg_ops, agg_consts
+
+
+@given(
+    n=st.sampled_from([512, 4096, 20000, 100_000]),  # ragged tails force padding
+    num_groups=st.sampled_from([1, 6, 128]),
+    lo=st.floats(0.0, 0.5),
+    width=st.floats(0.01, 0.5),
+)
+@settings(max_examples=10, deadline=None)
+def test_group_filter_agg_property(n, num_groups, lo, width):
+    """Kernel == oracle == numpy across group counts, predicates, padding."""
+    cols, keys, po, pc, ao, ac = _gfa_case(n, num_groups, lo, width, n + num_groups)
+    out = ops.group_filter_agg(cols, keys, po, pc, ao, ac,
+                               num_groups=num_groups, block_n=4096)
+    exp = ref.group_filter_agg_ref(cols, keys, po, pc, ao, ac, num_groups)
+    assert out.shape == (num_groups, 6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=1e-3)
+    # counts are integer sums: exact, and cross-checked against plain numpy
+    c, k = np.asarray(cols), np.asarray(keys)
+    m = (c[0] >= lo) & (c[0] < lo + width) & (c[1] < c[2])
+    np.testing.assert_array_equal(np.asarray(exp[:, -1]), np.asarray(out[:, -1]))
+    for g in range(num_groups):
+        assert int(out[g, -1]) == int(((k == g) & m).sum())
+
+
+@pytest.mark.parametrize("all_pass", [True, False])
+def test_group_filter_agg_degenerate_masks(all_pass):
+    """All-pass (open range) and all-fail (empty range) predicate programs."""
+    n = 5000  # ragged vs block 4096
+    cols = jax.random.uniform(jax.random.fold_in(KEY, 33), (3, n), jnp.float32)
+    keys = jax.random.randint(jax.random.fold_in(KEY, 34), (n,), 0, 6)
+    preds = [("range", 0, None, None)] if all_pass else [("range", 0, 0.5, 0.5)]
+    po, pc = encode_predicates(preds)
+    ao, ac = encode_aggregates([[("col", 1)], [("col", 1), ("col", 2)]])
+    out = ops.group_filter_agg(cols, keys, po, pc, ao, ac, num_groups=6, block_n=4096)
+    exp = ref.group_filter_agg_ref(cols, keys, po, pc, ao, ac, 6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5, atol=1e-4)
+    assert int(np.asarray(out[:, -1]).sum()) == (n if all_pass else 0)
+
+
+def test_group_filter_agg_ref_escape_hatch():
+    """use_pallas=False routes to the oracle (modulo jit) — same values."""
+    cols, keys, po, pc, ao, ac = _gfa_case(4096, 6, 0.1, 0.6, 77)
+    a = ops.group_filter_agg(cols, keys, po, pc, ao, ac, num_groups=6, use_pallas=False)
+    b = ref.group_filter_agg_ref(cols, keys, po, pc, ao, ac, 6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_encode_program_validation():
+    with pytest.raises(ValueError, match="unknown predicate kind"):
+        encode_predicates([("ge", 0, 1.0, 2.0)])
+    with pytest.raises(ValueError, match="unknown term kind"):
+        encode_aggregates([[("sqrt", 0)]])
+    with pytest.raises(ValueError, match="terms"):
+        encode_aggregates([[("col", 0)] * 4])
+    po, pc = encode_predicates([])  # empty program = always-true
+    assert po.shape == (1, 3) and pc.shape == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# block_compact: fused capacity-bounded row compaction.
+@given(
+    n=st.sampled_from([512, 2048, 5000, 20000]),  # ragged tails force padding
+    sel=st.floats(0.0, 1.0),
+    cap_slack=st.floats(0.25, 2.0),  # caps below AND above the true count
+)
+@settings(max_examples=10, deadline=None)
+def test_block_compact_property(n, sel, cap_slack):
+    """Kernel == oracle bit-for-bit, including capacity overflow."""
+    k = jax.random.fold_in(KEY, n + int(100 * sel))
+    cols = jax.random.uniform(k, (4, n), jnp.float32)
+    mask = jax.random.uniform(jax.random.fold_in(k, 1), (n,)) < sel
+    cap = max(1, int(cap_slack * max(int(jnp.sum(mask)), 8)))
+    out, cnt = ops.block_compact(cols, mask, cap, block_n=2048)
+    exp, ecnt = ref.block_compact_ref(cols, mask, cap)
+    assert int(cnt) == int(ecnt) == int(np.asarray(mask).sum())
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@pytest.mark.parametrize("fill", [0.0, 1.0])
+def test_block_compact_degenerate_masks(fill):
+    n = 3000
+    cols = jax.random.uniform(jax.random.fold_in(KEY, 55), (3, n), jnp.float32)
+    mask = jnp.full((n,), bool(fill))
+    out, cnt = ops.block_compact(cols, mask, 1024, block_n=1024)
+    exp, ecnt = ref.block_compact_ref(cols, mask, 1024)
+    assert int(cnt) == int(ecnt) == (n if fill else 0)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_block_compact_keeps_zero_valued_rows():
+    """Zero-valued qualifying rows are data, not padding: they must survive
+    compaction at their slot (the pushdown bug this PR fixes assumed
+    value != 0 implied validity)."""
+    n = 1024
+    cols = jnp.stack([jnp.zeros((n,)), jnp.arange(n, dtype=jnp.float32)])
+    mask = jnp.arange(n) % 3 == 0
+    cap = int(np.asarray(mask).sum()) + 16
+    out, cnt = ops.block_compact(cols, mask, cap, block_n=512)
+    exp, ecnt = ref.block_compact_ref(cols, mask, cap)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    # row 0 qualifies and is all-zero in col 0; it still occupies slot 0
+    assert int(cnt) == int(ecnt)
+    assert float(out[1, 0]) == 0.0 and float(out[1, 1]) == 3.0
