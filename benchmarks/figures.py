@@ -225,4 +225,34 @@ FIGURES: dict[str, dict] = {
             },
         ],
     },
+    # ---- serving: tail latency under open-loop load (ROADMAP item 1) --------
+    # Per (query, batching) point: p50/p99 request latency (queueing
+    # included), delivered QPS at the offered rate, and the closed-loop
+    # saturation ceiling.  batching=true coalesces concurrent same-shape
+    # requests into one scan-shared kernel pass.
+    "fig16_serving": {
+        "name": "fig16_serving",
+        "tasks": [
+            {
+                "task": "serving",
+                "params": {
+                    "scale": ["0.001"],
+                    "query": ["q1", "q6", "q12"],
+                    "rate": [50.0],
+                    "arrival": ["poisson"],
+                    "batching": [True, False],
+                    "duration": [0.5],
+                    "queue_depth": [64],
+                    "seed": [0],
+                },
+                "metrics": [
+                    "p50_latency_us",
+                    "p99_latency_us",
+                    "qps",
+                    "saturation_qps",
+                    "shed_requests",
+                ],
+            }
+        ],
+    },
 }

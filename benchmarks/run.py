@@ -84,65 +84,16 @@ def merge_figure(fig: str, out_dir: Path, platforms) -> int:
 
 
 def main(argv=None) -> int:
+    from repro.core import config as config_mod
+
     p = argparse.ArgumentParser(prog="benchmarks.run")
     p.add_argument("--only", nargs="*", default=None, help="figure ids to run")
-    p.add_argument("--iters", type=int, default=3)
-    p.add_argument("--warmup", type=int, default=1)
-    p.add_argument(
-        "--min-time", type=float, default=0.0, metavar="SECONDS",
-        help="keep sampling each test past --iters until this much measured "
-        "wall time accumulates (part of the cache identity when set)",
-    )
-    p.add_argument("--workers", type=int, default=1, help="concurrent test workers")
-    p.add_argument(
-        "--platforms", nargs="+", default=["cpu-host"],
-        help="execution platforms to sweep (e.g. cpu-host dpu-sim)",
-    )
-    p.add_argument("--pool", choices=("thread", "process"), default="thread")
-    p.add_argument(
-        "--schedule", choices=("static", "dynamic"), default="dynamic",
-        help="dynamic (default): pull-based fleet scheduler with straggler "
-        "re-dispatch for pooled runs; static: up-front LPT plan",
-    )
-    p.add_argument(
-        "--straggler-factor", type=float, default=4.0, metavar="X",
-        help="dynamic schedule: speculatively re-dispatch a unit once it "
-        "has run X times its calibrated cost estimate (default 4)",
-    )
-    p.add_argument(
-        "--shard", default=None, metavar="I/N[@W]",
-        help="run only shard I of N of every figure; an @ weight suffix "
-        "(0/2@0.25) weights shards and switches to cost-balanced "
-        "assignment; @auto calibrates weights from worker pings",
-    )
-    p.add_argument(
-        "--weighted-shard", action="store_true",
-        help="balance shards by estimated per-unit cost (cache-fed) instead "
-        "of key count",
-    )
-    p.add_argument(
-        "--shard-plan", action="store_true",
-        help="print each figure's per-shard unit count and estimated cost "
-        "share, then exit without running",
-    )
+    # Shared sweep surface (core.config): same flags as repro.core.runner
+    # and the serving CLI, with this orchestrator's defaults.
+    config_mod.add_sweep_args(p, iters=3, warmup=1, platforms=["cpu-host"])
     p.add_argument(
         "--merge", action="store_true",
         help="merge existing per-figure shard CSVs into <figure>.csv and exit",
-    )
-    p.add_argument(
-        "--remote", default=None, metavar="HOST:PORT[,HOST:PORT...]",
-        help="dispatch unit execution to repro.core.remote worker(s); "
-        "comma-separate a fleet for dynamic pull + @auto calibration",
-    )
-    p.add_argument("--no-cache", action="store_true", help="remeasure everything")
-    p.add_argument("--cache-file", default=None, help="cache path (default <out>/cache.json)")
-    p.add_argument(
-        "--cache-max-entries", type=int, default=None, metavar="N",
-        help="evict oldest cache entries beyond N on flush",
-    )
-    p.add_argument(
-        "--cache-max-age", type=float, default=None, metavar="SECONDS",
-        help="evict cache entries older than SECONDS on flush",
     )
     p.add_argument("--out", default=str(RESULTS))
     p.add_argument("--list", action="store_true")
@@ -170,60 +121,9 @@ def main(argv=None) -> int:
             print(f"# {fig}: merged {n} rows", file=sys.stderr)
         return 0
 
-    from repro.core.cache import ResultCache
-    from repro.core.executor import SweepExecutor
-    from repro.core.platform import get_platform
-
-    try:
-        for name in args.platforms:
-            get_platform(name)
-    except KeyError as e:
-        p.error(str(e.args[0]))
-
-    shard = None
-    if args.shard:
-        from repro.core.shard import ShardSpec
-
-        try:
-            shard = ShardSpec.parse(args.shard)
-        except ValueError as e:
-            p.error(str(e))
-    if args.shard_plan and shard is None:
-        p.error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
-    if args.remote:
-        from repro.core import remote as remote_mod
-
-        try:
-            endpoints = remote_mod.parse_fleet(args.remote)
-        except ValueError as e:
-            p.error(str(e))
-        if not args.shard_plan:
-            for ep in endpoints:
-                try:
-                    if not remote_mod.wait_ready(ep):
-                        p.error(f"remote worker {ep} is not answering")
-                except remote_mod.RemoteExecutionError as e:
-                    p.error(str(e))
-    cache = None
-    if not args.no_cache:
-        cache = ResultCache(
-            args.cache_file or out_dir / "cache.json",
-            max_entries=args.cache_max_entries,
-            max_age_s=args.cache_max_age,
-        )
-    executor = SweepExecutor(
-        platforms=args.platforms,
-        workers=args.workers,
-        iters=args.iters,
-        warmup=args.warmup,
-        min_time_s=args.min_time,
-        cache=cache,
-        pool=args.pool,
-        remote=args.remote,
-        weighted_shard=args.weighted_shard,
-        schedule=args.schedule,
-        straggler_factor=args.straggler_factor,
-    )
+    cfg = config_mod.SweepConfig.from_args(args)
+    shard = config_mod.validate_sweep(cfg, p.error)
+    executor = config_mod.make_executor(cfg, cache_default_path=out_dir / "cache.json")
     if args.shard_plan:
         from repro.core.box import Box
 

@@ -61,6 +61,7 @@ _BUILTIN_MODULES = (
     "repro.tasks.pushdown",
     "repro.tasks.index_offload",
     "repro.tasks.dbms",
+    "repro.tasks.serving",
     "repro.tasks.plugins.pallas_accel",
     "repro.tasks.plugins.quantize",
 )

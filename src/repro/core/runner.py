@@ -41,6 +41,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Sequence
 
+from repro.core import config as config_mod
 from repro.core import registry, report
 from repro.core.box import Box
 from repro.core.cache import ResultCache
@@ -106,6 +107,27 @@ class Runner:
         self.warmup = warmup
         self.fail_fast = fail_fast
 
+    @classmethod
+    def from_config(
+        cls, cfg: config_mod.SweepConfig, cache: ResultCache | None = None
+    ) -> "Runner":
+        """Build a Runner from the shared CLI sweep surface (core.config)."""
+        if cache is None:
+            cache = config_mod.make_cache(cfg)
+        return cls(
+            iters=cfg.iters,
+            warmup=cfg.warmup,
+            min_time_s=cfg.min_time_s,
+            workers=cfg.workers,
+            platforms=cfg.platforms,
+            cache=cache,
+            pool=cfg.pool,
+            remote=cfg.remote,
+            weighted_shard=cfg.weighted_shard,
+            schedule=cfg.schedule,
+            straggler_factor=cfg.straggler_factor,
+        )
+
     @property
     def executor(self) -> SweepExecutor:
         return self._exec
@@ -146,68 +168,15 @@ def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(prog="repro.core.runner", description="Run a dpBento box")
     p.add_argument("box_pos", nargs="?", metavar="box", help="path to box JSON")
     p.add_argument("--box", dest="box_opt", default=None, help="path to box JSON (same as the positional)")
-    p.add_argument("--iters", type=int, default=5)
-    p.add_argument("--warmup", type=int, default=2)
-    p.add_argument(
-        "--min-time", type=float, default=0.0, metavar="SECONDS",
-        help="keep sampling each test past --iters until this much measured "
-        "wall time accumulates (microsecond-scale points stop being "
-        "5-sample noise); part of the cache identity when set",
-    )
-    p.add_argument("--workers", type=int, default=1, help="concurrent test workers")
-    p.add_argument(
-        "--platforms", nargs="+", default=None,
-        help="execution platforms to sweep (e.g. cpu-host dpu-sim)",
-    )
-    p.add_argument("--pool", choices=("thread", "process"), default="thread")
-    p.add_argument("--cache", default=None, metavar="PATH", help="persistent result cache file")
-    p.add_argument("--no-cache", action="store_true", help="ignore --cache / box cache")
-    p.add_argument(
-        "--cache-max-entries", type=int, default=None, metavar="N",
-        help="evict oldest cache entries beyond N on flush",
-    )
-    p.add_argument(
-        "--cache-max-age", type=float, default=None, metavar="SECONDS",
-        help="evict cache entries older than SECONDS on flush",
-    )
+    # The whole sweep surface (--iters/--workers/--platforms/--cache*/
+    # --shard*/--remote/--schedule/...) comes from core.config so this CLI,
+    # benchmarks.run, and the serving CLI can never drift apart.
+    config_mod.add_sweep_args(p)
     p.add_argument("--format", choices=("csv", "md", "json"), default="csv")
     p.add_argument("--out", default=None, help="write report here instead of stdout")
     p.add_argument(
-        "--schedule", choices=("static", "dynamic"), default="dynamic",
-        help="dynamic (default): pull-based fleet scheduler with straggler "
-        "re-dispatch for pooled runs; static: up-front LPT plan",
-    )
-    p.add_argument(
-        "--straggler-factor", type=float, default=4.0, metavar="X",
-        help="dynamic schedule: speculatively re-dispatch a unit once it "
-        "has run X times its calibrated cost estimate (default 4)",
-    )
-    p.add_argument(
-        "--shard", default=None, metavar="I/N[@W]",
-        help="run only shard I of N (e.g. 0/2); an @ weight suffix "
-        "(0/2@0.25, 1/4@0.1:0.3:0.3:0.3) gives shards capacity weights and "
-        "switches to cost-balanced assignment; @auto calibrates the vector "
-        "from worker pings + cost evidence",
-    )
-    p.add_argument(
-        "--weighted-shard", action="store_true",
-        help="balance shards by estimated per-unit cost (cache-fed CostModel) "
-        "instead of key count, even with uniform weights",
-    )
-    p.add_argument(
-        "--shard-plan", action="store_true",
-        help="print each shard's unit count and estimated cost share for "
-        "--shard's N (and weights), then exit without running",
-    )
-    p.add_argument(
         "--merge", nargs="+", default=None, metavar="REPORT",
         help="merge shard report files (.csv/.json) into one table and exit",
-    )
-    p.add_argument(
-        "--remote", default=None, metavar="HOST:PORT[,HOST:PORT...]",
-        help="dispatch unit execution to repro.core.remote worker(s); "
-        "comma-separate a fleet — the dynamic schedule gives each worker "
-        "its own sink, and @auto shard weights calibrate from their pings",
     )
     p.add_argument(
         "--plugin-dir", action="append", default=[], metavar="DIR",
@@ -241,11 +210,12 @@ def main(argv: list[str] | None = None) -> int:
         registry.load_plugin_dir(d)
     if not args.box:
         p.error("box path required")
-    if args.platforms:
+    cfg = config_mod.SweepConfig.from_args(args)
+    if cfg.platforms:
         from repro.core.platform import get_platform
 
         try:
-            for name in args.platforms:
+            for name in cfg.platforms:
                 get_platform(name)
         except KeyError as e:
             p.error(str(e.args[0]))
@@ -255,7 +225,7 @@ def main(argv: list[str] | None = None) -> int:
         # Merge mode: no execution — reassemble shard reports in the box's
         # canonical row order and emit one table.
         shard_rows = [report.load_report_rows(f) for f in args.merge]
-        rows = report.merge_shard_reports(shard_rows, box=box, platforms=args.platforms)
+        rows = report.merge_shard_reports(shard_rows, box=box, platforms=cfg.platforms)
         _emit(_format_rows(rows, args.format, box.name), args.out)
         print(
             f"# merged {len(rows)} rows from {len(args.merge)} shard reports",
@@ -263,48 +233,9 @@ def main(argv: list[str] | None = None) -> int:
         )
         return 0
 
-    shard = None
-    if args.shard:
-        try:
-            shard = ShardSpec.parse(args.shard)
-        except ValueError as e:
-            p.error(str(e))
-    if args.shard_plan and shard is None:
-        p.error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
-    if args.remote:
-        from repro.core import remote as remote_mod
-
-        try:
-            endpoints = remote_mod.parse_fleet(args.remote)
-        except ValueError as e:
-            p.error(str(e))
-        if not args.shard_plan:
-            for ep in endpoints:
-                try:
-                    if not remote_mod.wait_ready(ep):
-                        p.error(f"remote worker {ep} is not answering")
-                except remote_mod.RemoteExecutionError as e:
-                    p.error(str(e))
-    cache = None
-    if args.cache and not args.no_cache:
-        cache = ResultCache(
-            args.cache,
-            max_entries=args.cache_max_entries,
-            max_age_s=args.cache_max_age,
-        )
-    runner = Runner(
-        iters=args.iters,
-        warmup=args.warmup,
-        min_time_s=args.min_time,
-        workers=args.workers,
-        platforms=args.platforms,
-        cache=cache,
-        pool=args.pool,
-        remote=args.remote,
-        weighted_shard=args.weighted_shard,
-        schedule=args.schedule,
-        straggler_factor=args.straggler_factor,
-    )
+    shard = config_mod.validate_sweep(cfg, p.error)
+    cache = config_mod.make_cache(cfg)
+    runner = Runner.from_config(cfg, cache=cache)
     if args.shard_plan:
         plan = runner.executor.shard_plan(box, shard)
         for row in plan:

@@ -19,6 +19,9 @@ unfused results exactly; float sums agree to accumulation-order tolerance.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, Callable
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -119,13 +122,27 @@ def q12(lineitem: Table, orders: Table, year: int = 1994):
 
 
 # ---------------------------------------------------------------------------
-# Fused variants: each query as one group_filter_agg pass.
-def q1_fused(
-    lineitem: Table, delta_days: float = 90.0, use_pallas: bool = True
-) -> dict[str, jax.Array]:
-    """Q1 as a single kernel pass: 6 groups x 5 aggregates + count, with
-    disc_price/charge evaluated in-register by the term program."""
+# Fused variants: each query as one group_filter_agg pass.  The kernel
+# programs are built by per-query ``*_program`` functions so that constants
+# can also be stacked into *batch inputs* for the scan-sharing serving path
+# (``fused_query_batch``) instead of being baked at trace time.
+def q1_program(delta_days: float = 90.0):
+    """Q1's kernel program: (pred_ops, pred_consts, agg_ops, agg_consts)."""
     cutoff = datagen.date(1998, 12, 1) - delta_days
+    pred = encode_predicates([("range", 0, None, _le_bound(cutoff))])  # shipdate <= cutoff
+    agg = encode_aggregates(
+        [
+            [("col", 1)],  # sum_qty
+            [("col", 2)],  # sum_base_price
+            [("col", 2), ("one_minus", 3)],  # sum_disc_price
+            [("col", 2), ("one_minus", 3), ("one_plus", 4)],  # sum_charge
+            [("col", 3)],  # sum_disc
+        ]
+    )
+    return (*pred, *agg)
+
+
+def _q1_layout(lineitem: Table) -> tuple[jax.Array, jax.Array]:
     cols = jnp.stack(
         [
             lineitem["l_shipdate"],  # 0: predicate
@@ -136,22 +153,11 @@ def q1_fused(
         ]
     )
     keys = lineitem["l_returnflag"] * 2 + lineitem["l_linestatus"]
-    pred_ops, pred_consts = encode_predicates(
-        [("range", 0, None, _le_bound(cutoff))]  # shipdate <= cutoff
-    )
-    agg_ops, agg_consts = encode_aggregates(
-        [
-            [("col", 1)],  # sum_qty
-            [("col", 2)],  # sum_base_price
-            [("col", 2), ("one_minus", 3)],  # sum_disc_price
-            [("col", 2), ("one_minus", 3), ("one_plus", 4)],  # sum_charge
-            [("col", 3)],  # sum_disc
-        ]
-    )
-    out = kops.group_filter_agg(
-        cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
-        num_groups=6, use_pallas=use_pallas,
-    )
+    return cols, keys
+
+
+def _q1_demux(out: jax.Array) -> dict[str, jax.Array]:
+    """Q1 result dict from one [6, 6] kernel output row-block."""
     agg = {
         "sum_qty": out[:, 0],
         "sum_base_price": out[:, 1],
@@ -165,6 +171,52 @@ def q1_fused(
     agg["avg_price"] = agg["sum_base_price"] / cnt
     agg["avg_disc"] = agg["sum_disc"] / cnt
     return agg
+
+
+def q1_fused(
+    lineitem: Table, delta_days: float = 90.0, use_pallas: bool = True
+) -> dict[str, jax.Array]:
+    """Q1 as a single kernel pass: 6 groups x 5 aggregates + count, with
+    disc_price/charge evaluated in-register by the term program."""
+    cols, keys = _q1_layout(lineitem)
+    pred_ops, pred_consts, agg_ops, agg_consts = q1_program(delta_days)
+    out = kops.group_filter_agg(
+        cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
+        num_groups=6, use_pallas=use_pallas,
+    )
+    return _q1_demux(out)
+
+
+def q6_program(year: int = 1994, discount: float = 0.06, qty: float = 24.0):
+    """Q6's kernel program: three range predicates + one product-sum."""
+    lo = datagen.date(year)
+    hi = datagen.date(year + 1)
+    pred = encode_predicates(
+        [
+            ("range", 0, lo, hi),
+            ("range", 1, discount - 0.011, discount + 0.011),
+            ("range", 2, None, qty),  # quantity < qty
+        ]
+    )
+    agg = encode_aggregates([[("col", 3), ("col", 1)]])
+    return (*pred, *agg)
+
+
+def _q6_layout(lineitem: Table) -> tuple[jax.Array, jax.Array]:
+    cols = jnp.stack(
+        [
+            lineitem["l_shipdate"],  # 0
+            lineitem["l_discount"],  # 1
+            lineitem["l_quantity"],  # 2
+            lineitem["l_extendedprice"],  # 3
+        ]
+    )
+    keys = jnp.zeros((lineitem.num_rows,), jnp.int32)
+    return cols, keys
+
+
+def _q6_demux(out: jax.Array) -> dict[str, jax.Array]:
+    return {"revenue": out[0, 0], "rows": out[0, 1].astype(jnp.int32)}
 
 
 def q6_fused(
@@ -181,30 +233,60 @@ def q6_fused(
     general kernel expresses all three predicates, so the returned row
     count matches ``q6`` exactly too.
     """
-    lo = datagen.date(year)
-    hi = datagen.date(year + 1)
-    cols = jnp.stack(
-        [
-            lineitem["l_shipdate"],  # 0
-            lineitem["l_discount"],  # 1
-            lineitem["l_quantity"],  # 2
-            lineitem["l_extendedprice"],  # 3
-        ]
-    )
-    keys = jnp.zeros((lineitem.num_rows,), jnp.int32)
-    pred_ops, pred_consts = encode_predicates(
-        [
-            ("range", 0, lo, hi),
-            ("range", 1, discount - 0.011, discount + 0.011),
-            ("range", 2, None, qty),  # quantity < qty
-        ]
-    )
-    agg_ops, agg_consts = encode_aggregates([[("col", 3), ("col", 1)]])
+    cols, keys = _q6_layout(lineitem)
+    pred_ops, pred_consts, agg_ops, agg_consts = q6_program(year, discount, qty)
     out = kops.group_filter_agg(
         cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
         num_groups=1, use_pallas=use_pallas,
     )
-    return {"revenue": out[0, 0], "rows": out[0, 1].astype(jnp.int32)}
+    return _q6_demux(out)
+
+
+def q12_program(year: int = 1994):
+    """Q12's kernel program over the joined layout."""
+    lo = datagen.date(year)
+    hi = datagen.date(year + 1)
+    pred = encode_predicates(
+        [
+            ("lt", 0, 1),  # commitdate < receiptdate
+            ("lt", 2, 0),  # shipdate < commitdate
+            ("range", 1, lo, hi),  # receiptdate in the year window
+        ]
+    )
+    agg = encode_aggregates(
+        [
+            [("le", 3, 1.0)],  # high priority: 1-URGENT, 2-HIGH
+            [("gt", 3, 1.0)],  # low priority
+        ]
+    )
+    return (*pred, *agg)
+
+
+def _q12_layout(lineitem: Table, orders: Table) -> tuple[jax.Array, jax.Array]:
+    """Join once; the join does not depend on the predicate constants, so
+    the serving path amortizes it across every request of the batch."""
+    joined = ops.fk_index_join(
+        lineitem, "l_orderkey", orders, "o_orderkey", ("o_orderpriority",)
+    )
+    cols = jnp.stack(
+        [
+            joined["l_commitdate"],  # 0
+            joined["l_receiptdate"],  # 1
+            joined["l_shipdate"],  # 2
+            joined["o_orderpriority"].astype(jnp.float32),  # 3
+        ]
+    )
+    return cols, joined["l_shipmode"]
+
+
+def _q12_demux(out: jax.Array) -> dict[str, jax.Array]:
+    num_groups = len(datagen.SHIPMODE)
+    sel = jnp.zeros((num_groups,), jnp.float32).at[jnp.asarray(Q12_SHIPMODES)].set(1.0)
+    return {
+        "high_line_count": out[:, 0] * sel,
+        "low_line_count": out[:, 1] * sel,
+        "count": out[:, 2] * sel,
+    }
 
 
 def q12_fused(
@@ -217,43 +299,112 @@ def q12_fused(
     shipmodes land in other groups), so it becomes a post-kernel group mask
     instead of a row predicate — counts stay integer-exact.
     """
-    lo = datagen.date(year)
-    hi = datagen.date(year + 1)
-    joined = ops.fk_index_join(lineitem, "l_orderkey", orders, "o_orderkey", ("o_orderpriority",))
-    cols = jnp.stack(
-        [
-            joined["l_commitdate"],  # 0
-            joined["l_receiptdate"],  # 1
-            joined["l_shipdate"],  # 2
-            joined["o_orderpriority"].astype(jnp.float32),  # 3
-        ]
-    )
-    keys = joined["l_shipmode"]
-    pred_ops, pred_consts = encode_predicates(
-        [
-            ("lt", 0, 1),  # commitdate < receiptdate
-            ("lt", 2, 0),  # shipdate < commitdate
-            ("range", 1, lo, hi),  # receiptdate in the year window
-        ]
-    )
-    agg_ops, agg_consts = encode_aggregates(
-        [
-            [("le", 3, 1.0)],  # high priority: 1-URGENT, 2-HIGH
-            [("gt", 3, 1.0)],  # low priority
-        ]
-    )
-    num_groups = len(datagen.SHIPMODE)
+    cols, keys = _q12_layout(lineitem, orders)
+    pred_ops, pred_consts, agg_ops, agg_consts = q12_program(year)
     out = kops.group_filter_agg(
         cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
-        num_groups=num_groups, use_pallas=use_pallas,
+        num_groups=len(datagen.SHIPMODE), use_pallas=use_pallas,
     )
-    sel = jnp.zeros((num_groups,), jnp.float32).at[jnp.asarray(Q12_SHIPMODES)].set(1.0)
-    return {
-        "high_line_count": out[:, 0] * sel,
-        "low_line_count": out[:, 1] * sel,
-        "count": out[:, 2] * sel,
-    }
+    return _q12_demux(out)
 
 
 QUERIES = {"q1": q1, "q6": q6, "q12": q12}
 FUSED_QUERIES = {"q1": q1_fused, "q6": q6_fused, "q12": q12_fused}
+
+
+# ---------------------------------------------------------------------------
+# Serving plans: the query-shape contract behind scan-sharing micro-batches.
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """One query shape, ready to serve requests whose constants arrive at
+    run time.
+
+    ``cols``/``keys`` are the parameter-independent column layout (for Q12
+    including the join, computed once); ``pred_ops``/``agg_ops`` the shared
+    opcode structure; ``program(params)`` builds one request's constant
+    tables; ``demux(out)`` turns one ``[G, A + 1]`` kernel output slot back
+    into the query's result dict.
+    """
+
+    name: str
+    cols: jax.Array
+    keys: jax.Array
+    pred_ops: jax.Array
+    agg_ops: jax.Array
+    num_groups: int
+    program: Callable[[dict[str, Any]], tuple[jax.Array, jax.Array]]
+    demux: Callable[[jax.Array], dict[str, jax.Array]]
+
+
+def _plan_program(program_fn) -> Callable[[dict[str, Any]], tuple[jax.Array, jax.Array]]:
+    def consts(params: dict[str, Any]) -> tuple[jax.Array, jax.Array]:
+        _, pred_consts, _, agg_consts = program_fn(**params)
+        return pred_consts, agg_consts
+
+    return consts
+
+
+def make_serving_plans(
+    lineitem: Table, orders: Table | None = None
+) -> dict[str, ServingPlan]:
+    """Serving plans for every fused query servable over these tables.
+
+    Q12 needs ``orders`` for its join; without it only Q1/Q6 are planned.
+    """
+    plans: dict[str, ServingPlan] = {}
+    specs: list[tuple[str, tuple[jax.Array, jax.Array], Any, int, Any]] = [
+        ("q1", _q1_layout(lineitem), q1_program, 6, _q1_demux),
+        ("q6", _q6_layout(lineitem), q6_program, 1, _q6_demux),
+    ]
+    if orders is not None:
+        specs.append(
+            ("q12", _q12_layout(lineitem, orders), q12_program, len(datagen.SHIPMODE), _q12_demux)
+        )
+    for name, (cols, keys), program_fn, num_groups, demux in specs:
+        pred_ops, _, agg_ops, _ = program_fn()
+        plans[name] = ServingPlan(
+            name=name,
+            cols=cols,
+            keys=keys,
+            pred_ops=pred_ops,
+            agg_ops=agg_ops,
+            num_groups=num_groups,
+            program=_plan_program(program_fn),
+            demux=demux,
+        )
+    return plans
+
+
+def fused_query_serial(
+    plan: ServingPlan, params: dict[str, Any], *, use_pallas: bool = True
+) -> dict[str, jax.Array]:
+    """One request through the single-program kernel — the serving oracle."""
+    pred_consts, agg_consts = plan.program(params)
+    out = kops.group_filter_agg(
+        plan.cols, plan.keys, plan.pred_ops, pred_consts, plan.agg_ops, agg_consts,
+        num_groups=plan.num_groups, use_pallas=use_pallas,
+    )
+    return plan.demux(out)
+
+
+def fused_query_batch(
+    plan: ServingPlan,
+    param_list: list[dict[str, Any]],
+    *,
+    use_pallas: bool = True,
+) -> list[dict[str, jax.Array]]:
+    """Scan sharing: N same-shape requests, ONE kernel pass over the data.
+
+    Each request's constants become one slot of the batched SMEM program
+    tables; results demultiplex per request and are bit-equal to
+    ``fused_query_serial`` on the same constants (the kernel's per-program
+    block-accumulation order is identical to the single-program path).
+    """
+    consts = [plan.program(p) for p in param_list]
+    pred_consts = jnp.stack([c[0] for c in consts])
+    agg_consts = jnp.stack([c[1] for c in consts])
+    out = kops.group_filter_agg_multi(
+        plan.cols, plan.keys, plan.pred_ops, pred_consts, plan.agg_ops, agg_consts,
+        num_groups=plan.num_groups, use_pallas=use_pallas,
+    )
+    return [plan.demux(out[b]) for b in range(len(param_list))]

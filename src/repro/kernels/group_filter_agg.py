@@ -134,16 +134,25 @@ def encode_aggregates(aggs) -> tuple[jax.Array, jax.Array]:
 
 
 # ---------------------------------------------------------------------------
-def _eval_mask(pred_ops_ref, pred_consts_ref, cols_ref, num_preds: int):
-    """Row mask [1, bn] from the SMEM predicate program (all preds ANDed)."""
+def _eval_mask(pred_ops_ref, pred_consts_ref, cols_ref, num_preds: int, prog=None):
+    """Row mask [1, bn] from the SMEM predicate program (all preds ANDed).
+
+    ``prog`` indexes the program slot of a batched ``[B, K, 2]`` constants
+    table (the multi-program dispatch path); ``None`` reads the flat
+    ``[K, 2]`` layout.
+    """
     bn = cols_ref.shape[1]
     mask = jnp.ones((1, bn), jnp.bool_)
     for k in range(num_preds):
         kind = pred_ops_ref[k, 0]
         a = pred_ops_ref[k, 1]
         b = pred_ops_ref[k, 2]
-        lo = pred_consts_ref[k, 0]
-        hi = pred_consts_ref[k, 1]
+        if prog is None:
+            lo = pred_consts_ref[k, 0]
+            hi = pred_consts_ref[k, 1]
+        else:
+            lo = pred_consts_ref[prog, k, 0]
+            hi = pred_consts_ref[prog, k, 1]
         ca = cols_ref[pl.ds(a, 1), :]
         cb = cols_ref[pl.ds(b, 1), :]
         in_range = (ca >= lo) & (ca < hi)
@@ -151,14 +160,14 @@ def _eval_mask(pred_ops_ref, pred_consts_ref, cols_ref, num_preds: int):
     return mask
 
 
-def _eval_terms(agg_ops_ref, agg_consts_ref, cols_ref, a: int):
+def _eval_terms(agg_ops_ref, agg_consts_ref, cols_ref, a: int, prog=None):
     """Per-row value [1, bn] of aggregate ``a``: the product of its terms."""
     bn = cols_ref.shape[1]
     val = jnp.ones((1, bn), jnp.float32)
     for t in range(MAX_TERMS):
         mode = agg_ops_ref[a, 2 * t]
         col = agg_ops_ref[a, 2 * t + 1]
-        const = agg_consts_ref[a, t]
+        const = agg_consts_ref[a, t] if prog is None else agg_consts_ref[prog, a, t]
         c = cols_ref[pl.ds(col, 1), :].astype(jnp.float32)
         term = jnp.where(mode == TERM_COL, c, 1.0)
         term = jnp.where(mode == TERM_ONE_MINUS, 1.0 - c, term)
@@ -258,3 +267,106 @@ def group_filter_agg(
         interpret=interpret,
     )(pred_ops, pred_consts, agg_ops, agg_consts, cols, keys)
     return out[:, : num_aggs + 1]
+
+
+# ---------------------------------------------------------------------------
+# Multi-program dispatch: B constant sets, one HBM pass (scan sharing).
+def _kernel_multi(
+    pred_ops_ref,
+    pred_consts_ref,  # [B, K, 2] SMEM — per-program predicate constants
+    agg_ops_ref,
+    agg_consts_ref,  # [B, A, MAX_TERMS] SMEM — per-program term constants
+    cols_ref,
+    keys_ref,
+    out_ref,  # [1, G, LANES] block of the [B, G, LANES] output
+    *,
+    num_groups: int,
+    num_preds: int,
+    num_aggs: int,
+):
+    i = pl.program_id(0)  # data block (outer grid dim)
+    b = pl.program_id(1)  # program slot (inner grid dim)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bn = cols_ref.shape[1]
+    maskf = _eval_mask(
+        pred_ops_ref, pred_consts_ref, cols_ref, num_preds, prog=b
+    ).astype(jnp.float32)
+    keys = keys_ref[...]
+    group_ids = jax.lax.broadcasted_iota(jnp.int32, (num_groups, bn), 0)
+    onehot = (group_ids == keys).astype(jnp.float32) * maskf
+    rows = [
+        _eval_terms(agg_ops_ref, agg_consts_ref, cols_ref, a, prog=b)
+        for a in range(num_aggs)
+    ]
+    rows.append(jnp.ones((1, bn), jnp.float32))
+    vals = jnp.concatenate(rows, axis=0)
+    upd = jax.lax.dot_general(
+        onehot, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] += jnp.pad(upd, ((0, 0), (0, LANES - (num_aggs + 1))))[None]
+
+
+def group_filter_agg_multi(
+    cols: jax.Array,  # [C, N] f32 column block — scanned ONCE for all programs
+    keys: jax.Array,  # [1, N] i32 dictionary-coded group ids (may be -1 = pad)
+    pred_ops: jax.Array,  # [K, 3] i32 predicate program, shared across the batch
+    pred_consts: jax.Array,  # [B, K, 2] f32 per-program predicate constants
+    agg_ops: jax.Array,  # [A, 2*MAX_TERMS] i32 aggregate program, shared
+    agg_consts: jax.Array,  # [B, A, MAX_TERMS] f32 per-program term constants
+    *,
+    num_groups: int,
+    block_n: int = 16384,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scan-shared batch of ``group_filter_agg``: B programs, one HBM pass.
+
+    All programs share one opcode structure (same query shape) but carry
+    their own constants — N concurrent q6 requests with different predicate
+    bounds become one kernel invocation.  The grid is ``(blocks, B)`` with
+    the program slot innermost: each ``[C, bn]`` column block's index map is
+    constant across the inner dimension, so Pallas keeps the block resident
+    in VMEM while every program runs over it, and HBM sees each row exactly
+    once regardless of B.  Per program the block-accumulation order is
+    identical to the single-program kernel, so ``out[b]`` is bit-equal to
+    ``group_filter_agg(..., pred_consts[b], ..., agg_consts[b], ...)``.
+
+    Returns ``[B, num_groups, A + 1]`` f32.
+    """
+    _, n = cols.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    num_progs = pred_consts.shape[0]
+    assert agg_consts.shape[0] == num_progs, (pred_consts.shape, agg_consts.shape)
+    num_preds = pred_ops.shape[0]
+    num_aggs = agg_ops.shape[0]
+    assert num_aggs + 1 <= LANES, num_aggs
+    assert num_groups >= 1
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel_multi,
+            num_groups=num_groups,
+            num_preds=num_preds,
+            num_aggs=num_aggs,
+        ),
+        grid=(n // bn, num_progs),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((cols.shape[0], bn), lambda i, b: (0, i)),
+            pl.BlockSpec((1, bn), lambda i, b: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, num_groups, LANES), lambda i, b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_progs, num_groups, LANES), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pred_ops, pred_consts, agg_ops, agg_consts, cols, keys)
+    return out[:, :, : num_aggs + 1]

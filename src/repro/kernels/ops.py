@@ -20,6 +20,7 @@ from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.filter_scan import filter_agg as _filter_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.group_filter_agg import group_filter_agg as _group_kernel
+from repro.kernels.group_filter_agg import group_filter_agg_multi as _group_multi_kernel
 from repro.kernels.moe_gmm import gmm as _gmm_kernel
 from repro.kernels.ssd_scan import ssd_intra as _ssd_kernel
 
@@ -145,6 +146,41 @@ def group_filter_agg(
         cols = jnp.pad(cols, ((0, 0), (0, target - n)))
         keys = jnp.pad(keys, ((0, 0), (0, target - n)), constant_values=-1)
     return _group_kernel(
+        cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
+        num_groups=num_groups, block_n=bn, interpret=_interpret(),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_groups", "block_n", "use_pallas")
+)
+def group_filter_agg_multi(
+    cols, keys, pred_ops, pred_consts, agg_ops, agg_consts, *,
+    num_groups: int, block_n: int = 16384, use_pallas: bool = True,
+):
+    """Scan-shared batch of ``group_filter_agg``: B constant sets, one pass.
+
+    ``pred_consts``/``agg_consts`` carry a leading program dimension
+    (``[B, K, 2]`` / ``[B, A, MAX_TERMS]``) and are *traced inputs*, not
+    trace-time constants — one compiled executable serves any predicate
+    bounds of the same query shape.  Returns ``[B, num_groups, A + 1]``;
+    slot ``b`` is bit-equal to the single-program call with that program's
+    constants (same block-accumulation order).
+    """
+    if not use_pallas:
+        return ref.group_filter_agg_multi_ref(
+            cols, keys, pred_ops, pred_consts, agg_ops, agg_consts, num_groups
+        )
+    keys = keys.reshape(1, -1).astype(jnp.int32)
+    n = cols.shape[1]
+    bn = min(block_n, n)
+    target = -(-n // bn) * bn
+    if target != n:
+        # Same padding contract as the single-program wrapper: key -1
+        # matches no group, so padded rows vanish from every program.
+        cols = jnp.pad(cols, ((0, 0), (0, target - n)))
+        keys = jnp.pad(keys, ((0, 0), (0, target - n)), constant_values=-1)
+    return _group_multi_kernel(
         cols, keys, pred_ops, pred_consts, agg_ops, agg_consts,
         num_groups=num_groups, block_n=bn, interpret=_interpret(),
     )

@@ -144,6 +144,27 @@ def group_filter_agg_ref(
     return jnp.stack(parts, axis=1)
 
 
+def group_filter_agg_multi_ref(
+    cols: jax.Array,  # [C, N] f32
+    keys: jax.Array,  # [1, N] or [N] i32
+    pred_ops: jax.Array,  # [K, 3] i32, shared across programs
+    pred_consts: jax.Array,  # [B, K, 2] f32 per-program constants
+    agg_ops: jax.Array,  # [A, 2*MAX_TERMS] i32, shared
+    agg_consts: jax.Array,  # [B, A, MAX_TERMS] f32 per-program constants
+    num_groups: int,
+) -> jax.Array:
+    """Scan-shared multi-program oracle: per program slot, exactly the
+    single-program oracle.  Returns [B, G, A + 1] f32."""
+    return jnp.stack(
+        [
+            group_filter_agg_ref(
+                cols, keys, pred_ops, pred_consts[b], agg_ops, agg_consts[b], num_groups
+            )
+            for b in range(pred_consts.shape[0])
+        ]
+    )
+
+
 def block_compact_ref(
     cols: jax.Array,  # [C, N] f32
     mask: jax.Array,  # [1, N] or [N] — nonzero selects the row

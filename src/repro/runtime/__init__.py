@@ -6,9 +6,26 @@ from repro.runtime.train_loop import (
     run_with_restarts,
     train,
 )
-from repro.runtime.serve_loop import Completion, Request, SlotServer
+from repro.runtime.requests import (
+    Completion,
+    QueryCompletion,
+    QueryRequest,
+    Request,
+    RequestQueue,
+)
+from repro.runtime.serve_loop import SlotServer
+from repro.runtime.loadgen import arrival_times, generate_trace, sample_params
+from repro.runtime.serve_query import (
+    QueryServer,
+    ServeReport,
+    measure_saturation,
+    run_open_loop,
+)
 
 __all__ = [
     "SimulatedFailure", "TrainConfig", "TrainResult", "make_train_step",
     "run_with_restarts", "train", "Completion", "Request", "SlotServer",
+    "QueryCompletion", "QueryRequest", "RequestQueue",
+    "arrival_times", "generate_trace", "sample_params",
+    "QueryServer", "ServeReport", "measure_saturation", "run_open_loop",
 ]

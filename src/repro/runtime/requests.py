@@ -1,0 +1,118 @@
+"""Shared request/completion surface for the serving loops.
+
+Both serving front ends — token decode (`serve_loop.SlotServer`) and query
+serving (`serve_query.QueryServer`) — speak the same submit/complete
+vocabulary: a `Request` enters through a queue, a `Completion` leaves with
+its result.  `RequestQueue` is the admission-control half: a bounded FIFO
+deque that sheds on overflow and accounts for every offered request, so
+open-loop load generators can report rejection rates honestly.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Iterator
+
+import jax
+
+
+@dataclasses.dataclass
+class Request:
+    """A token-decode request (see serve_loop.SlotServer)."""
+
+    uid: int
+    prompt: jax.Array  # [S] int32
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished token-decode request."""
+
+    uid: int
+    tokens: list[int]
+    prompt_len: int
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    """One fused-query invocation: a query shape plus its run-time constants.
+
+    ``arrival_s`` is the *scheduled* (open-loop) arrival time, so latency
+    includes queueing delay — the coordinated-omission-correct measure.
+    """
+
+    uid: int
+    query: str  # plan name: "q1" | "q6" | "q12"
+    params: dict[str, Any]  # constants for queries.ServingPlan.program
+    arrival_s: float = 0.0
+
+
+@dataclasses.dataclass
+class QueryCompletion:
+    """A finished query request with its result and latency breakdown."""
+
+    uid: int
+    query: str
+    result: dict[str, Any]
+    latency_s: float  # arrival -> finish (includes queueing)
+    service_s: float  # kernel execution only
+    batch_size: int = 1  # how many requests shared the scan
+
+
+class RequestQueue:
+    """Bounded FIFO admission queue with load-shedding accounting.
+
+    ``submit`` returns False (and counts a shed) when the queue is full;
+    callers never block.  ``depth=None`` means unbounded.  The counters
+    satisfy ``offered == admitted + shed`` at all times.
+    """
+
+    def __init__(self, depth: int | None = None):
+        if depth is not None and depth < 1:
+            raise ValueError(f"queue depth must be >= 1, got {depth}")
+        self.depth = depth
+        self._q: collections.deque = collections.deque()
+        self.offered = 0
+        self.admitted = 0
+        self.shed = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self) -> Iterator:
+        return iter(self._q)
+
+    def submit(self, req) -> bool:
+        self.offered += 1
+        if self.depth is not None and len(self._q) >= self.depth:
+            self.shed += 1
+            return False
+        self._q.append(req)
+        self.admitted += 1
+        return True
+
+    def popleft(self):
+        return self._q.popleft()
+
+    def peek(self):
+        return self._q[0] if self._q else None
+
+    def take_matching(self, pred: Callable[[Any], bool], limit: int) -> list:
+        """Dequeue up to ``limit`` requests satisfying ``pred``, preserving
+        FIFO order among both the taken and the remaining requests.
+
+        This is the scan-sharing coalescer: the query server takes every
+        pending request of one query shape in one call and fuses them into
+        a single kernel pass.
+        """
+        taken: list = []
+        rest: collections.deque = collections.deque()
+        while self._q:
+            req = self._q.popleft()
+            if len(taken) < limit and pred(req):
+                taken.append(req)
+            else:
+                rest.append(req)
+        self._q = rest
+        return taken

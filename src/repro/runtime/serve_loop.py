@@ -13,27 +13,15 @@ across slots; noted in DESIGN.md.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
+from repro.runtime.requests import Completion, Request, RequestQueue
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: jax.Array  # [S] int32
-    max_new_tokens: int = 32
-
-
-@dataclasses.dataclass
-class Completion:
-    uid: int
-    tokens: list[int]
-    prompt_len: int
+__all__ = ["Completion", "Request", "SlotServer"]
 
 
 class SlotServer:
@@ -52,7 +40,7 @@ class SlotServer:
         self.slot_done: list[list[int]] = [[] for _ in range(n_slots)]
         self.slot_budget = [0] * n_slots
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
-        self.queue: list[Request] = []
+        self.queue = RequestQueue()  # unbounded: decode serving never sheds
         self.completed: list[Completion] = []
         self.decode_calls = 0
 
@@ -69,7 +57,7 @@ class SlotServer:
         self.cache = self.model.init_cache(self.n_slots, self.max_len)
 
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.queue.submit(req)
 
     def _fill_slot(self, slot: int, req: Request) -> None:
         """Prefill one request into `slot` (single-request batch), splice in."""
@@ -113,7 +101,7 @@ class SlotServer:
         """One scheduler tick: refill free slots, decode once. Returns #active."""
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None and self.queue:
-                self._fill_slot(slot, self.queue.pop(0))
+                self._fill_slot(slot, self.queue.popleft())
         active = [s for s in range(self.n_slots) if self.slot_req[s] is not None]
         if not active:
             return 0
