@@ -1,0 +1,280 @@
+"""Fleet soak: elastic-fleet correctness under sustained random faults.
+
+The elastic-fleet layer's acceptance bar, run as a benchmark so CI pins it
+per commit:
+
+  1. **Baseline** — run the box sequentially (no fleet) for the reference
+     report every later phase must byte-match.
+  2. **Hang bound** — seed per-unit cost evidence with one clean fleet
+     pass, then inject a 300 s ``hang`` fault (worker accepts the unit,
+     never replies, keeps heartbeating — the worst case: membership can't
+     see it) and time the pass.  The overhead over a clean pass must stay
+     under :data:`HANG_BOUND_S`; before layered deadlines this was a 600 s
+     socket-timeout wait.
+  3. **Soak** — a :class:`repro.core.faults.FaultyFleet` of N registered
+     loopback workers takes a seeded random fault (kill / hang / slow /
+     partial) roughly every ``--fault-period`` seconds for ``--duration``
+     seconds while sweep passes run back-to-back.  Killed workers respawn
+     on fresh ports mid-pass, so the run exercises *leave* and *join*
+     membership churn, not just failure.  Every pass's report is
+     byte-diffed against the baseline; any divergence or task error fails
+     the benchmark.
+
+Results land in a BENCH JSON (``--out``): passes completed, per-mode fault
+counts, respawns, redispatch/blacklist totals, and the measured hang
+detection overhead.
+
+Usage: python -m benchmarks.fleet_soak [--out BENCH_7.json] [--workers 4]
+       [--duration 60] [--seed 7] [--fault-period 1.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from collections import Counter
+from pathlib import Path
+
+from repro.core import registry as reg
+from repro.core.box import Box
+from repro.core.cache import ResultCache
+from repro.core.executor import SweepExecutor
+from repro.core.faults import FaultSpec, FaultyFleet, inject
+from repro.core.remote import LocalWorker, wait_members
+from repro.runtime.membership import MembershipRegistry, MembershipServer
+
+#: Max extra seconds a hung worker may cost a pass (acceptance: seconds,
+#: never the 600 s request timeout).
+HANG_BOUND_S = 10.0
+
+#: Heartbeat period for soak fleets: fast enough that kill detection is
+#: bounded by ~3 x this, slow enough to not dominate loopback traffic.
+BEAT_S = 0.5
+
+
+def _make_plugin(root: Path, name: str) -> Path:
+    """Deterministic directory-plugin task: metrics are pure functions of
+    params, so reports are byte-comparable no matter which worker ran what."""
+    d = root / name
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "task.json").write_text(
+        json.dumps(
+            {
+                "name": name,
+                "param_space": {"a": [1, 2, 3, 4, 5, 6], "b": ["x", "y", "z"]},
+                "metrics": ["avg_latency_us", "ops_per_s"],
+            }
+        )
+    )
+    (d / "run.py").write_text(
+        # The real sleep stretches each pass to ~1 s so injected faults land
+        # MID-pass (the interesting case); reported metrics stay pure
+        # functions of params, so reports are byte-comparable regardless.
+        "import time\n"
+        "def main(ctx, params):\n"
+        "    time.sleep(0.03 * params['a'])\n"
+        "    t = 1e-4 * params['a'] * {'x': 1, 'y': 2, 'z': 3}[params['b']]\n"
+        "    return {'times_s': [t, 2 * t], 'ops_per_iter': 100.0}\n"
+    )
+    return d
+
+
+def _box(name: str) -> Box:
+    return Box.from_dict(
+        {
+            "name": f"{name}_box",
+            "tasks": [
+                {"task": name, "params": {"a": [1, 2, 3, 4, 5, 6], "b": ["x", "y", "z"]}}
+            ],
+        }
+    )
+
+
+def _fleet_executor(registry_endpoint: str, cache: ResultCache, workers: int) -> SweepExecutor:
+    return SweepExecutor(
+        platforms=["cpu-host"],
+        workers=workers,
+        iters=1,
+        warmup=0,
+        fleet_registry=registry_endpoint,
+        cache=cache,
+    )
+
+
+def phase_hang_bound(plugin: Path, box: Box, baseline_csv: str, tmp: Path) -> dict:
+    """Measure the pass-time overhead of one wedged worker."""
+    srv = MembershipServer(
+        "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=BEAT_S)
+    )
+    srv.serve_in_thread()
+    workers = [
+        LocalWorker(
+            plugin_dirs=[plugin], register=srv.endpoint,
+            heartbeat_interval_s=BEAT_S, allow_faults=True,
+        ).__enter__()
+        for _ in range(2)
+    ]
+    try:
+        wait_members(srv.endpoint, count=2, timeout=60)
+        cache = ResultCache(tmp / "hang-cache.json", max_entries=0)
+        ex = _fleet_executor(srv.endpoint, cache, workers=2)
+
+        t0 = time.monotonic()
+        clean = ex.run_box(box)  # also seeds the costs sidecar -> deadlines
+        clean_s = time.monotonic() - t0
+        assert clean.csv() == baseline_csv, "clean fleet pass diverged from baseline"
+        cache.clear()
+
+        inject(workers[0].endpoint, FaultSpec("hang", seconds=300))
+        t0 = time.monotonic()
+        faulted = ex.run_box(box)
+        hang_s = time.monotonic() - t0
+        assert faulted.stats.errors == 0, f"hang pass had {faulted.stats.errors} errors"
+        assert faulted.csv() == baseline_csv, "hang pass diverged from baseline"
+        overhead = hang_s - clean_s
+        assert overhead < HANG_BOUND_S, (
+            f"hang detection took {overhead:.1f}s over the {clean_s:.1f}s clean "
+            f"pass — bound is {HANG_BOUND_S}s"
+        )
+        return {
+            "clean_pass_s": round(clean_s, 3),
+            "hang_pass_s": round(hang_s, 3),
+            "hang_overhead_s": round(overhead, 3),
+            "bound_s": HANG_BOUND_S,
+            "redispatched": faulted.stats.redispatched,
+        }
+    finally:
+        for w in workers:
+            w.__exit__(None, None, None)
+        srv.shutdown()
+        srv.server_close()
+
+
+def phase_soak(
+    plugin: Path,
+    box: Box,
+    baseline_csv: str,
+    tmp: Path,
+    size: int,
+    duration_s: float,
+    seed: int,
+    fault_period_s: float,
+) -> dict:
+    """Back-to-back sweep passes under seeded random fleet chaos."""
+    srv = MembershipServer(
+        "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=BEAT_S)
+    )
+    srv.serve_in_thread()
+    try:
+        with FaultyFleet(
+            size, register=srv.endpoint, plugin_dirs=[plugin], seed=seed,
+            heartbeat_interval_s=BEAT_S,
+        ) as fleet:
+            cache = ResultCache(tmp / "soak-cache.json", max_entries=0)
+            ex = _fleet_executor(srv.endpoint, cache, workers=size)
+            ex.run_box(box)  # seed cost evidence before the chaos starts
+            cache.clear()
+
+            fleet.start(period_s=fault_period_s)
+            passes = 0
+            redispatched = blacklisted = speculated = 0
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < duration_s or passes == 0:
+                res = ex.run_box(box)
+                assert res.stats.errors == 0, (
+                    f"pass {passes} had {res.stats.errors} task errors"
+                )
+                assert res.csv() == baseline_csv, (
+                    f"pass {passes} report diverged from the fault-free baseline"
+                )
+                redispatched += res.stats.redispatched
+                blacklisted += res.stats.blacklisted
+                speculated += res.stats.speculated
+                passes += 1
+                cache.clear()
+            elapsed = time.monotonic() - t0
+            events = fleet.stop()
+        by_mode = Counter(e.spec.mode for e in events)
+        return {
+            "workers": size,
+            "seed": seed,
+            "duration_s": round(elapsed, 1),
+            "passes": passes,
+            "faults_injected": len(events),
+            "faults_by_mode": dict(sorted(by_mode.items())),
+            "respawns": fleet.respawns,
+            "redispatched": redispatched,
+            "speculated": speculated,
+            "blacklisted": blacklisted,
+            "identical": True,
+        }
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="benchmarks.fleet_soak", description="elastic-fleet fault-injection soak"
+    )
+    p.add_argument("--out", default=None, help="write BENCH JSON here")
+    p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--duration", type=float, default=60.0, metavar="SECONDS")
+    p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--fault-period", type=float, default=1.0, metavar="SECONDS")
+    args = p.parse_args(argv)
+
+    with tempfile.TemporaryDirectory(prefix="fleet-soak-") as tmpdir:
+        tmp = Path(tmpdir)
+        plugin = _make_plugin(tmp, "soak")
+        reg.load_plugin_dir(plugin)
+        box = _box("soak")
+
+        print("# phase 1/3: sequential baseline", flush=True)
+        baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+        assert baseline.stats.errors == 0
+        baseline_csv = baseline.csv()
+
+        print("# phase 2/3: hang detection bound", flush=True)
+        hang = phase_hang_bound(plugin, box, baseline_csv, tmp)
+        print(
+            f"#   clean={hang['clean_pass_s']}s hung={hang['hang_pass_s']}s "
+            f"overhead={hang['hang_overhead_s']}s (bound {HANG_BOUND_S}s)",
+            flush=True,
+        )
+
+        print(
+            f"# phase 3/3: {args.duration:.0f}s soak, {args.workers} workers, "
+            f"seed {args.seed}",
+            flush=True,
+        )
+        soak = phase_soak(
+            plugin, box, baseline_csv, tmp,
+            size=args.workers, duration_s=args.duration,
+            seed=args.seed, fault_period_s=args.fault_period,
+        )
+        print(
+            f"#   {soak['passes']} passes, {soak['faults_injected']} faults "
+            f"{soak['faults_by_mode']}, {soak['respawns']} respawns, "
+            f"{soak['redispatched']} redispatches — all byte-identical",
+            flush=True,
+        )
+
+    bench = {
+        "bench": "fleet_soak",
+        "units": box.total_tests(),
+        "hang_bound": hang,
+        "soak": soak,
+    }
+    text = json.dumps(bench, indent=1) + "\n"
+    if args.out:
+        Path(args.out).write_text(text)
+    else:
+        sys.stdout.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

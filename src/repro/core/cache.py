@@ -24,7 +24,11 @@ Eviction would throw the scheduling evidence away with the raw entries, so
 each cache keeps an :class:`EwmaCostStore` sidecar (``costs.json`` next to
 the cache file): a bounded EWMA of wall cost per (task, platform), updated
 on every ``put`` and flushed with the cache, surviving both eviction and
-``clear()``.
+``clear()``.  A second sidecar, :class:`EndpointHealthStore`
+(``health.json``), keeps per-worker-endpoint transport health — consecutive
+failures, latency EWMA, last-seen — so chronically wedged workers are
+deprioritized at the start of the NEXT run too (cross-run straggler
+blacklisting).
 
 All on-disk writes go through a fresh ``mkstemp`` file in the target
 directory followed by ``os.replace``, so neither a crash mid-write nor two
@@ -47,9 +51,14 @@ from typing import Any
 
 CACHE_VERSION = 1
 COSTS_VERSION = 1
+HEALTH_VERSION = 1
 
 #: Smoothing factor shared by every wall-cost EWMA (sidecar + worker pings).
 EWMA_ALPHA = 0.25
+
+#: Consecutive transport failures before an endpoint is blacklisted at
+#: startup (cross-run straggler/wedge evidence in the health sidecar).
+BLACKLIST_AFTER = 3
 
 
 def _atomic_write_text(path: Path, text: str) -> None:
@@ -161,6 +170,138 @@ class EwmaCostStore:
             return len(self._entries)
 
 
+class EndpointHealthStore:
+    """Persistent per-endpoint transport health — the ``health.json``
+    sidecar next to ``costs.json``.
+
+    Where the cost store answers "how expensive is this unit here", this
+    store answers "can I trust this endpoint at all": per worker endpoint
+    it keeps the consecutive transport-failure count, an EWMA of observed
+    request latency, and when it last succeeded.  Only *transport*-level
+    evidence feeds it (``WorkerUnreachable``: dead, hung past deadline,
+    connection refused/corrupt) — a worker that cleanly reports a task
+    error is a healthy endpoint and must not lose standing.
+
+    The payoff is cross-run: a worker that was wedged last run starts this
+    run with ``consecutive_failures >= BLACKLIST_AFTER`` and is
+    deprioritized before it can eat another sweep's first wave.  One
+    success resets the streak (recovery is cheap, and the EWMA still
+    remembers the slowness).
+    """
+
+    def __init__(self, path: str | Path, alpha: float = EWMA_ALPHA):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.path = Path(path)
+        self.alpha = float(alpha)
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict[str, Any]] = {}
+        self._dirty = False
+        self._load()
+
+    def _load(self) -> None:
+        try:
+            d = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return  # missing/corrupt -> start empty, overwrite on flush
+        if d.get("version") != HEALTH_VERSION:
+            return
+        entries = d.get("entries")
+        if not isinstance(entries, dict):
+            return
+        for endpoint, e in entries.items():
+            if not isinstance(e, dict):
+                continue
+            try:
+                rec = {
+                    "consecutive_failures": max(0, int(e.get("consecutive_failures", 0))),
+                    "failures": max(0, int(e.get("failures", 0))),
+                    "successes": max(0, int(e.get("successes", 0))),
+                    "ewma_latency_s": (
+                        float(e["ewma_latency_s"])
+                        if e.get("ewma_latency_s") is not None
+                        else None
+                    ),
+                    "last_seen_unix": float(e.get("last_seen_unix", 0.0) or 0.0),
+                }
+            except (TypeError, ValueError):
+                continue
+            lat = rec["ewma_latency_s"]
+            if lat is not None and (lat <= 0 or not math.isfinite(lat)):
+                rec["ewma_latency_s"] = None
+            self._entries[str(endpoint)] = rec
+
+    def _rec(self, endpoint: str) -> dict[str, Any]:
+        return self._entries.setdefault(
+            str(endpoint),
+            {
+                "consecutive_failures": 0,
+                "failures": 0,
+                "successes": 0,
+                "ewma_latency_s": None,
+                "last_seen_unix": 0.0,
+            },
+        )
+
+    def observe_success(self, endpoint: str, latency_s: Any = None) -> None:
+        """A request served cleanly: reset the failure streak, fold latency."""
+        with self._lock:
+            rec = self._rec(endpoint)
+            rec["consecutive_failures"] = 0
+            rec["successes"] += 1
+            rec["last_seen_unix"] = time.time()
+            try:
+                x = float(latency_s) if latency_s is not None else None
+            except (TypeError, ValueError):
+                x = None
+            if x is not None and x > 0 and math.isfinite(x):
+                prev = rec["ewma_latency_s"]
+                rec["ewma_latency_s"] = (
+                    x if prev is None else self.alpha * x + (1.0 - self.alpha) * prev
+                )
+            self._dirty = True
+
+    def observe_failure(self, endpoint: str) -> int:
+        """A transport-level failure; returns the new consecutive count."""
+        with self._lock:
+            rec = self._rec(endpoint)
+            rec["consecutive_failures"] += 1
+            rec["failures"] += 1
+            self._dirty = True
+            return int(rec["consecutive_failures"])
+
+    def get(self, endpoint: str) -> dict[str, Any] | None:
+        with self._lock:
+            rec = self._entries.get(str(endpoint))
+            return dict(rec) if rec else None
+
+    def blacklisted(self, endpoint: str, threshold: int = BLACKLIST_AFTER) -> bool:
+        """Whether the endpoint's failure streak crosses the threshold."""
+        with self._lock:
+            rec = self._entries.get(str(endpoint))
+            return bool(rec) and int(rec["consecutive_failures"]) >= threshold
+
+    def snapshot(self) -> dict[str, dict[str, Any]]:
+        with self._lock:
+            return {k: dict(v) for k, v in self._entries.items()}
+
+    def flush(self) -> None:
+        with self._lock:
+            if not self._dirty:
+                return
+            payload = {
+                "version": HEALTH_VERSION,
+                "alpha": self.alpha,
+                "entries": {k: self._entries[k] for k in sorted(self._entries)},
+            }
+            _atomic_write_text(self.path, json.dumps(payload, indent=1, default=str))
+            self._dirty = False
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+
 def cache_key(
     task: str,
     params: dict[str, Any],
@@ -200,6 +341,8 @@ class ResultCache:
         max_age_s: float | None = None,
         costs_path: str | Path | None = None,
         cost_sidecar: bool = True,
+        health_path: str | Path | None = None,
+        health_sidecar: bool = True,
     ):
         if max_entries is not None and max_entries < 0:
             raise ValueError(f"max_entries must be >= 0, got {max_entries}")
@@ -213,6 +356,13 @@ class ResultCache:
         self.costs: EwmaCostStore | None = None
         if cost_sidecar:
             self.costs = EwmaCostStore(costs_path or self.path.with_name("costs.json"))
+        # Endpoint health persistence: transport-failure streaks + latency
+        # EWMAs per worker endpoint, for cross-run straggler blacklisting.
+        self.health: EndpointHealthStore | None = None
+        if health_sidecar:
+            self.health = EndpointHealthStore(
+                health_path or self.path.with_name("health.json")
+            )
         self._lock = threading.Lock()
         self._entries: dict[str, dict[str, Any]] = {}
         self._dirty = False
@@ -313,6 +463,8 @@ class ResultCache:
                 self._dirty = False
         if self.costs is not None:
             self.costs.flush()
+        if self.health is not None:
+            self.health.flush()
 
     def clear(self) -> None:
         """Erase the cached RESULTS.  The cost sidecar deliberately

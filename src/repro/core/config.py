@@ -46,6 +46,7 @@ class SweepConfig:
     weighted_shard: bool = False
     shard_plan: bool = False
     remote: str | None = None
+    registry: str | None = None
     cache_path: str | None = None
     no_cache: bool = False
     cache_max_entries: int | None = None
@@ -66,6 +67,7 @@ class SweepConfig:
             weighted_shard=ns.weighted_shard,
             shard_plan=getattr(ns, "shard_plan", False),
             remote=ns.remote,
+            registry=getattr(ns, "registry", None),
             cache_path=ns.cache_path,
             no_cache=ns.no_cache,
             cache_max_entries=ns.cache_max_entries,
@@ -138,6 +140,13 @@ def add_sweep_args(
         "its own sink, and @auto shard weights calibrate from their pings",
     )
     g.add_argument(
+        "--registry", default=None, metavar="HOST:PORT",
+        help="discover the worker fleet from a repro.runtime.membership "
+        "registry instead of --remote's endpoint list: sinks are the "
+        "registry's alive members and grow/shrink mid-sweep on membership "
+        "events (mutually exclusive with --remote)",
+    )
+    g.add_argument(
         "--cache", "--cache-file", dest="cache_path", default=None,
         metavar="PATH", help="persistent result cache file",
     )
@@ -180,6 +189,9 @@ def validate_sweep(
             error(str(e))
     if cfg.shard_plan and shard is None:
         error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
+    if cfg.remote and cfg.registry:
+        error("--remote and --registry are mutually exclusive: an explicit "
+              "endpoint list or a discovered fleet, not both")
     if cfg.remote:
         from repro.core import remote as remote_mod
 
@@ -195,6 +207,19 @@ def validate_sweep(
                         error(f"remote worker {ep} is not answering")
                 except remote_mod.RemoteExecutionError as e:
                     error(str(e))
+    if cfg.registry:
+        from repro.core import remote as remote_mod
+
+        try:
+            remote_mod.parse_endpoint(cfg.registry)
+        except ValueError as e:
+            error(str(e))
+        if ping_remote and not cfg.shard_plan:
+            try:
+                if not remote_mod.wait_ready(cfg.registry):
+                    error(f"membership registry {cfg.registry} is not answering")
+            except remote_mod.RemoteExecutionError as e:
+                error(str(e))
     return shard
 
 
@@ -239,6 +264,7 @@ def make_executor(
         cache=cache,
         pool=cfg.pool,
         remote=cfg.remote,
+        fleet_registry=cfg.registry,
         weighted_shard=cfg.weighted_shard,
         schedule=cfg.schedule,
         straggler_factor=cfg.straggler_factor,

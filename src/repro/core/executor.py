@@ -47,6 +47,15 @@ on (ROADMAP: sharding, batching, async, caching, multi-backend):
     ``remote="host:port"`` endpoint; comma-separate several for a fleet)
     ships units to :mod:`repro.core.remote` workers instead of running
     them locally.
+  * **Elastic fleets** — ``fleet_registry="host:port"`` discovers the
+    worker fleet from a :mod:`repro.runtime.membership` registry instead
+    of an endpoint list: sinks are the registry's alive members, a
+    :class:`repro.runtime.elastic.FleetWatcher` grows/shrinks the sink set
+    mid-sweep on membership events, per-unit deadlines derived from the
+    cost sidecar bound hung-worker detection, and the ``health.json``
+    sidecar blacklists chronically failing endpoints across runs.  Merged
+    reports stay byte-identical to sequential runs throughout — rows
+    assemble in canonical grid order whatever the fleet did.
 
 Process-pool note: tasks registered only via ``_register_for_tests`` are
 invisible to spawned children; plugin directories ARE threaded into the
@@ -90,6 +99,10 @@ class _ChildFailure(RuntimeError):
         self.child_traceback = child_traceback
 
 
+class RemoteFleetEmpty(RuntimeError):
+    """A registry-discovered fleet has no alive workers to run on."""
+
+
 @dataclass
 class SweepStats:
     total: int = 0
@@ -98,6 +111,11 @@ class SweepStats:
     errors: int = 0
     # Units that got a speculative straggler copy under dynamic scheduling.
     speculated: int = 0
+    # Units re-enqueued because their sink was marked dead mid-flight.
+    redispatched: int = 0
+    # Fleet endpoints excluded at startup by the health sidecar's
+    # consecutive-failure streak (cross-run straggler blacklisting).
+    blacklisted: int = 0
 
 
 @dataclass
@@ -152,6 +170,7 @@ class SweepExecutor:
         schedule: str = "dynamic",
         straggler_factor: float = DEFAULT_STRAGGLER_FACTOR,
         min_time_s: float = 0.0,
+        fleet_registry: str | None = None,
     ):
         if pool not in ("thread", "process"):
             raise ValueError(f"pool must be 'thread' or 'process', got {pool!r}")
@@ -177,6 +196,14 @@ class SweepExecutor:
         # A comma-separated fleet gives the dynamic scheduler one sink per
         # worker; static dispatch targets the first endpoint.
         self.remote = remote
+        # Membership registry endpoint (repro.runtime.membership): the fleet
+        # is DISCOVERED from live registrations instead of enumerated by
+        # hand, and under dynamic scheduling a FleetWatcher grows/shrinks
+        # the sink set mid-sweep on membership events.  Mutually exclusive
+        # with an explicit `remote` fleet.
+        if fleet_registry is not None and remote is not None:
+            raise ValueError("pass either remote= or fleet_registry=, not both")
+        self.fleet_registry = fleet_registry
         # Balance shard assignment by estimated cost even without explicit
         # shard weights (ShardSpec.weights implies it regardless).
         self.weighted_shard = weighted_shard
@@ -242,11 +269,37 @@ class SweepExecutor:
             ) from state["error"]
 
     # -- unit execution ----------------------------------------------------
+    def _fleet_identity(self) -> str | None:
+        """The STABLE name of the executor-wide fleet for cache identity.
+
+        An explicit ``remote`` fleet is identified by its endpoint list; a
+        registry-discovered fleet by the registry's own endpoint — worker
+        endpoints there are ephemeral (workers join/leave, ports churn), so
+        folding them into cache keys would orphan every entry on the next
+        membership change.  ``None`` means purely local execution.
+        """
+        if self.remote is not None:
+            return self.remote
+        if self.fleet_registry is not None:
+            return f"registry://{self.fleet_registry}"
+        return None
+
     def _remote_endpoints(self) -> list[str]:
-        """The executor-wide worker fleet (empty when ``remote`` is unset)."""
+        """The executor-wide worker fleet: the parsed ``remote`` list, or
+        the registry's CURRENT alive members (empty when neither is set —
+        and also when the registry is unreachable, which static paths treat
+        as "no fleet" while dynamic paths keep watching for joins)."""
         from repro.core import remote as remote_mod
 
-        return remote_mod.parse_fleet(self.remote)
+        if self.remote is not None:
+            return remote_mod.parse_fleet(self.remote)
+        if self.fleet_registry is not None:
+            try:
+                members = remote_mod.fleet_members(self.fleet_registry)
+            except remote_mod.RemoteExecutionError:
+                return []
+            return [m["endpoint"] for m in members if m.get("status") == "alive"]
+        return []
 
     def _remote_endpoint(self, unit: _Unit) -> str | None:
         """Worker endpoint for this unit, or None for local execution.
@@ -259,8 +312,25 @@ class SweepExecutor:
             return endpoints[0]
         return unit.platform.endpoint()
 
+    def _unit_deadline(self, unit: _Unit) -> float:
+        """Layered per-unit deadline (seconds) from measured cost evidence.
+
+        The ``costs.json`` sidecar's (task, platform) EWMA is in real
+        seconds whenever it exists; a hung worker is then detected within
+        ``UNIT_DEADLINE_FACTOR x`` the unit's expected cost (floored for
+        noise) instead of the 600 s request ceiling.  No evidence — first
+        ever run of the task — keeps the ceiling: better one slow detection
+        than killing a legitimately long first measurement.
+        """
+        from repro.core.remote import unit_deadline_s
+
+        est = None
+        if self.cache is not None and self.cache.costs is not None:
+            est = self.cache.costs.get(unit.task_name, unit.platform.name)
+        return unit_deadline_s(est)
+
     def _run_unit_remote(
-        self, unit: _Unit, endpoint: str
+        self, unit: _Unit, endpoint: str, deadline_s: float | None = None
     ) -> tuple[TestResult, float | None]:
         """Ship one unit to a worker; prepare/run/transform happen there.
 
@@ -271,7 +341,8 @@ class SweepExecutor:
         from repro.core import remote as remote_mod
 
         resp = remote_mod.get_transport(endpoint).run_unit(
-            _unit_payload(unit, self, want_samples=True)
+            _unit_payload(unit, self, want_samples=True),
+            timeout=self._unit_deadline(unit) if deadline_s is None else deadline_s,
         )
         vals = {k: float(v) for k, v in resp["metrics"].items()}
         ctx = self._context(unit.platform, unit.task_name)
@@ -305,6 +376,10 @@ class SweepExecutor:
             endpoint = self._remote_endpoint(unit)
         if endpoint is not None:
             result, elapsed = self._run_unit_remote(unit, endpoint)
+            if self.cache is not None and self.cache.health is not None:
+                # Static-path success evidence; failures propagate to the
+                # caller before this line and are observed by dynamic sinks.
+                self.cache.health.observe_success(endpoint, elapsed)
             if self.cache is not None and unit.ckey is not None:
                 self.cache.put(
                     unit.ckey,
@@ -372,11 +447,17 @@ class SweepExecutor:
                         min_time_s=self.min_time_s,
                     )
                     ckey = skey
-                    if self.remote is not None:
+                    fleet = self._fleet_identity()
+                    if fleet is not None:
+                        # The stable fleet name, never an individual worker
+                        # endpoint: under elastic membership the same unit
+                        # may execute on whichever worker pulls it, and its
+                        # measurement identity is "this fleet", not "this
+                        # ephemeral port".
                         ckey = cache_mod.cache_key(
                             task.name,
                             params,
-                            {**platform.cache_identity(), "remote": self.remote},
+                            {**platform.cache_identity(), "remote": fleet},
                             self.iters,
                             self.warmup,
                             metrics,
@@ -559,16 +640,22 @@ class SweepExecutor:
         # Remote units are network-bound and must not re-execute locally in
         # a spawned child, so remote dispatch always goes through the
         # in-process (sequential/thread/dynamic-sink) paths.
-        any_remote = self.remote is not None or any(
+        any_remote = self._fleet_identity() is not None or any(
             u.platform.kind == "remote" for u in units
         )
         # Dynamic (pull-based) scheduling is the default for pooled runs:
-        # more than one local worker slot, or a multi-worker remote fleet.
-        # Single-worker local runs keep the exact sequential seed path.
+        # more than one local worker slot, a multi-worker remote fleet, or
+        # ANY registry-discovered fleet (elastic membership needs the pull
+        # scheduler to react to joins/leaves at all).  Single-worker local
+        # runs keep the exact sequential seed path.
         dynamic = (
             self.schedule == "dynamic"
             and len(units) > 1
-            and (self.workers > 1 or len(self._remote_endpoints()) > 1)
+            and (
+                self.workers > 1
+                or len(self._remote_endpoints()) > 1
+                or self.fleet_registry is not None
+            )
         )
         try:
             if dynamic:
@@ -660,34 +747,71 @@ class SweepExecutor:
             )
         return TestResult(unit.task_name, dict(unit.params), vals, platform=unit.platform.name), False
 
+    def _fleet_sink(self, ep: str) -> Sink:
+        """A health-observing pull sink for one fleet worker endpoint.
+
+        Transport-level failures (``WorkerUnreachable``: dead, hung past
+        deadline, corrupt wire) feed the health sidecar's failure streak;
+        clean task errors do NOT — the endpoint answered, it is healthy.
+        """
+        from repro.core.remote import WorkerUnreachable
+
+        health = self.cache.health if self.cache is not None else None
+
+        def run(u, _ep=ep):
+            try:
+                return self._run_unit(u, endpoint=_ep)
+            except WorkerUnreachable:
+                if health is not None:
+                    health.observe_failure(_ep)
+                raise
+
+        return Sink(name=ep, capacity=self._endpoint_capacity(ep), run=run)
+
     def _dynamic_sinks(
-        self, units: list[_Unit]
+        self, units: list[_Unit], stats: SweepStats | None = None
     ) -> tuple[list[Sink], list[WorkItem], ProcessPoolExecutor | None]:
         """Build the pull sinks and eligibility-tagged work items.
 
         With an executor-wide fleet, every unit may run on any fleet sink
         (the fleet identity — not the individual endpoint — is the cache
-        identity, so first-completion-wins speculation dedupes cleanly).
-        Otherwise each unit binds to the one sink that matches its
-        measurement target: its remote platform's endpoint, or the local
-        thread/process slots.
+        identity, so first-completion-wins speculation dedupes cleanly);
+        those units carry DYNAMIC eligibility (``sinks=None``), so sinks a
+        FleetWatcher adds mid-sweep pick them up too.  Otherwise each unit
+        binds to the one sink that matches its measurement target: its
+        remote platform's endpoint, or the local thread/process slots.
+
+        Chronically bad endpoints — health-sidecar failure streak at or
+        past ``BLACKLIST_AFTER`` — are excluded up front, but only while a
+        healthy alternative exists: an all-blacklisted fleet runs in full
+        (degraded beats impossible) and a success there resets the streaks.
         """
+        from repro.core import remote as remote_mod
+
         model = CostModel(self.cache)
         costs = model.estimate_many(units)
         sinks: list[Sink] = []
         items: list[WorkItem] = []
         endpoints = self._remote_endpoints()
-        if endpoints:
-            for ep in endpoints:
-                sinks.append(
-                    Sink(
-                        name=ep,
-                        capacity=self._endpoint_capacity(ep),
-                        run=lambda u, _ep=ep: self._run_unit(u, endpoint=_ep),
-                    )
+        if not endpoints and self.fleet_registry is not None:
+            # Elastic fleet with nobody home yet: give workers one grace
+            # window to register before declaring the fleet empty.
+            remote_mod.wait_members(self.fleet_registry, count=1, timeout=30.0)
+            endpoints = self._remote_endpoints()
+            if not endpoints:
+                raise RemoteFleetEmpty(
+                    f"registry {self.fleet_registry} has no alive workers"
                 )
-            ids = tuple(range(len(sinks)))
-            items = [WorkItem(u, costs.get(u.skey or "", 1.0), ids) for u in units]
+        if endpoints:
+            health = self.cache.health if self.cache is not None else None
+            if health is not None:
+                healthy = [ep for ep in endpoints if not health.blacklisted(ep)]
+                if healthy and len(healthy) < len(endpoints):
+                    if stats is not None:
+                        stats.blacklisted = len(endpoints) - len(healthy)
+                    endpoints = healthy
+            sinks = [self._fleet_sink(ep) for ep in endpoints]
+            items = [WorkItem(u, costs.get(u.skey or "", 1.0), None) for u in units]
             return sinks, items, None
         proc_pool: ProcessPoolExecutor | None = None
         sink_of_endpoint: dict[str, int] = {}
@@ -726,15 +850,29 @@ class SweepExecutor:
         return sinks, items, proc_pool
 
     def _run_dynamic(self, units, ordered, out, record_error) -> None:
-        sinks, items, proc_pool = self._dynamic_sinks(units)
+        sinks, items, proc_pool = self._dynamic_sinks(units, out.stats)
+        watcher = None
         try:
             scheduler = FleetScheduler(
                 sinks,
                 straggler_factor=self.straggler_factor,
                 fail_fast=self.fail_fast,
             )
+            if self.fleet_registry is not None:
+                # Elastic membership: follow the registry while the sweep
+                # runs — newly registered workers become sinks mid-sweep,
+                # suspect/vanished ones are marked dead and their units
+                # re-enqueued within the heartbeat detection bound.
+                from repro.runtime.elastic import FleetWatcher
+
+                watcher = FleetWatcher(
+                    self.fleet_registry, scheduler, make_sink=self._fleet_sink
+                )
+                watcher.start()
             outcomes = scheduler.run(items)
         finally:
+            if watcher is not None:
+                watcher.stop()
             if proc_pool is not None:
                 # Don't wait: a wedged child (the reason its unit was
                 # speculated) must not block the sweep's return.
@@ -742,6 +880,7 @@ class SweepExecutor:
         for oc in outcomes:
             unit = oc.item.unit
             out.stats.speculated += bool(oc.speculated)
+            out.stats.redispatched += bool(oc.redispatched)
             if oc.error is not None:
                 if self.fail_fast:
                     raise oc.error

@@ -1,0 +1,235 @@
+"""Fault injection for worker fleets (tests and the CI soak — never prod).
+
+The elastic-fleet layer's whole claim is "a worker can die, hang, stall, or
+corrupt the wire mid-sweep and the merged report is still byte-identical to
+a fault-free run".  This module makes those failures reproducible: a worker
+started with ``--allow-faults`` honors an armed ``{"op": "fault"}`` request
+and misbehaves on its NEXT run request(s) —
+
+  ``kill``     ``os._exit`` mid-unit: no response, no deregister — the
+               client sees the connection drop, the registry sees beats
+               stop.  The crashed-process case.
+  ``hang``     accept the unit, never reply (heartbeats keep flowing from
+               their own thread): the wedged-core case the BlueField
+               studies report.  Only per-unit deadlines / straggler
+               re-dispatch catch this one.
+  ``slow``     sleep ``seconds`` then execute normally: the transient
+               straggler that must NOT be counted as dead.
+  ``partial``  write truncated garbage JSON and drop the connection: the
+               corrupted-wire case.
+
+:class:`FaultPlan` draws a seeded random schedule of those modes, so a soak
+run is chaotic but exactly reproducible from its seed, and
+:class:`FaultyFleet` keeps a registered ``LocalWorker`` fleet at target
+strength by respawning killed members — the "replacement capacity joins
+mid-sweep" half of elasticity.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Sequence
+
+from repro.core.remote import (
+    LocalWorker,
+    RemoteExecutionError,
+    get_transport,
+    wait_members,
+    wait_ready,
+)
+
+#: Modes a --allow-faults worker understands (order = doc order above).
+FAULT_MODES = ("kill", "hang", "slow", "partial")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One armed misbehaviour: ``mode`` applied to the next ``units`` run
+    requests, sleeping ``seconds`` where the mode takes a duration."""
+
+    mode: str
+    seconds: float = 0.5
+    units: int = 1
+
+    def __post_init__(self) -> None:
+        if self.mode not in FAULT_MODES:
+            raise ValueError(f"unknown fault mode {self.mode!r}; known: {FAULT_MODES}")
+        if self.seconds < 0:
+            raise ValueError(f"fault seconds must be >= 0, got {self.seconds}")
+        if self.units < 1:
+            raise ValueError(f"fault units must be >= 1, got {self.units}")
+
+
+def inject(endpoint: str, spec: FaultSpec, timeout: float = 10.0) -> dict[str, Any]:
+    """Arm ``spec`` on a ``--allow-faults`` worker; raises if it refuses."""
+    resp = get_transport(endpoint).request(
+        {"op": "fault", "mode": spec.mode, "seconds": spec.seconds, "units": spec.units},
+        timeout=timeout,
+        connect_retries=1,
+    )
+    if not resp.get("ok"):
+        raise RemoteExecutionError(f"worker {endpoint} refused fault: {resp.get('error')}")
+    return resp
+
+
+@dataclass
+class FaultEvent:
+    """One injected fault as the soak log records it."""
+
+    t_s: float
+    endpoint: str
+    spec: FaultSpec
+
+
+class FaultPlan:
+    """Seeded random fault schedule: same seed -> same chaos.
+
+    ``draw()`` yields the next (mode, seconds) pair from the seeded stream;
+    mode weights favour the recoverable modes so a soak keeps making
+    progress while still exercising every path.
+    """
+
+    #: (mode, weight): kill is rarer because each one costs a respawn.
+    WEIGHTS = (("slow", 4), ("hang", 3), ("partial", 2), ("kill", 1))
+
+    def __init__(self, seed: int, max_sleep_s: float = 1.0):
+        self._rng = random.Random(seed)
+        self.max_sleep_s = float(max_sleep_s)
+
+    def draw(self) -> FaultSpec:
+        modes = [m for m, w in self.WEIGHTS for _ in range(w)]
+        mode = self._rng.choice(modes)
+        return FaultSpec(mode=mode, seconds=round(self._rng.uniform(0.1, self.max_sleep_s), 3))
+
+
+class FaultyFleet:
+    """A registered ``LocalWorker`` fleet that survives its own faults.
+
+    Spawns ``size`` loopback workers (all ``--allow-faults``, all registered
+    against ``register``), then — while :meth:`run` is active — injects
+    faults from a seeded :class:`FaultPlan` at ``period_s`` intervals and
+    respawns any worker its own ``kill`` took down, so fleet strength
+    recovers and the sweep sees both *leave* and *join* membership events.
+
+    Use as a context manager::
+
+        with FaultyFleet(4, register=reg.endpoint, plugin_dirs=[...],
+                         seed=7) as fleet:
+            fleet.start(period_s=1.0)
+            ... run the sweep ...
+            events = fleet.stop()
+    """
+
+    def __init__(
+        self,
+        size: int,
+        register: str,
+        plugin_dirs: Sequence[Any] = (),
+        seed: int = 0,
+        heartbeat_interval_s: float = 0.5,
+        max_sleep_s: float = 1.0,
+        capacity: int = 1,
+    ):
+        if size < 1:
+            raise ValueError(f"fleet size must be >= 1, got {size}")
+        self.size = size
+        self.register = register
+        self.plugin_dirs = [str(d) for d in plugin_dirs]
+        self.heartbeat_interval_s = heartbeat_interval_s
+        self.capacity = capacity
+        self.plan = FaultPlan(seed, max_sleep_s=max_sleep_s)
+        self.workers: list[LocalWorker] = []
+        self.events: list[FaultEvent] = []
+        self.respawns = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._t0 = 0.0
+
+    def _spawn(self) -> LocalWorker:
+        w = LocalWorker(
+            plugin_dirs=self.plugin_dirs,
+            capacity=self.capacity,
+            register=self.register,
+            heartbeat_interval_s=self.heartbeat_interval_s,
+            allow_faults=True,
+        )
+        w.__enter__()
+        wait_ready(w.endpoint, timeout=60.0)
+        return w
+
+    def __enter__(self) -> "FaultyFleet":
+        try:
+            for _ in range(self.size):
+                self.workers.append(self._spawn())
+            wait_members(self.register, count=self.size, timeout=60.0)
+        except BaseException:
+            self.__exit__(None, None, None)
+            raise
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+        for w in self.workers:
+            w.__exit__(None, None, None)
+        self.workers.clear()
+
+    @property
+    def endpoints(self) -> list[str]:
+        return [w.endpoint for w in self.workers if w.endpoint]
+
+    # -- chaos loop ----------------------------------------------------------
+    def start(self, period_s: float = 1.0) -> None:
+        """Begin injecting one fault per ``period_s`` at random targets."""
+        if self._thread is not None:
+            return
+        self._t0 = time.monotonic()
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, args=(period_s,), daemon=True, name="fault-injector"
+        )
+        self._thread.start()
+
+    def stop(self) -> list[FaultEvent]:
+        """Stop injecting, respawn any dead member, return the event log."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self._respawn_dead()
+        return list(self.events)
+
+    def _respawn_dead(self) -> None:
+        for i, w in enumerate(self.workers):
+            if not w.alive:
+                w.__exit__(None, None, None)
+                self.workers[i] = self._spawn()
+                self.respawns += 1
+
+    def _loop(self, period_s: float) -> None:
+        rng = self.plan._rng  # share the seeded stream for target choice too
+        while not self._stop.wait(period_s):
+            self._respawn_dead()
+            live = [w for w in self.workers if w.alive and w.endpoint]
+            if not live:
+                continue
+            target = rng.choice(live)
+            spec = self.plan.draw()
+            try:
+                inject(target.endpoint, spec)
+            except RemoteExecutionError:
+                continue  # target died between choice and arm; next tick respawns
+            self.events.append(
+                FaultEvent(t_s=time.monotonic() - self._t0, endpoint=target.endpoint, spec=spec)
+            )
+
+
+__all__ = [
+    "FAULT_MODES",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultSpec",
+    "FaultyFleet",
+    "inject",
+]

@@ -7,7 +7,7 @@ payload, ships it to a worker, and streams the measured ``Samples`` +
 computed metrics back.  The worker is this same module run as::
 
     python -m repro.core.remote worker --host 127.0.0.1 --port 0 \
-        [--capacity N] [--plugin-dir DIR ...]
+        [--capacity N] [--plugin-dir DIR ...] [--register HOST:PORT]
 
 It binds a TCP socket (port 0 = ephemeral; the chosen endpoint is announced
 as ``listening on HOST:PORT`` on stdout) and executes requests through the
@@ -16,26 +16,55 @@ so local, process-pool, and remote execution are behaviourally identical.
 
 Deployment is a config change, not a code change: a loopback subprocess
 (:class:`LocalWorker`, used by tests/CI), a second host, or a BlueField DPU
-reached over SSH all look like ``host:port`` once the worker runs there,
-e.g. ``ssh bf2 python -m repro.core.remote worker --port 7177`` plus an SSH
-tunnel, or the worker listening on the DPU's management interface.
+reached over SSH all look like ``host:port`` once the worker runs there.
+With ``--register`` the worker stops being a hand-typed endpoint entirely:
+it announces itself to a :mod:`repro.runtime.membership` registry and
+proves liveness with a heartbeat every :data:`HEARTBEAT_INTERVAL_S`
+seconds, so runners discover the fleet (``--registry``) and a silent
+worker is *suspected after ~3 missed beats* — seconds, not the request
+timeout.
+
+Failure handling is layered (fast to slow):
+
+  1. **Heartbeats** — a crashed/partitioned worker misses beats and is
+     re-dispatched around within ``SUSPECT_BEATS x HEARTBEAT_INTERVAL_S``.
+  2. **Per-unit deadlines** — callers pass ``timeout=`` derived from the
+     scheduler's cost evidence (:func:`unit_deadline_s`), so a *hung*
+     worker (accepts, never replies — it still heartbeats) is detected in
+     a small multiple of the unit's expected cost.
+  3. **Connect retry with jittered backoff** — transient dial failures
+     (worker restarting, SYN drop) retry :data:`CONNECT_RETRIES` times
+     before the endpoint is reported unreachable.
+  4. **Request ceiling** — :data:`REQUEST_TIMEOUT_S` remains the absolute
+     backstop when no cost evidence exists.
+
+Transport-level failures raise :class:`WorkerUnreachable` (a
+:class:`RemoteExecutionError`) so schedulers can tell "the endpoint is
+bad" (feed the health sidecar, re-dispatch) from "the task failed there"
+(a worker-reported error — the endpoint itself is healthy).
 
 Wire format: newline-delimited JSON, request/response, many requests per
-connection.  Ops: ``{"op": "ping"}`` -> liveness + known tasks;
-``{"op": "run", "payload": {...}}`` -> ``{"ok": true, "metrics": {...},
-"samples": {...}}`` or ``{"ok": false, "error": ..., "traceback": ...}``.
+connection.  Ops: ``{"op": "ping"}`` -> liveness + capacity/throughput;
+``{"op": "run", "payload": {...}}`` -> ``{"ok": true, "metrics": {...}}``
+or ``{"ok": false, "error": ..., "traceback": ...}``; the membership pair
+``register`` / ``heartbeat`` (plus ``deregister`` / ``fleet``) served by a
+registry; ``{"op": "fault", ...}`` arms test-only fault injection on
+workers started with ``--allow-faults`` (see :mod:`repro.core.faults`).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import random
+import re
 import socket
 import socketserver
 import subprocess
 import sys
 import threading
 import time
+import traceback
 from pathlib import Path
 from typing import Any, Sequence
 
@@ -44,20 +73,82 @@ from repro.core.cache import EWMA_ALPHA
 from repro.core.metrics import Samples
 
 CONNECT_TIMEOUT_S = 10.0
-REQUEST_TIMEOUT_S = 600.0  # one unit may legitimately measure for minutes
+REQUEST_TIMEOUT_S = 600.0  # absolute ceiling: one unit may measure for minutes
+
+#: Worker liveness beat period; suspicion bound = SUSPECT_BEATS x this
+#: (see repro.runtime.membership).
+HEARTBEAT_INTERVAL_S = 2.0
+#: Dial attempts on transient connect errors before giving up.
+CONNECT_RETRIES = 3
+#: Base of the jittered exponential backoff between dial attempts.
+CONNECT_BACKOFF_S = 0.2
+#: Per-unit deadline = this multiple of the unit's expected wall cost...
+UNIT_DEADLINE_FACTOR = 10.0
+#: ...but never tighter than this floor (measurement noise headroom).
+MIN_UNIT_DEADLINE_S = 5.0
 
 
 class RemoteExecutionError(RuntimeError):
     """A worker reported failure (or the transport could not reach one)."""
 
 
+class WorkerUnreachable(RemoteExecutionError):
+    """Transport-level failure: dead/hung/unreachable endpoint (not a task
+    error) — evidence against the *endpoint* for health tracking."""
+
+
 def parse_endpoint(endpoint: str) -> tuple[str, int]:
-    """``"host:port"`` / ``"tcp://host:port"`` -> (host, port)."""
-    ep = endpoint.removeprefix("tcp://")
-    host, _, port = ep.rpartition(":")
-    if not port.isdigit():
-        raise ValueError(f"bad endpoint {endpoint!r}; expected host:port")
-    return host or "127.0.0.1", int(port)
+    """``"host:port"`` / ``"tcp://host:port"`` / ``"[v6]:port"`` -> (host, port)."""
+    ep = str(endpoint).removeprefix("tcp://")
+    m = re.fullmatch(r"\[([^\]]+)\]:(\d+)", ep)
+    if m:
+        host, port_s = m.group(1), m.group(2)
+    else:
+        host, _, port_s = ep.rpartition(":")
+        if ":" in host:
+            raise ValueError(
+                f"bad endpoint {endpoint!r}: bracket IPv6 literals as [addr]:port"
+            )
+        if not port_s.isdigit():
+            raise ValueError(f"bad endpoint {endpoint!r}; expected host:port")
+    port = int(port_s)
+    if not 1 <= port <= 65535:
+        raise ValueError(f"bad endpoint {endpoint!r}: port must be in [1, 65535], got {port}")
+    return host or "127.0.0.1", port
+
+
+def routable_host(bind_host: str) -> str:
+    """A connectable address for announcements/registration payloads.
+
+    Binding to the wildcard (``0.0.0.0`` / ``::`` / ``""``) is how a worker
+    serves every interface, but advertising it verbatim hands clients an
+    unconnectable address.  Resolve the host's outbound interface instead
+    (a connect-less UDP socket — no packet is sent), falling back to the
+    hostname's address, then loopback.
+    """
+    if bind_host not in ("0.0.0.0", "::", ""):
+        return bind_host
+    try:
+        probe = socket.socket(socket.AF_INET, socket.SOCK_DGRAM)
+        try:
+            probe.connect(("10.255.255.255", 1))
+            return probe.getsockname()[0]
+        finally:
+            probe.close()
+    except OSError:
+        pass
+    try:
+        return socket.gethostbyname(socket.gethostname())
+    except OSError:
+        return "127.0.0.1"
+
+
+def unit_deadline_s(expected_s: float | None) -> float:
+    """Layered per-unit deadline from cost evidence (seconds), bounded by
+    the floor (noise headroom) and the absolute request ceiling."""
+    if expected_s is None or expected_s <= 0:
+        return REQUEST_TIMEOUT_S
+    return min(REQUEST_TIMEOUT_S, max(MIN_UNIT_DEADLINE_S, UNIT_DEADLINE_FACTOR * expected_s))
 
 
 def parse_fleet(remote: "str | Sequence[str] | None") -> list[str]:
@@ -93,7 +184,15 @@ def samples_from_wire(d: dict[str, Any]) -> Samples:
 
 
 # -- worker (server) ---------------------------------------------------------
-class _Handler(socketserver.StreamRequestHandler):
+class JsonLineHandler(socketserver.StreamRequestHandler):
+    """Newline-JSON request/response loop shared by worker and registry.
+
+    ``dispatch`` is wrapped: an unexpected exception serializes back as an
+    error response instead of killing the connection thread silently —
+    which would leave the client blocked on a reply that never comes until
+    the full request timeout expired.
+    """
+
     def handle(self) -> None:
         for line in self.rfile:
             line = line.strip()
@@ -104,7 +203,21 @@ class _Handler(socketserver.StreamRequestHandler):
             except json.JSONDecodeError as e:
                 resp = {"ok": False, "error": f"bad request JSON: {e}"}
             else:
-                resp = self.server.dispatch(req)  # type: ignore[attr-defined]
+                try:
+                    resp = self.server.dispatch(req)  # type: ignore[attr-defined]
+                except Exception as e:  # noqa: BLE001 - serialize, keep serving
+                    resp = {
+                        "ok": False,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc(),
+                    }
+            raw = resp.pop("_raw_bytes", None) if isinstance(resp, dict) else None
+            if raw is not None:
+                # Injected wire fault: emit the broken bytes verbatim and
+                # drop the connection (see repro.core.faults "partial").
+                self.wfile.write(raw if isinstance(raw, bytes) else str(raw).encode())
+                self.wfile.flush()
+                return
             self.wfile.write((json.dumps(resp, default=str) + "\n").encode())
             self.wfile.flush()
 
@@ -119,6 +232,17 @@ class WorkerServer(socketserver.ThreadingTCPServer):
     lock is the prepare barrier for the shared contexts
     ``_subprocess_run_unit`` keys per (platform, task).  Disjoint tasks run
     concurrently; identical tasks queue.
+
+    Membership: construct with ``register="host:port"`` (CLI
+    ``--register``) and the worker announces itself to that
+    :mod:`repro.runtime.membership` registry, heartbeats every
+    ``heartbeat_interval_s``, and deregisters on clean shutdown — fleet
+    membership becomes dynamic instead of a hand-typed endpoint list.
+
+    Fault injection (tests/CI soak only): with ``allow_faults=True`` the
+    ``fault`` op arms kill/hang/slow/partial-write behaviour against the
+    next run requests (:mod:`repro.core.faults`).  Disabled by default; a
+    production worker ignores the op with an error response.
     """
 
     allow_reuse_address = True
@@ -130,9 +254,14 @@ class WorkerServer(socketserver.ThreadingTCPServer):
         port: int = 0,
         plugin_dirs: Any = (),
         capacity: int = 1,
+        advertise_host: str | None = None,
+        register: str | None = None,
+        heartbeat_interval_s: float = HEARTBEAT_INTERVAL_S,
+        allow_faults: bool = False,
     ):
-        super().__init__((host, port), _Handler)
+        super().__init__((host, port), JsonLineHandler)
         self.capacity = max(1, int(capacity))
+        self.advertise_host = advertise_host
         self._slots = threading.BoundedSemaphore(self.capacity)
         self._task_locks: dict[tuple[str, str], threading.Lock] = {}
         self._locks_guard = threading.Lock()
@@ -143,12 +272,30 @@ class WorkerServer(socketserver.ThreadingTCPServer):
         self._units_done = 0
         self._ewma_s: float | None = None
         self._task_ewma_s: dict[str, float] = {}
+        # Armed faults: list of {"mode", "seconds", "units"} consumed by run
+        # requests in FIFO order (guarded by _stats_lock's sibling below).
+        self.allow_faults = bool(allow_faults)
+        self._fault_lock = threading.Lock()
+        self._faults: list[dict[str, Any]] = []
+        # Membership: registration target + the heartbeat thread handle.
+        self.register_endpoint = register
+        self.heartbeat_interval_s = float(heartbeat_interval_s)
+        self._hb_stop = threading.Event()
+        self._hb_thread: threading.Thread | None = None
         registry.load_plugin_dirs(str(d) for d in plugin_dirs)
 
     @property
     def endpoint(self) -> str:
+        """The *advertised* endpoint: always connectable, never a wildcard.
+
+        ``--host 0.0.0.0`` binds every interface but would announce (and
+        register) an unconnectable ``0.0.0.0:PORT``; resolve a routable
+        address instead.  ``advertise_host`` overrides for NAT/multi-homed
+        hosts.
+        """
         host, port = self.server_address[:2]
-        return f"{host}:{port}"
+        adv = self.advertise_host or routable_host(str(host))
+        return f"{adv}:{port}"
 
     def _task_lock(self, payload: dict[str, Any]) -> threading.Lock:
         platform = payload.get("platform") or {}
@@ -184,6 +331,84 @@ class WorkerServer(socketserver.ThreadingTCPServer):
                 "per_task": dict(self._task_ewma_s),
             }
 
+    # -- membership ----------------------------------------------------------
+    def start_heartbeat(self) -> threading.Thread | None:
+        """Register with the configured registry and beat until shutdown.
+
+        Registration retries forever in the background (the registry may
+        come up after the worker); a beat answered with an error or lost to
+        a transient outage is simply retried next interval — the registry
+        re-admits unknown endpoints on heartbeat, so a registry restart
+        heals without worker involvement.
+        """
+        if not self.register_endpoint or self._hb_thread is not None:
+            return self._hb_thread
+
+        def loop() -> None:
+            registered = False
+            while not self._hb_stop.is_set():
+                try:
+                    if not registered:
+                        register(
+                            self.register_endpoint, self.endpoint,
+                            capacity=self.capacity, meta={"pid": os.getpid()},
+                        )
+                        registered = True
+                    else:
+                        heartbeat(
+                            self.register_endpoint, self.endpoint, capacity=self.capacity
+                        )
+                except RemoteExecutionError:
+                    registered = False  # re-register once the registry answers
+                self._hb_stop.wait(self.heartbeat_interval_s)
+
+        self._hb_thread = threading.Thread(target=loop, daemon=True, name="worker-heartbeat")
+        self._hb_thread.start()
+        return self._hb_thread
+
+    def stop_heartbeat(self, deregister_worker: bool = True) -> None:
+        self._hb_stop.set()
+        if self._hb_thread is not None:
+            self._hb_thread.join(timeout=2.0)
+            self._hb_thread = None
+        if deregister_worker and self.register_endpoint:
+            try:
+                deregister(self.register_endpoint, self.endpoint)
+            except RemoteExecutionError:
+                pass  # registry gone; the failure detector reaps us anyway
+
+    def server_close(self) -> None:  # type: ignore[override]
+        self.stop_heartbeat()
+        super().server_close()
+
+    # -- fault injection (tests/CI soak) --------------------------------------
+    def _arm_fault(self, req: dict[str, Any]) -> dict[str, Any]:
+        from repro.core.faults import FAULT_MODES
+
+        if not self.allow_faults:
+            return {"ok": False, "error": "fault injection disabled (start with --allow-faults)"}
+        mode = str(req.get("mode", ""))
+        if mode not in FAULT_MODES:
+            return {"ok": False, "error": f"unknown fault mode {mode!r}; known: {FAULT_MODES}"}
+        spec = {
+            "mode": mode,
+            "seconds": float(req.get("seconds", 0.5) or 0.0),
+            "units": max(1, int(req.get("units", 1) or 1)),
+        }
+        with self._fault_lock:
+            self._faults.append(spec)
+        return {"ok": True, "op": "fault", "armed": spec}
+
+    def _take_fault(self) -> dict[str, Any] | None:
+        with self._fault_lock:
+            if not self._faults:
+                return None
+            spec = self._faults[0]
+            spec["units"] -= 1
+            if spec["units"] <= 0:
+                self._faults.pop(0)
+            return spec
+
     def dispatch(self, req: dict[str, Any]) -> dict[str, Any]:
         from repro.core import executor as executor_mod
 
@@ -192,8 +417,30 @@ class WorkerServer(socketserver.ThreadingTCPServer):
             return {
                 "ok": True, "op": "ping", "pid": os.getpid(),
                 "capacity": self.capacity, "throughput": self.throughput(),
+                "endpoint": self.endpoint,
             }
+        if op == "fault":
+            return self._arm_fault(req)
         if op == "run":
+            fault = self._take_fault()
+            if fault is not None:
+                mode = fault["mode"]
+                if mode == "kill":
+                    # Simulated crash mid-unit: no response, no cleanup — the
+                    # client sees the connection die, the registry sees beats
+                    # stop.  (Only reachable with --allow-faults.)
+                    os._exit(23)
+                if mode == "hang":
+                    # Accepts but never replies: the pathological wedged
+                    # worker.  Heartbeats (separate thread) keep flowing, so
+                    # only per-unit deadlines / straggler re-dispatch catch it.
+                    time.sleep(fault["seconds"] or REQUEST_TIMEOUT_S)
+                    return {"ok": False, "error": "fault: hang elapsed"}
+                if mode == "partial":
+                    # Truncated garbage on the wire, then connection drop.
+                    return {"_raw_bytes": b'{"ok": true, "metrics": {"trunc'}
+                if mode == "slow":
+                    time.sleep(fault["seconds"])
             # Payload plugin dirs load inside _subprocess_run_unit's try, so
             # a broken plugin serializes back as an error response instead of
             # killing the connection.
@@ -212,6 +459,7 @@ class WorkerServer(socketserver.ThreadingTCPServer):
     def serve_in_thread(self) -> threading.Thread:
         t = threading.Thread(target=self.serve_forever, daemon=True)
         t.start()
+        self.start_heartbeat()
         return t
 
 
@@ -239,6 +487,12 @@ class RemoteTransport:
     so a ``--capacity N`` worker really executes N units at once.  Idle
     connections are pooled and reused; a dead pooled connection (worker
     restarted between sweeps) retries once on a fresh one.
+
+    Deadlines: every request takes an optional ``timeout`` (seconds) that
+    bounds the wait for the response — the per-unit deadline layer.  A
+    timed-out request raises :class:`WorkerUnreachable` immediately (no
+    blind re-send: the worker may still be executing the unit), while
+    transient *connect* errors retry with jittered exponential backoff.
     """
 
     def __init__(self, endpoint: str):
@@ -254,7 +508,23 @@ class RemoteTransport:
         self._gate_lock = threading.Lock()
         self._gate: threading.BoundedSemaphore | None = None
 
-    def _checkout(self, fresh: bool = False) -> _Conn:
+    def _dial(self, retries: int = CONNECT_RETRIES) -> _Conn:
+        """Dial with jittered exponential backoff on transient errors."""
+        last: OSError | None = None
+        for attempt in range(max(1, retries)):
+            try:
+                return _Conn(self.host, self.port)
+            except OSError as e:
+                last = e
+                if attempt + 1 >= max(1, retries):
+                    break
+                time.sleep(
+                    CONNECT_BACKOFF_S * (2**attempt)
+                    + random.uniform(0.0, CONNECT_BACKOFF_S)
+                )
+        raise WorkerUnreachable(f"worker {self.endpoint} unreachable: {last}") from last
+
+    def _checkout(self, fresh: bool = False, retries: int = CONNECT_RETRIES) -> _Conn:
         """Pop an idle connection, or dial.  ``fresh`` always dials — the
         retry path must not pick up ANOTHER stale pooled connection after a
         worker restart invalidated the whole pool."""
@@ -262,7 +532,7 @@ class RemoteTransport:
             with self._lock:
                 if self._idle:
                     return self._idle.pop()
-        return _Conn(self.host, self.port)
+        return self._dial(retries=retries)
 
     def _checkin(self, conn: _Conn) -> None:
         with self._lock:
@@ -311,27 +581,39 @@ class RemoteTransport:
                 self._gate = threading.BoundedSemaphore(cap)
             return self._gate or threading.BoundedSemaphore(1)
 
-    def request(self, obj: dict[str, Any]) -> dict[str, Any]:
+    def request(
+        self,
+        obj: dict[str, Any],
+        timeout: float | None = None,
+        connect_retries: int = CONNECT_RETRIES,
+    ) -> dict[str, Any]:
         data = (json.dumps(obj, default=str) + "\n").encode()
+        deadline = REQUEST_TIMEOUT_S if timeout is None else float(timeout)
         with self._capacity_gate():
             # One retry: a stale pooled connection (worker restart between
             # sweeps) fails on first use; the retry always dials fresh.
             for attempt in (0, 1):
                 conn = None
                 try:
-                    conn = self._checkout(fresh=attempt > 0)
+                    conn = self._checkout(fresh=attempt > 0, retries=connect_retries)
+                    conn.sock.settimeout(deadline)
                     conn.sock.sendall(data)
                     line = conn.rfile.readline()
                     if not line:
                         raise ConnectionError("worker closed connection")
                     resp = json.loads(line)
+                    conn.sock.settimeout(REQUEST_TIMEOUT_S)
                     self._checkin(conn)
                     return resp
                 except (OSError, json.JSONDecodeError) as e:
                     if conn is not None:
                         conn.close()
-                    if attempt:
-                        raise RemoteExecutionError(
+                    # A deadline expiry is FINAL for this request: the
+                    # worker may still be grinding (or hung) on the unit;
+                    # re-sending would double-execute it and double the
+                    # detection latency.  The caller re-dispatches instead.
+                    if isinstance(e, socket.timeout) or attempt:
+                        raise WorkerUnreachable(
                             f"worker {self.endpoint} unreachable: {e}"
                         ) from e
         raise AssertionError("unreachable")
@@ -352,8 +634,10 @@ class RemoteTransport:
             return None
         return resp if resp.get("ok") else None
 
-    def run_unit(self, payload: dict[str, Any]) -> dict[str, Any]:
-        resp = self.request({"op": "run", "payload": payload})
+    def run_unit(
+        self, payload: dict[str, Any], timeout: float | None = None
+    ) -> dict[str, Any]:
+        resp = self.request({"op": "run", "payload": payload}, timeout=timeout)
         if not resp.get("ok"):
             raise RemoteExecutionError(
                 f"worker {self.endpoint} failed: {resp.get('error', 'unknown error')}"
@@ -374,6 +658,91 @@ def get_transport(endpoint: str) -> RemoteTransport:
         return t
 
 
+# -- membership client ops (register/heartbeat pair + fleet discovery) -------
+def register(
+    registry_endpoint: str,
+    worker_endpoint: str,
+    capacity: int = 1,
+    meta: dict[str, Any] | None = None,
+    timeout: float = 10.0,
+) -> dict[str, Any]:
+    """Announce a worker to a membership registry; returns the registry ack
+    (which carries the expected ``heartbeat_interval_s``)."""
+    resp = get_transport(registry_endpoint).request(
+        {
+            "op": "register",
+            "endpoint": worker_endpoint,
+            "capacity": int(capacity),
+            "meta": dict(meta or {}),
+        },
+        timeout=timeout,
+        connect_retries=1,
+    )
+    if not resp.get("ok"):
+        raise RemoteExecutionError(
+            f"registry {registry_endpoint} rejected register: {resp.get('error')}"
+        )
+    return resp
+
+
+def heartbeat(
+    registry_endpoint: str,
+    worker_endpoint: str,
+    capacity: int | None = None,
+    timeout: float = 10.0,
+) -> dict[str, Any]:
+    """One liveness beat.  Unknown endpoints are re-admitted (registry
+    restarts heal on the next beat wave)."""
+    req: dict[str, Any] = {"op": "heartbeat", "endpoint": worker_endpoint}
+    if capacity is not None:
+        req["capacity"] = int(capacity)
+    resp = get_transport(registry_endpoint).request(req, timeout=timeout, connect_retries=1)
+    if not resp.get("ok"):
+        raise RemoteExecutionError(
+            f"registry {registry_endpoint} rejected heartbeat: {resp.get('error')}"
+        )
+    return resp
+
+
+def deregister(
+    registry_endpoint: str, worker_endpoint: str, timeout: float = 10.0
+) -> dict[str, Any]:
+    """Graceful leave (clean shutdown beats waiting out the failure detector)."""
+    return get_transport(registry_endpoint).request(
+        {"op": "deregister", "endpoint": worker_endpoint},
+        timeout=timeout,
+        connect_retries=1,
+    )
+
+
+def fleet_members(registry_endpoint: str, timeout: float = 10.0) -> list[dict[str, Any]]:
+    """The registry's current fleet view (alive + suspect, dead pruned)."""
+    resp = get_transport(registry_endpoint).request(
+        {"op": "fleet"}, timeout=timeout, connect_retries=1
+    )
+    if not resp.get("ok"):
+        raise RemoteExecutionError(
+            f"registry {registry_endpoint} rejected fleet query: {resp.get('error')}"
+        )
+    return list(resp.get("workers", []))
+
+
+def wait_members(
+    registry_endpoint: str, count: int = 1, timeout: float = 30.0
+) -> list[dict[str, Any]]:
+    """Poll the registry until >= ``count`` workers are alive (or timeout);
+    returns whatever the final view holds."""
+    deadline = time.monotonic() + timeout
+    while True:
+        try:
+            members = [m for m in fleet_members(registry_endpoint) if m["status"] == "alive"]
+        except RemoteExecutionError:
+            members = []
+        if len(members) >= count or time.monotonic() >= deadline:
+            return members
+        time.sleep(0.1)
+
+
 def wait_ready(endpoint: str, timeout: float = 30.0) -> bool:
     """Poll until the worker answers ping (workers announce asynchronously).
 
@@ -388,7 +757,7 @@ def wait_ready(endpoint: str, timeout: float = 30.0) -> bool:
     transport = get_transport(endpoint)
     while True:
         try:
-            resp = transport.request({"op": "ping"})
+            resp = transport.request({"op": "ping"}, connect_retries=1)
         except RemoteExecutionError:
             if time.monotonic() >= deadline:
                 return False
@@ -408,7 +777,9 @@ class LocalWorker:
 
     The zero-config path for tests/CI and the template for real deployment —
     point the spawn command at ``ssh <dpu> python -m repro.core.remote
-    worker`` and nothing else changes.
+    worker`` and nothing else changes.  ``register=`` makes the spawned
+    worker join a membership registry (elastic fleets); ``allow_faults=``
+    arms the fault-injection surface for soak tests.
     """
 
     def __init__(
@@ -416,10 +787,16 @@ class LocalWorker:
         plugin_dirs: Any = (),
         startup_timeout: float = 60.0,
         capacity: int = 1,
+        register: str | None = None,
+        heartbeat_interval_s: float | None = None,
+        allow_faults: bool = False,
     ):
         self.plugin_dirs = [str(d) for d in plugin_dirs]
         self.startup_timeout = startup_timeout
         self.capacity = max(1, int(capacity))
+        self.register = register
+        self.heartbeat_interval_s = heartbeat_interval_s
+        self.allow_faults = bool(allow_faults)
         self.endpoint: str | None = None
         self._proc: subprocess.Popen | None = None
         self._announced = threading.Event()
@@ -432,6 +809,11 @@ class LocalWorker:
                 q.put(line)
         q.put(None)
 
+    @property
+    def alive(self) -> bool:
+        """Whether the worker process is still running (soak respawn check)."""
+        return self._proc is not None and self._proc.poll() is None
+
     def __enter__(self) -> "LocalWorker":
         import queue
 
@@ -439,6 +821,12 @@ class LocalWorker:
             sys.executable, "-m", "repro.core.remote", "worker",
             "--port", "0", "--capacity", str(self.capacity),
         ]
+        if self.register:
+            cmd += ["--register", self.register]
+        if self.heartbeat_interval_s is not None:
+            cmd += ["--heartbeat-interval", str(self.heartbeat_interval_s)]
+        if self.allow_faults:
+            cmd += ["--allow-faults"]
         for d in self.plugin_dirs:
             cmd += ["--plugin-dir", d]
         env = dict(os.environ)
@@ -501,6 +889,24 @@ def main(argv: list[str] | None = None) -> int:
         "set to the host's spare cores on a multi-core DPU)",
     )
     w.add_argument(
+        "--advertise-host", default=None, metavar="HOST",
+        help="address to announce/register instead of the auto-resolved one "
+        "(NAT or multi-homed hosts)",
+    )
+    w.add_argument(
+        "--register", default=None, metavar="HOST:PORT",
+        help="membership registry to join (repro.runtime.membership); the "
+        "worker registers, heartbeats, and deregisters on shutdown",
+    )
+    w.add_argument(
+        "--heartbeat-interval", type=float, default=HEARTBEAT_INTERVAL_S,
+        metavar="SECONDS", help="liveness beat period when registered",
+    )
+    w.add_argument(
+        "--allow-faults", action="store_true",
+        help="honor 'fault' ops (kill/hang/slow/partial) — tests/CI soak only",
+    )
+    w.add_argument(
         "--plugin-dir", action="append", default=[], metavar="DIR",
         help="plugin task directory to preload (repeatable)",
     )
@@ -511,9 +917,16 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.cmd == "worker":
         server = WorkerServer(
-            args.host, args.port, plugin_dirs=args.plugin_dir, capacity=args.capacity
+            args.host, args.port,
+            plugin_dirs=args.plugin_dir,
+            capacity=args.capacity,
+            advertise_host=args.advertise_host,
+            register=args.register,
+            heartbeat_interval_s=args.heartbeat_interval,
+            allow_faults=args.allow_faults,
         )
         print(f"listening on {server.endpoint}", flush=True)
+        server.start_heartbeat()
         try:
             server.serve_forever()
         except KeyboardInterrupt:
@@ -538,12 +951,23 @@ if __name__ == "__main__":
 
 __all__ = [
     "RemoteExecutionError",
+    "WorkerUnreachable",
     "RemoteTransport",
     "WorkerServer",
+    "JsonLineHandler",
     "LocalWorker",
     "get_transport",
     "wait_ready",
+    "wait_members",
+    "fleet_members",
+    "register",
+    "heartbeat",
+    "deregister",
     "parse_endpoint",
     "parse_fleet",
+    "routable_host",
+    "unit_deadline_s",
     "samples_from_wire",
+    "HEARTBEAT_INTERVAL_S",
+    "REQUEST_TIMEOUT_S",
 ]

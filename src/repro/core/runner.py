@@ -31,6 +31,13 @@ Pooled runs default to ``--schedule dynamic``: a pull-based fleet scheduler
 (one cost-descending queue, sinks per worker endpoint honoring advertised
 capacity, speculative re-dispatch of stragglers past ``--straggler-factor``
 times their estimate).  ``--schedule static`` keeps the up-front LPT plan.
+
+Elastic fleets drop the endpoint list entirely: ``--registry host:port``
+discovers workers from a :mod:`repro.runtime.membership` registry
+(workers started with ``--register``), grows/shrinks the sink set
+mid-sweep on membership events, detects dead/hung workers in seconds via
+heartbeats + cost-derived per-unit deadlines, and records per-endpoint
+health in a ``health.json`` sidecar for cross-run blacklisting.
 """
 from __future__ import annotations
 
@@ -82,6 +89,7 @@ class Runner:
         schedule: str = "dynamic",
         straggler_factor: float = 4.0,
         min_time_s: float = 0.0,
+        fleet_registry: str | None = None,
     ):
         if platforms is not None and platform is not None:
             raise ValueError("pass either platform= or platforms=, not both")
@@ -97,6 +105,7 @@ class Runner:
             cache=cache,
             pool=pool,
             remote=remote,
+            fleet_registry=fleet_registry,
             weighted_shard=weighted_shard,
             schedule=schedule,
             straggler_factor=straggler_factor,
@@ -123,6 +132,7 @@ class Runner:
             cache=cache,
             pool=cfg.pool,
             remote=cfg.remote,
+            fleet_registry=cfg.registry,
             weighted_shard=cfg.weighted_shard,
             schedule=cfg.schedule,
             straggler_factor=cfg.straggler_factor,

@@ -76,6 +76,9 @@ class WorkItem:
     unit: Any
     cost: float = 1.0
     sinks: tuple[int, ...] | None = None
+    # ``sinks=None`` means *dynamic* eligibility: any live sink, including
+    # sinks that join after the run started (elastic membership).  An
+    # explicit tuple pins the unit to those sinks forever.
 
 
 @dataclass
@@ -96,6 +99,7 @@ class Outcome:
     sink: str | None = None
     attempts: int = 0
     speculated: bool = False
+    redispatched: bool = False  # re-enqueued because its sink was marked dead
     elapsed_s: float | None = None
 
 
@@ -103,13 +107,14 @@ class _Tracked:
     """Scheduler-internal state for one work item."""
 
     __slots__ = (
-        "item", "eligible", "waves", "live", "claims", "started",
+        "item", "eligible", "dynamic", "waves", "live", "claims", "started",
         "running_on", "tried", "speculated", "done", "outcome",
     )
 
-    def __init__(self, item: WorkItem, eligible: tuple[int, ...]):
+    def __init__(self, item: WorkItem, eligible: tuple[int, ...], dynamic: bool = False):
         self.item = item
         self.eligible = eligible
+        self.dynamic = dynamic  # follow the live sink set as it changes
         self.waves: set[int] = set()  # open (not yet claimed) enqueue waves
         self.live = 0  # attempts currently executing
         self.claims = 0
@@ -161,6 +166,9 @@ class FleetScheduler:
         self._stop = False
         self._scale_samples: list[float] = []
         self._tracked: list[_Tracked] = []
+        self._dead: set[int] = set()  # sinks removed from the live set
+        self._running = False
+        self._threads: list[threading.Thread] = []
 
     # -- queue (all helpers assume self._cv is held) ------------------------
     def _push_wave_locked(self, t: _Tracked, sink_ids: Sequence[int]) -> None:
@@ -175,7 +183,20 @@ class FleetScheduler:
             heapq.heappush(self._heaps[sid], (-max(t.item.cost, 0.0), self._seq, wave, t))
         self._cv.notify_all()
 
+    def _eligible_locked(self, t: _Tracked) -> tuple[int, ...]:
+        """The unit's CURRENT eligible sinks: live membership for dynamic
+        units, the pinned tuple (minus dead sinks) otherwise.  Falls back to
+        the full base set when every candidate is dead — an empty set would
+        strand the unit with no path to a terminal outcome."""
+        base = (
+            tuple(range(len(self.sinks))) if t.dynamic else t.eligible
+        )
+        live = tuple(s for s in base if s not in self._dead)
+        return live or base
+
     def _claim_locked(self, sid: int) -> _Tracked | None:
+        if sid in self._dead:
+            return None
         heap = self._heaps[sid]
         while heap:
             _, _, wave, t = heapq.heappop(heap)
@@ -197,7 +218,7 @@ class FleetScheduler:
         while True:
             with self._cv:
                 t = None
-                while not self._stop:
+                while not self._stop and sid not in self._dead:
                     t = self._claim_locked(sid)
                     if t is not None:
                         break
@@ -235,7 +256,11 @@ class FleetScheduler:
                 t.outcome.error = error
                 if t.live > 0 or t.waves:
                     return  # another attempt may still win this unit
-                untried = tuple(s for s in t.eligible if s not in t.tried)
+                untried = tuple(
+                    s
+                    for s in self._eligible_locked(t)
+                    if s not in t.tried and s not in self._dead
+                )
                 if untried:
                     # An error is only terminal once every eligible sink has
                     # had a go: a crashed fleet worker fast-fails its claims,
@@ -296,9 +321,117 @@ class FleetScheduler:
             # Re-dispatch to the other eligible sinks (they are idle: the
             # queue is empty).  A single-sink unit retries on another slot /
             # connection of the same sink — that still beats a wedged one.
-            others = tuple(s for s in t.eligible if s != t.running_on) or t.eligible
+            eligible = tuple(
+                s for s in self._eligible_locked(t) if s not in self._dead
+            )
+            if not eligible:
+                continue  # fleet collapsed to dead sinks; nothing to try
+            others = tuple(s for s in eligible if s != t.running_on) or eligible
             t.speculated = True
             self._push_wave_locked(t, others)
+
+    # -- elastic membership --------------------------------------------------
+    def _resolve_sid(self, sink: "int | str") -> int:
+        if isinstance(sink, int):
+            if not 0 <= sink < len(self.sinks):
+                raise ValueError(f"unknown sink id {sink}")
+            return sink
+        match = None
+        for sid, s in enumerate(self.sinks):
+            if s.name == sink:
+                match = sid
+                if sid not in self._dead:
+                    return sid  # prefer the live holder of a reused name
+        if match is None:
+            raise ValueError(f"unknown sink {sink!r}")
+        return match
+
+    def _spawn_pullers(self, sid: int) -> None:
+        sink = self.sinks[sid]
+        for slot in range(sink.capacity):
+            th = threading.Thread(
+                target=self._puller, args=(sid,), daemon=True,
+                name=f"sink-{sink.name}-{slot}",
+            )
+            th.start()
+            self._threads.append(th)
+
+    def add_sink(self, sink: Sink) -> int:
+        """Grow the fleet mid-run (a worker registered): dynamic units'
+        open waves become claimable by the new sink immediately; pinned
+        units are unaffected.  Returns the new sink id."""
+        if sink.capacity < 1:
+            raise ValueError(f"sink {sink.name!r} capacity must be >= 1, got {sink.capacity}")
+        with self._cv:
+            sid = len(self.sinks)
+            self.sinks.append(sink)
+            self._heaps.append([])
+            for t in self._tracked:
+                if t.done or not t.dynamic:
+                    continue
+                for wave in t.waves:
+                    self._seq += 1
+                    heapq.heappush(
+                        self._heaps[sid], (-max(t.item.cost, 0.0), self._seq, wave, t)
+                    )
+            running = self._running
+            self._cv.notify_all()
+        if running:
+            self._spawn_pullers(sid)
+        return sid
+
+    def mark_dead(self, sink: "int | str") -> list[Any]:
+        """Shrink the fleet: the sink stops claiming, its queued tickets are
+        re-homed to live sinks, and its IN-FLIGHT units are re-enqueued
+        elsewhere right away (``Outcome.redispatched``) instead of waiting
+        for the doomed attempt's transport deadline.  The first completion
+        still wins through ``t.done``, so a late reply from a merely-slow
+        "dead" worker dedupes exactly like a lost speculation race.
+        Returns the units that were re-dispatched.
+        """
+        redispatched: list[Any] = []
+        with self._cv:
+            sid = self._resolve_sid(sink)
+            if sid in self._dead:
+                return []
+            self._dead.add(sid)
+            for t in self._tracked:
+                if t.done:
+                    continue
+                targets = tuple(
+                    s for s in self._eligible_locked(t) if s not in self._dead
+                )
+                if t.waves:
+                    # Re-home queued work: retire every open wave (some may
+                    # exist ONLY in the dead heap) and open one fresh wave
+                    # across the surviving sinks.
+                    self._open_tickets -= len(t.waves)
+                    t.waves.clear()
+                    if targets:
+                        self._push_wave_locked(t, targets)
+                    elif t.live == 0:
+                        # Pinned to sinks that are all dead, nothing running:
+                        # no path to completion — terminal error, not a hang.
+                        t.outcome.error = RuntimeError(
+                            f"sink {self.sinks[sid].name!r} died and no live "
+                            "sink is eligible"
+                        )
+                        t.outcome.attempts = t.claims
+                        t.done = True
+                        self._done_count += 1
+                        if self.fail_fast:
+                            self._stop = True
+                    continue
+                if t.live > 0 and t.running_on == sid and targets:
+                    t.outcome.redispatched = True
+                    redispatched.append(t.item.unit)
+                    self._push_wave_locked(t, targets)
+            self._cv.notify_all()
+        return redispatched
+
+    def live_sinks(self) -> list[str]:
+        with self._cv:
+            return [s.name for sid, s in enumerate(self.sinks) if sid not in self._dead]
 
     # -- entry point ---------------------------------------------------------
     def run(self, items: Sequence[WorkItem]) -> list[Outcome]:
@@ -309,28 +442,31 @@ class FleetScheduler:
         result nor error).  Attempts still executing at return are
         abandoned on daemon threads; their late results are discarded.
         """
-        all_ids = tuple(range(len(self.sinks)))
         with self._cv:
+            initial = len(self.sinks)
+            live = tuple(s for s in range(initial) if s not in self._dead)
             self._tracked = []
             for item in items:
-                eligible = tuple(item.sinks) if item.sinks is not None else all_ids
-                if not eligible:
-                    raise ValueError(f"work item {item.unit!r} has no eligible sink")
-                for sid in eligible:
-                    if not 0 <= sid < len(self.sinks):
-                        raise ValueError(f"work item {item.unit!r} names unknown sink {sid}")
-                self._tracked.append(_Tracked(item, eligible))
+                if item.sinks is not None:
+                    eligible = tuple(item.sinks)
+                    if not eligible:
+                        raise ValueError(f"work item {item.unit!r} has no eligible sink")
+                    for sid in eligible:
+                        if not 0 <= sid < initial:
+                            raise ValueError(
+                                f"work item {item.unit!r} names unknown sink {sid}"
+                            )
+                    self._tracked.append(_Tracked(item, eligible))
+                else:
+                    if not live:
+                        raise ValueError(f"work item {item.unit!r} has no eligible sink")
+                    self._tracked.append(_Tracked(item, live, dynamic=True))
             for t in self._tracked:
-                self._push_wave_locked(t, t.eligible)
-        threads = []
-        for sid, sink in enumerate(self.sinks):
-            for slot in range(sink.capacity):
-                th = threading.Thread(
-                    target=self._puller, args=(sid,), daemon=True,
-                    name=f"sink-{sink.name}-{slot}",
-                )
-                th.start()
-                threads.append(th)
+                self._push_wave_locked(t, self._eligible_locked(t))
+            self._running = True
+        for sid in range(initial):
+            if sid not in self._dead:
+                self._spawn_pullers(sid)
         try:
             with self._cv:
                 while self._done_count < len(self._tracked) and not self._stop:
@@ -339,8 +475,9 @@ class FleetScheduler:
         finally:
             with self._cv:
                 self._stop = True
+                self._running = False
                 self._cv.notify_all()
-        for th in threads:
+        for th in self._threads:
             th.join(timeout=0.1)
         return [t.outcome for t in self._tracked]
 

@@ -1,27 +1,42 @@
-"""Elastic scaling: re-mesh live state onto a changed device set.
+"""Elastic scaling: react to a changed execution-resource set, live.
 
-When a pod loses (or regains) hosts, the controller rebuilds the mesh over
-the surviving devices and `reshard`s params/optimizer state onto it —
-device_put with the new NamedShardings performs the minimal movement (a
-resharding collective on real hardware). The shape cells keep working as
-long as the new data axis still divides the global batch; otherwise
-`fit_batch` computes the largest divisible batch (documented drop).
+Two faces of the same problem live here:
 
-`plan_mesh` picks the largest (data, model) grid that (a) fits the device
-count and (b) keeps `model` a divisor of the previous model-axis size, so
-TP-sharded dims stay divisible after shrinking.
+* **Device elasticity** (jax meshes): when a pod loses (or regains) hosts,
+  the controller rebuilds the mesh over the surviving devices and
+  ``reshard``s params/optimizer state onto it — ``device_put`` with the new
+  NamedShardings performs the minimal movement (a resharding collective on
+  real hardware).  The shape cells keep working as long as the new data
+  axis still divides the global batch; otherwise ``fit_batch`` computes the
+  largest divisible batch (documented drop).  ``plan_mesh`` picks the
+  largest (data, model) grid that (a) fits the device count and (b) keeps
+  ``model`` a divisor of the previous model-axis size, so TP-sharded dims
+  stay divisible after shrinking.
+
+* **Fleet elasticity** (sweep workers): :class:`FleetWatcher` follows a
+  :mod:`repro.runtime.membership` registry while a
+  :class:`repro.core.scheduler.FleetScheduler` run is in flight — a newly
+  registered worker becomes a pull sink mid-sweep (``add_sink``), and a
+  worker whose heartbeats stop is marked dead within the registry's
+  suspicion bound (``mark_dead``), re-enqueueing its queued AND in-flight
+  units on the survivors.  Merged reports stay byte-identical to
+  sequential runs throughout: membership only changes WHERE units execute,
+  never what rows they produce.
+
+jax imports are lazy (inside the mesh functions) so the fleet half is
+importable from :mod:`repro.core` paths without dragging an accelerator
+runtime into transport code.
 """
 from __future__ import annotations
 
-from typing import Any
+import threading
+from typing import Any, Callable
 
-import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
-
-from repro.launch.mesh import Rules
+from repro.core.remote import HEARTBEAT_INTERVAL_S, RemoteExecutionError, fleet_members
+from repro.core.scheduler import FleetScheduler, Sink
 
 
+# -- device elasticity (jax mesh) ---------------------------------------------
 def plan_mesh(n_devices: int, prev_model: int = 1) -> tuple[int, int]:
     """(data, model) for a degraded device count."""
     model = prev_model
@@ -31,13 +46,19 @@ def plan_mesh(n_devices: int, prev_model: int = 1) -> tuple[int, int]:
     return data, model
 
 
-def remesh(devices: list, data: int, model: int) -> Mesh:
+def remesh(devices: list, data: int, model: int):
+    import numpy as np
+    from jax.sharding import Mesh
+
     arr = np.array(devices[: data * model]).reshape(data, model)
     return Mesh(arr, ("data", "model"))
 
 
-def reshard(tree: Any, rules: Rules, spec_tree: Any, new_mesh: Mesh) -> Any:
+def reshard(tree: Any, rules, spec_tree: Any, new_mesh) -> Any:
     """Move live arrays onto the new mesh (minimal-movement device_put)."""
+    import jax
+    from jax.sharding import NamedSharding
+
     shardings = jax.tree_util.tree_map(
         lambda axes: NamedSharding(new_mesh, rules.spec(axes)),
         spec_tree,
@@ -56,3 +77,99 @@ def reshard(tree: Any, rules: Rules, spec_tree: Any, new_mesh: Mesh) -> Any:
 def fit_batch(global_batch: int, n_data: int) -> int:
     """Largest batch <= global_batch divisible by the new data-parallel width."""
     return (global_batch // n_data) * n_data
+
+
+# -- fleet elasticity (membership -> scheduler sinks) -------------------------
+class FleetWatcher:
+    """Mirror a membership registry's view into a running scheduler.
+
+    Polls ``fleet`` on the registry every ``poll_s`` and applies the delta:
+
+    * an **alive** endpoint not yet in the sink set -> ``make_sink(ep)`` +
+      ``scheduler.add_sink`` (dynamic-eligibility units become claimable
+      by it immediately — the join half of elasticity);
+    * a tracked endpoint now **suspect**/absent -> ``scheduler.mark_dead``
+      (queued tickets re-home, in-flight units re-enqueue on survivors —
+      the leave half, bounded by the registry's ``suspect_beats x
+      heartbeat interval``, i.e. seconds).  A worker that re-registers
+      later simply joins again as a fresh sink.
+
+    A transient registry outage changes nothing: the last applied view
+    stands until the registry answers again (no flapping the whole fleet
+    dead on one lost poll).
+    """
+
+    def __init__(
+        self,
+        registry_endpoint: str,
+        scheduler: FleetScheduler,
+        make_sink: Callable[[str], Sink],
+        poll_s: float = HEARTBEAT_INTERVAL_S / 2,
+    ):
+        self.registry_endpoint = registry_endpoint
+        self.scheduler = scheduler
+        self.make_sink = make_sink
+        self.poll_s = float(poll_s)
+        # Seed from the scheduler's initial sinks (built from the same
+        # registry view moments ago); endpoints we've marked dead stay in
+        # the map so a stale 'suspect' row doesn't re-kill them.
+        self._tracked: dict[str, str] = {name: "alive" for name in scheduler.live_sinks()}
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.joined: list[str] = []
+        self.left: list[str] = []
+
+    def poll_once(self) -> None:
+        """Fetch the registry view and apply one membership delta."""
+        try:
+            members = fleet_members(self.registry_endpoint)
+        except RemoteExecutionError:
+            return  # transient outage: keep the last applied view
+        status = {m["endpoint"]: m["status"] for m in members}
+        for ep, st in status.items():
+            if st != "alive":
+                continue
+            prev = self._tracked.get(ep)
+            if prev is None or prev == "dead":
+                # New worker (or a re-registered one): join as a fresh sink.
+                self.scheduler.add_sink(self.make_sink(ep))
+                self._tracked[ep] = "alive"
+                self.joined.append(ep)
+        for ep, prev in list(self._tracked.items()):
+            if prev != "alive":
+                continue
+            st = status.get(ep)
+            if st is None or st != "alive":
+                # Beats stopped (suspect), declared dead+pruned, or cleanly
+                # deregistered: stop sending, re-dispatch its units.
+                self.scheduler.mark_dead(ep)
+                self._tracked[ep] = "dead"
+                self.left.append(ep)
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.poll_s):
+            self.poll_once()
+
+    def start(self) -> "FleetWatcher":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, daemon=True, name="fleet-watcher"
+            )
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+
+__all__ = [
+    "FleetWatcher",
+    "fit_batch",
+    "plan_mesh",
+    "remesh",
+    "reshard",
+]

@@ -1,0 +1,300 @@
+"""Fleet membership: worker registration, heartbeats, bounded failure detection.
+
+Before this service a ``--remote`` fleet was a hand-typed endpoint list and a
+dead worker was only discovered when a request's socket timeout expired.
+Here the fleet is *elastic*: workers announce themselves to a registry
+(``register``), prove liveness every :data:`~repro.core.remote.
+HEARTBEAT_INTERVAL_S` seconds (``heartbeat``), and are classified with a
+bounded failure detector —
+
+  ``alive``    last beat within ``suspect_beats x interval`` (default 3
+               missed beats, i.e. seconds, not the 600 s request timeout);
+  ``suspect``  beats stopped; schedulers must stop sending NEW work and
+               re-dispatch the worker's in-flight units elsewhere;
+  ``dead``     silent past ``dead_beats x interval``; pruned from the table.
+
+The wire protocol is the same newline-JSON request/response the worker
+transport speaks (:mod:`repro.core.remote` defines the ``register``/
+``heartbeat`` op pair and the client helpers), so a registry is one more
+``host:port`` and `wait_ready`/`ping` work against it unchanged.  Run one
+standalone::
+
+    python -m repro.runtime.membership serve --host 0.0.0.0 --port 7170
+
+and point workers (``--register HOST:7170``) and sweep runners
+(``--registry HOST:7170``) at it.  :class:`repro.runtime.elastic.
+FleetWatcher` turns the registry's view into live scheduler sink set
+changes mid-sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import socketserver
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.remote import (
+    HEARTBEAT_INTERVAL_S,
+    JsonLineHandler,
+    parse_endpoint,
+)
+
+#: Missed beats before a worker is suspected (failure-detection bound).
+SUSPECT_BEATS = 3
+#: Missed beats before a suspect worker is declared dead and pruned.
+DEAD_BEATS = 10
+
+
+@dataclass
+class WorkerRecord:
+    """One registered worker as the registry sees it."""
+
+    endpoint: str
+    capacity: int = 1
+    meta: dict[str, Any] = field(default_factory=dict)
+    registered_unix: float = 0.0
+    last_seen: float = 0.0  # monotonic, registry clock
+    beats: int = 0
+
+
+class MembershipRegistry:
+    """Thread-safe worker table with heartbeat-based failure detection.
+
+    Pure state machine — servers feed it ``register``/``heartbeat``/
+    ``deregister``/``fleet`` requests through :meth:`handle`; tests drive it
+    with an injected clock.  A heartbeat from an unknown endpoint
+    re-registers it (a restarted registry repopulates from the next beat
+    wave instead of losing the fleet).
+    """
+
+    def __init__(
+        self,
+        heartbeat_interval_s: float = HEARTBEAT_INTERVAL_S,
+        suspect_beats: int = SUSPECT_BEATS,
+        dead_beats: int = DEAD_BEATS,
+        now: Callable[[], float] = time.monotonic,
+    ):
+        if heartbeat_interval_s <= 0:
+            raise ValueError(f"heartbeat interval must be > 0, got {heartbeat_interval_s}")
+        if not 0 < suspect_beats < dead_beats:
+            raise ValueError(
+                f"need 0 < suspect_beats < dead_beats, got {suspect_beats}/{dead_beats}"
+            )
+        self.heartbeat_interval_s = float(heartbeat_interval_s)
+        self.suspect_beats = int(suspect_beats)
+        self.dead_beats = int(dead_beats)
+        self._now = now
+        self._lock = threading.Lock()
+        self._workers: dict[str, WorkerRecord] = {}
+
+    # -- events --------------------------------------------------------------
+    def register(
+        self, endpoint: str, capacity: int = 1, meta: dict[str, Any] | None = None
+    ) -> dict[str, Any]:
+        parse_endpoint(endpoint)  # reject junk before it enters the table
+        with self._lock:
+            self._workers[endpoint] = WorkerRecord(
+                endpoint=endpoint,
+                capacity=max(1, int(capacity)),
+                meta=dict(meta or {}),
+                registered_unix=time.time(),
+                last_seen=self._now(),
+                beats=0,
+            )
+        return {
+            "ok": True,
+            "op": "register",
+            "heartbeat_interval_s": self.heartbeat_interval_s,
+            "suspect_beats": self.suspect_beats,
+        }
+
+    def heartbeat(self, endpoint: str, capacity: int | None = None) -> dict[str, Any]:
+        with self._lock:
+            rec = self._workers.get(endpoint)
+            known = rec is not None
+        if rec is None:
+            # Unknown endpoint (registry restarted, or beat raced ahead of
+            # register): the beat carries enough to (re-)admit the worker.
+            self.register(endpoint, capacity=capacity or 1)
+            with self._lock:
+                rec = self._workers[endpoint]
+        with self._lock:
+            rec.last_seen = self._now()
+            rec.beats += 1
+            if capacity is not None:
+                rec.capacity = max(1, int(capacity))
+        return {"ok": True, "op": "heartbeat", "known": known}
+
+    def deregister(self, endpoint: str) -> dict[str, Any]:
+        with self._lock:
+            known = self._workers.pop(endpoint, None) is not None
+        return {"ok": True, "op": "deregister", "known": known}
+
+    # -- failure detection ---------------------------------------------------
+    def status_of(self, rec: WorkerRecord, now: float | None = None) -> str:
+        age = (self._now() if now is None else now) - rec.last_seen
+        if age <= self.suspect_beats * self.heartbeat_interval_s:
+            return "alive"
+        if age <= self.dead_beats * self.heartbeat_interval_s:
+            return "suspect"
+        return "dead"
+
+    def members(self) -> list[dict[str, Any]]:
+        """Current fleet view, dead workers pruned; sorted for determinism."""
+        now = self._now()
+        out: list[dict[str, Any]] = []
+        with self._lock:
+            dead = [ep for ep, r in self._workers.items() if self.status_of(r, now) == "dead"]
+            for ep in dead:
+                del self._workers[ep]
+            for ep in sorted(self._workers):
+                r = self._workers[ep]
+                out.append(
+                    {
+                        "endpoint": r.endpoint,
+                        "capacity": r.capacity,
+                        "status": self.status_of(r, now),
+                        "age_s": now - r.last_seen,
+                        "beats": r.beats,
+                        "meta": dict(r.meta),
+                    }
+                )
+        return out
+
+    def alive(self) -> list[str]:
+        return [m["endpoint"] for m in self.members() if m["status"] == "alive"]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._workers)
+
+    # -- wire dispatch -------------------------------------------------------
+    def handle(self, req: dict[str, Any]) -> dict[str, Any]:
+        """Serve one registry op (shared by any JSON-line server front end)."""
+        op = req.get("op")
+        if op == "register":
+            ep = req.get("endpoint")
+            if not ep:
+                return {"ok": False, "error": "register needs an 'endpoint'"}
+            try:
+                return self.register(
+                    str(ep), capacity=int(req.get("capacity", 1) or 1), meta=req.get("meta")
+                )
+            except ValueError as e:
+                return {"ok": False, "error": str(e)}
+        if op == "heartbeat":
+            ep = req.get("endpoint")
+            if not ep:
+                return {"ok": False, "error": "heartbeat needs an 'endpoint'"}
+            cap = req.get("capacity")
+            try:
+                return self.heartbeat(str(ep), capacity=int(cap) if cap is not None else None)
+            except ValueError as e:
+                return {"ok": False, "error": str(e)}
+        if op == "deregister":
+            ep = req.get("endpoint")
+            if not ep:
+                return {"ok": False, "error": "deregister needs an 'endpoint'"}
+            return self.deregister(str(ep))
+        if op == "fleet":
+            return {"ok": True, "op": "fleet", "workers": self.members()}
+        return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+class MembershipServer(socketserver.ThreadingTCPServer):
+    """Standalone registry endpoint speaking the worker wire protocol."""
+
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(
+        self,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        registry: MembershipRegistry | None = None,
+    ):
+        super().__init__((host, port), JsonLineHandler)
+        self.registry = registry if registry is not None else MembershipRegistry()
+
+    @property
+    def endpoint(self) -> str:
+        from repro.core.remote import routable_host
+
+        host, port = self.server_address[:2]
+        return f"{routable_host(str(host))}:{port}"
+
+    def dispatch(self, req: dict[str, Any]) -> dict[str, Any]:
+        if req.get("op") == "ping":
+            import os
+
+            return {
+                "ok": True,
+                "op": "ping",
+                "pid": os.getpid(),
+                "service": "membership",
+                "capacity": 1,
+                "workers": len(self.registry),
+            }
+        return self.registry.handle(req)
+
+    def serve_in_thread(self) -> threading.Thread:
+        t = threading.Thread(target=self.serve_forever, daemon=True)
+        t.start()
+        return t
+
+
+# -- CLI ---------------------------------------------------------------------
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="repro.runtime.membership", description="dpBento fleet membership registry"
+    )
+    sub = p.add_subparsers(dest="cmd", required=True)
+    s = sub.add_parser("serve", help="run the registration/heartbeat registry")
+    s.add_argument("--host", default="127.0.0.1")
+    s.add_argument("--port", type=int, default=0, help="0 = ephemeral")
+    s.add_argument(
+        "--heartbeat-interval", type=float, default=HEARTBEAT_INTERVAL_S, metavar="SECONDS",
+        help="expected worker beat period (suspect after 3 missed beats)",
+    )
+    f = sub.add_parser("fleet", help="print a registry's current fleet view")
+    f.add_argument("registry", metavar="HOST:PORT")
+    args = p.parse_args(argv)
+
+    if args.cmd == "serve":
+        server = MembershipServer(
+            args.host, args.port,
+            registry=MembershipRegistry(heartbeat_interval_s=args.heartbeat_interval),
+        )
+        print(f"listening on {server.endpoint}", flush=True)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.server_close()
+        return 0
+    if args.cmd == "fleet":
+        from repro.core.remote import fleet_members
+
+        for m in fleet_members(args.registry):
+            print(
+                f"{m['endpoint']}  capacity={m['capacity']}  status={m['status']}  "
+                f"age={m['age_s']:.1f}s  beats={m['beats']}"
+            )
+        return 0
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
+
+
+__all__ = [
+    "DEAD_BEATS",
+    "MembershipRegistry",
+    "MembershipServer",
+    "SUSPECT_BEATS",
+    "WorkerRecord",
+]

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Any, Callable, Iterator
 
 import jax
@@ -66,6 +67,13 @@ class RequestQueue:
     ``submit`` returns False (and counts a shed) when the queue is full;
     callers never block.  ``depth=None`` means unbounded.  The counters
     satisfy ``offered == admitted + shed`` at all times.
+
+    Thread-safe: every queue/counter mutation happens under one internal
+    lock, so an async front end can ``submit`` from transport threads
+    while the serving tick drains with ``take_matching`` — the admission
+    decision (full check + append + counter bump) is a single atomic step,
+    never a check-then-act race.  ``pred`` is called WITH the lock held;
+    keep it a pure, fast predicate.
     """
 
     def __init__(self, depth: int | None = None):
@@ -73,30 +81,38 @@ class RequestQueue:
             raise ValueError(f"queue depth must be >= 1, got {depth}")
         self.depth = depth
         self._q: collections.deque = collections.deque()
+        self._lock = threading.Lock()
         self.offered = 0
         self.admitted = 0
         self.shed = 0
 
     def __len__(self) -> int:
-        return len(self._q)
+        with self._lock:
+            return len(self._q)
 
     def __iter__(self) -> Iterator:
-        return iter(self._q)
+        # Iterate a snapshot: callers must never observe (or pin) the live
+        # deque while submitters mutate it.
+        with self._lock:
+            return iter(list(self._q))
 
     def submit(self, req) -> bool:
-        self.offered += 1
-        if self.depth is not None and len(self._q) >= self.depth:
-            self.shed += 1
-            return False
-        self._q.append(req)
-        self.admitted += 1
-        return True
+        with self._lock:
+            self.offered += 1
+            if self.depth is not None and len(self._q) >= self.depth:
+                self.shed += 1
+                return False
+            self._q.append(req)
+            self.admitted += 1
+            return True
 
     def popleft(self):
-        return self._q.popleft()
+        with self._lock:
+            return self._q.popleft()
 
     def peek(self):
-        return self._q[0] if self._q else None
+        with self._lock:
+            return self._q[0] if self._q else None
 
     def take_matching(self, pred: Callable[[Any], bool], limit: int) -> list:
         """Dequeue up to ``limit`` requests satisfying ``pred``, preserving
@@ -104,15 +120,18 @@ class RequestQueue:
 
         This is the scan-sharing coalescer: the query server takes every
         pending request of one query shape in one call and fuses them into
-        a single kernel pass.
+        a single kernel pass.  The whole scan is one atomic step: requests
+        submitted concurrently either miss this scan entirely or are seen
+        exactly once — never lost, never duplicated.
         """
         taken: list = []
         rest: collections.deque = collections.deque()
-        while self._q:
-            req = self._q.popleft()
-            if len(taken) < limit and pred(req):
-                taken.append(req)
-            else:
-                rest.append(req)
-        self._q = rest
+        with self._lock:
+            while self._q:
+                req = self._q.popleft()
+                if len(taken) < limit and pred(req):
+                    taken.append(req)
+                else:
+                    rest.append(req)
+            self._q = rest
         return taken

@@ -1,0 +1,687 @@
+"""Elastic-fleet conformance: membership, failure detection, fault recovery.
+
+Four pillars, matching the fleet layer's contract:
+
+  1. *Transport hardening* — endpoint parsing rejects junk (out-of-range
+     ports, unbracketed IPv6), a dispatch crash serializes back as an error
+     response instead of killing the connection thread, wildcard binds
+     announce a routable address, and deadline expiry / dead endpoints
+     raise ``WorkerUnreachable`` (transport evidence) while clean task
+     errors stay plain ``RemoteExecutionError`` (the endpoint is healthy).
+  2. *Membership* — the registry's failure detector classifies workers
+     alive/suspect/dead on a fake clock, heartbeats re-admit unknown
+     endpoints, and the register/heartbeat/deregister ops work over the
+     real wire protocol.
+  3. *Elastic scheduling* — ``add_sink`` makes queued dynamic units
+     claimable by a mid-run joiner, ``mark_dead`` re-homes queued tickets
+     and re-enqueues in-flight units on survivors, and the FleetWatcher
+     turns registry deltas into exactly those calls.
+  4. *Fault recovery* — workers killed / hung / slowed / corrupting the
+     wire mid-sweep: every scenario must finish with a report
+     byte-identical to the fault-free sequential run, within the detection
+     bound (seconds, never the 600 s request timeout).
+
+Fault tests use deterministic directory-plugin tasks (metrics are pure
+functions of params), so byte-equality checks are exact regardless of
+which worker executed what.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import threading
+import time
+
+import pytest
+from test_shard import make_plugin, plugin_box
+
+from repro.core import config as config_mod
+from repro.core import registry as reg
+from repro.core import remote as remote_mod
+from repro.core.cache import BLACKLIST_AFTER, EndpointHealthStore, ResultCache
+from repro.core.executor import SweepExecutor
+from repro.core.faults import FaultPlan, FaultSpec, inject
+from repro.core.remote import (
+    LocalWorker,
+    RemoteExecutionError,
+    RemoteTransport,
+    WorkerServer,
+    WorkerUnreachable,
+    parse_endpoint,
+    routable_host,
+    unit_deadline_s,
+)
+from repro.core.scheduler import FleetScheduler, Sink, WorkItem
+from repro.runtime.elastic import FleetWatcher
+from repro.runtime.membership import MembershipRegistry, MembershipServer
+
+
+# -- 1. transport hardening --------------------------------------------------
+def test_parse_endpoint_accepts_hosts_ports_and_bracketed_ipv6():
+    assert parse_endpoint("host:7177") == ("host", 7177)
+    assert parse_endpoint("tcp://10.0.0.2:1") == ("10.0.0.2", 1)
+    assert parse_endpoint(":8080") == ("127.0.0.1", 8080)
+    assert parse_endpoint("[::1]:65535") == ("::1", 65535)
+    assert parse_endpoint("[fe80::1%eth0]:80") == ("fe80::1%eth0", 80)
+
+
+@pytest.mark.parametrize(
+    "bad",
+    ["host:99999", "host:0", "host:-1", "host:", "nope", "::1:8080", "a:b:80"],
+)
+def test_parse_endpoint_rejects_junk(bad):
+    with pytest.raises(ValueError):
+        parse_endpoint(bad)
+
+
+def test_parse_endpoint_port_error_names_the_range():
+    with pytest.raises(ValueError, match=r"\[1, 65535\]"):
+        parse_endpoint("host:70000")
+
+
+def test_routable_host_never_returns_a_wildcard():
+    for wildcard in ("0.0.0.0", "::", ""):
+        resolved = routable_host(wildcard)
+        assert resolved not in ("0.0.0.0", "::", "")
+    # non-wildcard binds pass through untouched
+    assert routable_host("192.168.1.7") == "192.168.1.7"
+    assert routable_host("localhost") == "localhost"
+
+
+def test_worker_bound_to_wildcard_announces_routable_endpoint():
+    srv = WorkerServer("0.0.0.0", 0)
+    try:
+        host, port = parse_endpoint(srv.endpoint)
+        assert host != "0.0.0.0"
+        assert port == srv.server_address[1]
+        # and the announced endpoint really is connectable
+        socket.create_connection((host, port), timeout=5).close()
+    finally:
+        srv.server_close()
+
+
+def test_advertise_host_overrides_resolution():
+    srv = WorkerServer("127.0.0.1", 0, advertise_host="worker-3.fleet.local")
+    try:
+        assert srv.endpoint.startswith("worker-3.fleet.local:")
+    finally:
+        srv.server_close()
+
+
+def test_unit_deadline_layers():
+    assert unit_deadline_s(None) == remote_mod.REQUEST_TIMEOUT_S  # no evidence
+    assert unit_deadline_s(0.01) == remote_mod.MIN_UNIT_DEADLINE_S  # floor
+    assert unit_deadline_s(2.0) == 20.0  # factor x estimate
+    assert unit_deadline_s(1e9) == remote_mod.REQUEST_TIMEOUT_S  # ceiling
+
+
+def test_dispatch_crash_serializes_error_and_connection_survives():
+    """Satellite bugfix: an unexpected dispatch exception must write an
+    error response back, not kill the connection thread (which left the
+    client blocking until the 600 s request timeout)."""
+    srv = WorkerServer("127.0.0.1", 0)
+    real_dispatch = srv.dispatch
+
+    def flaky_dispatch(req):
+        if req.get("op") == "boom":
+            raise RuntimeError("dispatch exploded")
+        return real_dispatch(req)
+
+    srv.dispatch = flaky_dispatch
+    srv.serve_in_thread()
+    try:
+        t = RemoteTransport(srv.endpoint)
+        resp = t.request({"op": "boom"}, timeout=10.0)
+        assert resp["ok"] is False
+        assert "dispatch exploded" in resp["error"]
+        assert "RuntimeError" in resp.get("traceback", "")
+        # same transport (and pooled connection) keeps working
+        assert t.request({"op": "ping"}, timeout=10.0)["ok"] is True
+        t.close()
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_bad_request_json_answers_error_line():
+    srv = WorkerServer("127.0.0.1", 0)
+    srv.serve_in_thread()
+    try:
+        host, port = parse_endpoint(srv.endpoint)
+        with socket.create_connection((host, port), timeout=5) as s:
+            s.sendall(b"this is not json\n")
+            line = s.makefile("rb").readline()
+        resp = json.loads(line)
+        assert resp["ok"] is False and "bad request JSON" in resp["error"]
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_deadline_expiry_raises_worker_unreachable_fast():
+    """A request past its deadline is a transport failure, detected at the
+    deadline — never retried blind (the worker may still be executing)."""
+    srv = WorkerServer("127.0.0.1", 0)
+    real_dispatch = srv.dispatch
+
+    def slow_dispatch(req):
+        if req.get("op") == "stall":
+            time.sleep(30)
+        return real_dispatch(req)
+
+    srv.dispatch = slow_dispatch
+    srv.serve_in_thread()
+    try:
+        t = RemoteTransport(srv.endpoint)
+        t0 = time.monotonic()
+        with pytest.raises(WorkerUnreachable):
+            t.request({"op": "stall"}, timeout=0.5)
+        elapsed = time.monotonic() - t0
+        assert elapsed < 5.0  # one deadline, not 2x (no blind re-send)
+        t.close()
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_dead_endpoint_raises_worker_unreachable():
+    with socket.socket() as s:  # grab a port that is then closed
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+    t = RemoteTransport(f"127.0.0.1:{port}")
+    with pytest.raises(WorkerUnreachable):
+        t.request({"op": "ping"}, connect_retries=1)
+
+
+def test_task_error_is_not_worker_unreachable(tmp_path):
+    """A worker that cleanly reports a task failure is a HEALTHY endpoint:
+    the error must not be classified as transport evidence."""
+    srv = WorkerServer("127.0.0.1", 0)
+    srv.serve_in_thread()
+    try:
+        t = RemoteTransport(srv.endpoint)
+        with pytest.raises(RemoteExecutionError) as exc_info:
+            t.run_unit({"task": "no-such-task", "params": {}, "metrics": [],
+                        "platform": {"name": "cpu-host"}, "iters": 1, "warmup": 0})
+        assert not isinstance(exc_info.value, WorkerUnreachable)
+        t.close()
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+# -- 2. membership -----------------------------------------------------------
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_registry_failure_detector_alive_suspect_dead():
+    clock = FakeClock()
+    r = MembershipRegistry(heartbeat_interval_s=1.0, suspect_beats=3, dead_beats=10, now=clock)
+    r.register("w:7001", capacity=2)
+    assert [m["status"] for m in r.members()] == ["alive"]
+    clock.t += 3.0  # exactly at the bound: still alive
+    assert [m["status"] for m in r.members()] == ["alive"]
+    clock.t += 0.5  # past 3 missed beats -> suspect
+    assert [m["status"] for m in r.members()] == ["suspect"]
+    assert r.alive() == []
+    clock.t += 7.0  # past 10 beats -> dead, pruned from the table
+    assert r.members() == []
+    assert len(r) == 0
+
+
+def test_registry_heartbeat_refreshes_and_readmits():
+    clock = FakeClock()
+    r = MembershipRegistry(heartbeat_interval_s=1.0, now=clock)
+    r.register("w:7001")
+    clock.t += 2.9
+    r.heartbeat("w:7001")
+    clock.t += 2.9  # 2.9 since last beat: alive again
+    assert r.alive() == ["w:7001"]
+    # a beat from an endpoint the registry never saw (restart) re-admits it
+    resp = r.heartbeat("w:7002", capacity=4)
+    assert resp["ok"] is True and resp["known"] is False
+    members = {m["endpoint"]: m for m in r.members()}
+    assert members["w:7002"]["capacity"] == 4
+
+
+def test_registry_rejects_junk_endpoints_and_knobs():
+    r = MembershipRegistry()
+    with pytest.raises(ValueError):
+        r.register("host:99999")
+    assert r.handle({"op": "register", "endpoint": "host:99999"})["ok"] is False
+    assert r.handle({"op": "register"})["ok"] is False
+    assert r.handle({"op": "wat"})["ok"] is False
+    with pytest.raises(ValueError):
+        MembershipRegistry(heartbeat_interval_s=0.0)
+    with pytest.raises(ValueError):
+        MembershipRegistry(suspect_beats=5, dead_beats=3)
+
+
+def test_register_heartbeat_deregister_over_the_wire():
+    srv = MembershipServer("127.0.0.1", 0)
+    srv.serve_in_thread()
+    try:
+        ack = remote_mod.register(srv.endpoint, "127.0.0.1:7501", capacity=3,
+                                  meta={"rack": "r1"})
+        assert ack["heartbeat_interval_s"] == remote_mod.HEARTBEAT_INTERVAL_S
+        remote_mod.heartbeat(srv.endpoint, "127.0.0.1:7501")
+        members = remote_mod.fleet_members(srv.endpoint)
+        assert [(m["endpoint"], m["capacity"], m["meta"]) for m in members] == [
+            ("127.0.0.1:7501", 3, {"rack": "r1"})
+        ]
+        remote_mod.deregister(srv.endpoint, "127.0.0.1:7501")
+        assert remote_mod.fleet_members(srv.endpoint) == []
+        # the registry answers ping like any worker (wait_ready works on it)
+        assert remote_mod.wait_ready(srv.endpoint, timeout=5)
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_worker_registers_beats_and_deregisters_on_close():
+    srv = MembershipServer(
+        "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=0.1)
+    )
+    srv.serve_in_thread()
+    try:
+        w = WorkerServer("127.0.0.1", 0, capacity=2,
+                         register=srv.endpoint, heartbeat_interval_s=0.1)
+        w.serve_in_thread()
+        members = remote_mod.wait_members(srv.endpoint, count=1, timeout=10)
+        assert [m["endpoint"] for m in members] == [w.endpoint]
+        assert members[0]["capacity"] == 2
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:  # beats keep arriving
+            beats = {m["endpoint"]: m["beats"] for m in remote_mod.fleet_members(srv.endpoint)}
+            if beats.get(w.endpoint, 0) >= 2:
+                break
+            time.sleep(0.05)
+        assert beats[w.endpoint] >= 2
+        w.shutdown()
+        w.server_close()  # graceful leave: deregisters, no detection wait
+        assert remote_mod.fleet_members(srv.endpoint) == []
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+# -- 3. elastic scheduling ---------------------------------------------------
+def _instant_sink(name, log=None, delay=0.0):
+    def run(unit):
+        if delay:
+            time.sleep(delay)
+        if log is not None:
+            log.append((name, unit))
+        return (f"{name}:{unit}", False)
+
+    return Sink(name=name, capacity=1, run=run)
+
+
+def test_add_sink_mid_run_takes_dynamic_work():
+    log: list = []
+    sched = FleetScheduler([_instant_sink("slow", log, delay=0.05)], poll_s=0.01)
+
+    def join():
+        time.sleep(0.1)
+        sched.add_sink(_instant_sink("fast", log, delay=0.0))
+
+    threading.Thread(target=join, daemon=True).start()
+    outcomes = sched.run([WorkItem(i) for i in range(30)])
+    assert all(o.error is None for o in outcomes)
+    assert {name for name, _ in log} == {"slow", "fast"}
+    assert set(sched.live_sinks()) == {"slow", "fast"}
+
+
+def test_add_sink_does_not_take_pinned_work():
+    log: list = []
+    sched = FleetScheduler([_instant_sink("pinned", log, delay=0.02)], poll_s=0.01)
+
+    def join():
+        time.sleep(0.05)
+        sched.add_sink(_instant_sink("other", log))
+
+    threading.Thread(target=join, daemon=True).start()
+    outcomes = sched.run([WorkItem(i, sinks=(0,)) for i in range(10)])
+    assert all(o.error is None for o in outcomes)
+    assert {name for name, _ in log} == {"pinned"}
+
+
+def test_mark_dead_reenqueues_in_flight_and_queued_units():
+    hang = threading.Event()
+
+    def wedged(unit):
+        hang.wait(30)
+        return ("wedged", False)
+
+    log: list = []
+    sched = FleetScheduler(
+        [Sink("wedged", 1, wedged), _instant_sink("healthy", log, delay=0.01)],
+        poll_s=0.01,
+    )
+
+    def reap():
+        time.sleep(0.2)
+        sched.mark_dead("wedged")
+
+    threading.Thread(target=reap, daemon=True).start()
+    t0 = time.monotonic()
+    outcomes = sched.run([WorkItem(i) for i in range(10)])
+    elapsed = time.monotonic() - t0
+    hang.set()
+    assert all(o.error is None for o in outcomes)
+    assert elapsed < 10.0  # detection + re-dispatch, not a timeout wait
+    assert sum(o.redispatched for o in outcomes) >= 1  # the in-flight unit
+    assert all(o.sink == "healthy" for o in outcomes)
+    assert sched.live_sinks() == ["healthy"]
+
+
+def test_mark_dead_sole_pinned_sink_is_terminal_error_not_hang():
+    sched = FleetScheduler(
+        [_instant_sink("a", delay=0.2), _instant_sink("b")], poll_s=0.01
+    )
+
+    def reap():
+        time.sleep(0.05)
+        sched.mark_dead("a")
+
+    threading.Thread(target=reap, daemon=True).start()
+    outcomes = sched.run(
+        [WorkItem("pinned-to-a", cost=0.0, sinks=(0,)) for _ in range(3)]
+        + [WorkItem(f"free-{i}") for i in range(3)]
+    )
+    frees = [o for o in outcomes if str(o.item.unit).startswith("free")]
+    assert all(o.error is None for o in frees)
+    pinned = [o for o in outcomes if str(o.item.unit).startswith("pinned")]
+    # queued pinned units whose only sink died error out instead of hanging
+    assert any(o.error is not None for o in pinned) or all(
+        o.sink == "a" for o in pinned
+    )
+
+
+def test_fleet_watcher_applies_membership_deltas():
+    clock = FakeClock()
+    registry = MembershipRegistry(heartbeat_interval_s=1.0, now=clock)
+    srv = MembershipServer("127.0.0.1", 0, registry=registry)
+    srv.serve_in_thread()
+    try:
+        registry.register("127.0.0.1:7601")
+        sched = FleetScheduler([_instant_sink("127.0.0.1:7601")], poll_s=0.01)
+        watcher = FleetWatcher(srv.endpoint, sched, make_sink=_instant_sink)
+        # join: a new registration becomes a sink
+        registry.register("127.0.0.1:7602")
+        watcher.poll_once()
+        assert set(sched.live_sinks()) == {"127.0.0.1:7601", "127.0.0.1:7602"}
+        assert watcher.joined == ["127.0.0.1:7602"]
+        # leave: beats stop -> suspect -> marked dead
+        clock.t += 2.0
+        registry.heartbeat("127.0.0.1:7602")
+        clock.t += 1.5  # 7601 silent 3.5s (suspect); 7602 beat 1.5s ago (alive)
+        watcher.poll_once()
+        assert sched.live_sinks() == ["127.0.0.1:7602"]
+        assert watcher.left == ["127.0.0.1:7601"]
+        # a stale suspect row must not re-kill; a re-registration re-joins
+        registry.register("127.0.0.1:7601")
+        watcher.poll_once()
+        assert "127.0.0.1:7601" in sched.live_sinks()
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+# -- health sidecar ----------------------------------------------------------
+def test_health_store_persists_streaks_and_blacklists(tmp_path):
+    path = tmp_path / "health.json"
+    h = EndpointHealthStore(path)
+    for _ in range(BLACKLIST_AFTER):
+        h.observe_failure("w:7001")
+    h.observe_success("w:7002", latency_s=0.25)
+    h.flush()
+
+    h2 = EndpointHealthStore(path)  # cross-run: reload from disk
+    assert h2.blacklisted("w:7001")
+    assert not h2.blacklisted("w:7002")
+    rec = h2.get("w:7002")
+    assert rec["ewma_latency_s"] == pytest.approx(0.25)
+    assert rec["last_seen_unix"] > 0
+    # one success resets the streak (recovery is cheap)
+    h2.observe_success("w:7001")
+    assert not h2.blacklisted("w:7001")
+    assert h2.get("w:7001")["failures"] == BLACKLIST_AFTER  # history kept
+
+
+def test_health_store_survives_corrupt_file(tmp_path):
+    path = tmp_path / "health.json"
+    path.write_text("{not json")
+    h = EndpointHealthStore(path)
+    assert len(h) == 0
+    h.observe_failure("w:1234")
+    h.flush()
+    assert json.loads(path.read_text())["entries"]["w:1234"]["failures"] == 1
+
+
+def test_result_cache_owns_health_sidecar(tmp_path):
+    cache = ResultCache(tmp_path / "cache.json")
+    assert cache.health is not None
+    cache.health.observe_failure("w:7001")
+    cache.flush()
+    assert (tmp_path / "health.json").exists()
+    # clear() erases results but health evidence survives (like costs)
+    cache.clear()
+    again = ResultCache(tmp_path / "cache.json")
+    assert again.health.get("w:7001")["failures"] == 1
+
+
+def test_executor_blacklists_chronic_endpoint_only_with_alternatives(tmp_path):
+    d = make_plugin(tmp_path, "blt", 2)
+    reg.load_plugin_dir(d)
+    box = plugin_box("blt")
+    with LocalWorker(plugin_dirs=[d]) as w:
+        dead = "127.0.0.1:9"  # discard port: nothing listens
+        cache = ResultCache(tmp_path / "cache.json")
+        for _ in range(BLACKLIST_AFTER):
+            cache.health.observe_failure(dead)
+        ex = SweepExecutor(
+            platforms=["cpu-host"], workers=2, iters=1, warmup=0,
+            remote=f"{w.endpoint},{dead}", cache=cache,
+        )
+        res = ex.run_box(box)
+        assert res.stats.errors == 0
+        assert res.stats.blacklisted == 1  # the dead endpoint never got a sink
+        baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+        assert res.csv() == baseline.csv()
+
+
+# -- 4. fault recovery (kill / hang / slow / partial) ------------------------
+@pytest.fixture()
+def fleet_env(tmp_path):
+    """A 2-worker registered fleet over a deterministic plugin task."""
+    d = make_plugin(tmp_path, "flt", 3)
+    reg.load_plugin_dir(d)
+    box = plugin_box("flt")
+    baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+    srv = MembershipServer(
+        "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=0.2)
+    )
+    srv.serve_in_thread()
+    workers = [
+        LocalWorker(plugin_dirs=[d], register=srv.endpoint,
+                    heartbeat_interval_s=0.2, allow_faults=True).__enter__()
+        for _ in range(2)
+    ]
+    remote_mod.wait_members(srv.endpoint, count=2, timeout=30)
+    # max_entries=0: flush evicts raw entries, so every pass re-executes
+    # while costs/health evidence still accumulates in the sidecars.
+    cache = ResultCache(tmp_path / "cache.json", max_entries=0)
+    ex = SweepExecutor(
+        platforms=["cpu-host"], workers=2, iters=1, warmup=0,
+        fleet_registry=srv.endpoint, cache=cache,
+    )
+    first = ex.run_box(box)  # seed the costs sidecar (unit deadlines)
+    assert first.csv() == baseline.csv()
+    cache.clear()
+    try:
+        yield {"box": box, "baseline": baseline, "ex": ex, "cache": cache,
+               "srv": srv, "workers": workers, "plugin": d}
+    finally:
+        for w in workers:
+            w.__exit__(None, None, None)
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_worker_killed_mid_unit_recovers_fast(fleet_env):
+    inject(fleet_env["workers"][0].endpoint, FaultSpec("kill"))
+    t0 = time.monotonic()
+    res = fleet_env["ex"].run_box(fleet_env["box"])
+    elapsed = time.monotonic() - t0
+    assert res.stats.errors == 0
+    assert res.csv() == fleet_env["baseline"].csv()
+    assert elapsed < 10.0, f"kill detection took {elapsed:.1f}s"
+
+
+def test_worker_hung_mid_unit_recovers_within_bound(fleet_env):
+    # hang: accepts the unit, never replies — but KEEPS heartbeating, so
+    # only deadlines/speculation (not membership) can catch it.
+    inject(fleet_env["workers"][1].endpoint, FaultSpec("hang", seconds=300))
+    t0 = time.monotonic()
+    res = fleet_env["ex"].run_box(fleet_env["box"])
+    elapsed = time.monotonic() - t0
+    assert res.stats.errors == 0
+    assert res.csv() == fleet_env["baseline"].csv()
+    assert elapsed < 10.0, f"hang detection took {elapsed:.1f}s"
+
+
+def test_worker_slow_then_recovers_is_not_blacklisted(fleet_env):
+    ep = fleet_env["workers"][0].endpoint
+    inject(ep, FaultSpec("slow", seconds=0.5, units=2))
+    res = fleet_env["ex"].run_box(fleet_env["box"])
+    assert res.stats.errors == 0
+    assert res.csv() == fleet_env["baseline"].csv()
+    health = fleet_env["cache"].health
+    assert not health.blacklisted(ep)  # transient slowness is not failure
+    rec = health.get(ep)
+    assert rec is None or rec["consecutive_failures"] < BLACKLIST_AFTER
+
+
+def test_partial_garbage_on_wire_recovers(fleet_env):
+    # truncated JSON + dropped connection on two units: the transport's
+    # fresh-dial retry absorbs it without losing either unit.
+    inject(fleet_env["workers"][0].endpoint, FaultSpec("partial", units=2))
+    res = fleet_env["ex"].run_box(fleet_env["box"])
+    assert res.stats.errors == 0
+    assert res.csv() == fleet_env["baseline"].csv()
+
+
+def test_replacement_worker_joins_mid_sweep(fleet_env):
+    """Kill one worker AND register a replacement while the sweep runs:
+    the watcher must fold the joiner in and the report stay identical."""
+    inject(fleet_env["workers"][0].endpoint, FaultSpec("kill"))
+    spare = LocalWorker(
+        plugin_dirs=[fleet_env["plugin"]],
+        register=fleet_env["srv"].endpoint,
+        heartbeat_interval_s=0.2,
+        allow_faults=True,
+    )
+
+    def late_join():
+        time.sleep(0.1)
+        spare.__enter__()
+
+    joiner = threading.Thread(target=late_join, daemon=True)
+    joiner.start()
+    try:
+        res = fleet_env["ex"].run_box(fleet_env["box"])
+        assert res.stats.errors == 0
+        assert res.csv() == fleet_env["baseline"].csv()
+    finally:
+        joiner.join()
+        spare.__exit__(None, None, None)
+
+
+# -- fault harness + config surface ------------------------------------------
+def test_fault_plan_is_seed_deterministic():
+    a = [FaultPlan(7).draw() for _ in range(20)]
+    b = [FaultPlan(7).draw() for _ in range(20)]
+    assert a == b
+    assert {s.mode for s in a} <= {"kill", "hang", "slow", "partial"}
+    assert [FaultPlan(9).draw() for _ in range(20)] != a  # seed changes the stream
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("explode")
+    with pytest.raises(ValueError):
+        FaultSpec("slow", seconds=-1)
+    with pytest.raises(ValueError):
+        FaultSpec("slow", units=0)
+
+
+def test_worker_without_allow_faults_refuses_injection():
+    srv = WorkerServer("127.0.0.1", 0)  # allow_faults defaults OFF
+    srv.serve_in_thread()
+    try:
+        with pytest.raises(RemoteExecutionError, match="disabled"):
+            inject(srv.endpoint, FaultSpec("kill"))
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_remote_and_registry_are_mutually_exclusive():
+    errors: list[str] = []
+    cfg = config_mod.SweepConfig(remote="h:1", registry="h:2")
+    config_mod.validate_sweep(cfg, errors.append, ping_remote=False)
+    assert any("mutually exclusive" in e for e in errors)
+    with pytest.raises(ValueError):
+        SweepExecutor(remote="h:1", fleet_registry="h:2")
+
+
+def test_registry_flag_threads_through_config(tmp_path):
+    import argparse
+
+    p = argparse.ArgumentParser()
+    config_mod.add_sweep_args(p)
+    ns = p.parse_args(["--registry", "127.0.0.1:7170"])
+    cfg = config_mod.SweepConfig.from_args(ns)
+    assert cfg.registry == "127.0.0.1:7170"
+    errors: list[str] = []
+    config_mod.validate_sweep(cfg, errors.append, ping_remote=False)
+    assert errors == []
+    bad = config_mod.SweepConfig(registry="host:99999")
+    config_mod.validate_sweep(bad, errors.append, ping_remote=False)
+    assert any("65535" in e for e in errors)
+
+
+def test_runner_cli_runs_box_through_registry(tmp_path, capsys):
+    from repro.core import runner as runner_mod
+
+    d = make_plugin(tmp_path, "clireg", 2)
+    box_path = tmp_path / "box.json"
+    box_path.write_text(json.dumps({
+        "name": "clireg_box",
+        "tasks": [{"task": "clireg", "params": {"a": [1, 2, 3], "b": ["x", "y"]}}],
+    }))
+    srv = MembershipServer(
+        "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=0.2)
+    )
+    srv.serve_in_thread()
+    try:
+        with LocalWorker(plugin_dirs=[d], register=srv.endpoint,
+                         heartbeat_interval_s=0.2):
+            remote_mod.wait_members(srv.endpoint, count=1, timeout=30)
+            out = tmp_path / "rows.csv"
+            rc = runner_mod.main([
+                "--box", str(box_path), "--plugin-dir", str(d),
+                "--iters", "1", "--warmup", "0", "--workers", "2",
+                "--registry", srv.endpoint, "--out", str(out),
+            ])
+            assert rc == 0
+            assert out.read_text().count("\n") > 1
+    finally:
+        srv.shutdown()
+        srv.server_close()

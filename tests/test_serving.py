@@ -90,6 +90,53 @@ def test_request_queue_take_matching_preserves_order():
     assert list(q) == [(1, "b"), (4, "b"), (5, "a")]  # untouched order
 
 
+def test_request_queue_thread_safe_under_hammer():
+    """Regression: submit/take_matching raced before the internal lock.
+
+    8 submitter threads push disjoint uid ranges while 4 drainers spin
+    take_matching; afterwards every admitted request must have been taken
+    exactly once and the counters must satisfy offered == admitted + shed.
+    """
+    import threading
+
+    q = RequestQueue(depth=64)
+    n_submitters, per_thread = 8, 500
+    taken: list = []
+    taken_lock = threading.Lock()
+    done = threading.Event()
+
+    def submitter(base):
+        for i in range(per_thread):
+            q.submit((base + i, "a" if i % 2 else "b"))
+
+    def drainer():
+        while not done.is_set() or len(q):
+            got = q.take_matching(lambda r: True, limit=7)
+            if got:
+                with taken_lock:
+                    taken.extend(got)
+
+    drainers = [threading.Thread(target=drainer) for _ in range(4)]
+    for t in drainers:
+        t.start()
+    submitters = [
+        threading.Thread(target=submitter, args=(k * per_thread,))
+        for k in range(n_submitters)
+    ]
+    for t in submitters:
+        t.start()
+    for t in submitters:
+        t.join()
+    done.set()
+    for t in drainers:
+        t.join()
+
+    assert q.offered == n_submitters * per_thread
+    assert q.offered == q.admitted + q.shed  # the invariant the lock protects
+    assert len(taken) == q.admitted  # nothing lost, nothing duplicated
+    assert len({uid for uid, _ in taken}) == len(taken)
+
+
 def test_server_sheds_at_oversaturation(plans):
     server = QueryServer(plans, queue_depth=2, max_batch=4)
     reqs = [
