@@ -92,7 +92,9 @@ def _box(name: str) -> Box:
     )
 
 
-def _fleet_executor(registry_endpoint: str, cache: ResultCache, workers: int) -> SweepExecutor:
+def _fleet_executor(
+    registry_endpoint: str, cache: ResultCache, workers: int, transport: str = "async"
+) -> SweepExecutor:
     return SweepExecutor(
         platforms=["cpu-host"],
         workers=workers,
@@ -100,10 +102,13 @@ def _fleet_executor(registry_endpoint: str, cache: ResultCache, workers: int) ->
         warmup=0,
         fleet_registry=registry_endpoint,
         cache=cache,
+        transport=transport,
     )
 
 
-def phase_hang_bound(plugin: Path, box: Box, baseline_csv: str, tmp: Path) -> dict:
+def phase_hang_bound(
+    plugin: Path, box: Box, baseline_csv: str, tmp: Path, transport: str
+) -> dict:
     """Measure the pass-time overhead of one wedged worker."""
     srv = MembershipServer(
         "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=BEAT_S)
@@ -119,7 +124,7 @@ def phase_hang_bound(plugin: Path, box: Box, baseline_csv: str, tmp: Path) -> di
     try:
         wait_members(srv.endpoint, count=2, timeout=60)
         cache = ResultCache(tmp / "hang-cache.json", max_entries=0)
-        ex = _fleet_executor(srv.endpoint, cache, workers=2)
+        ex = _fleet_executor(srv.endpoint, cache, workers=2, transport=transport)
 
         t0 = time.monotonic()
         clean = ex.run_box(box)  # also seeds the costs sidecar -> deadlines
@@ -161,6 +166,7 @@ def phase_soak(
     duration_s: float,
     seed: int,
     fault_period_s: float,
+    transport: str,
 ) -> dict:
     """Back-to-back sweep passes under seeded random fleet chaos."""
     srv = MembershipServer(
@@ -173,7 +179,7 @@ def phase_soak(
             heartbeat_interval_s=BEAT_S,
         ) as fleet:
             cache = ResultCache(tmp / "soak-cache.json", max_entries=0)
-            ex = _fleet_executor(srv.endpoint, cache, workers=size)
+            ex = _fleet_executor(srv.endpoint, cache, workers=size, transport=transport)
             ex.run_box(box)  # seed cost evidence before the chaos starts
             cache.clear()
 
@@ -224,6 +230,10 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--duration", type=float, default=60.0, metavar="SECONDS")
     p.add_argument("--seed", type=int, default=7)
     p.add_argument("--fault-period", type=float, default=1.0, metavar="SECONDS")
+    p.add_argument(
+        "--transport", choices=("threaded", "async"), default="async",
+        help="fleet sink wire strategy the soak drives (default: async)",
+    )
     args = p.parse_args(argv)
 
     with tempfile.TemporaryDirectory(prefix="fleet-soak-") as tmpdir:
@@ -238,7 +248,7 @@ def main(argv: list[str] | None = None) -> int:
         baseline_csv = baseline.csv()
 
         print("# phase 2/3: hang detection bound", flush=True)
-        hang = phase_hang_bound(plugin, box, baseline_csv, tmp)
+        hang = phase_hang_bound(plugin, box, baseline_csv, tmp, args.transport)
         print(
             f"#   clean={hang['clean_pass_s']}s hung={hang['hang_pass_s']}s "
             f"overhead={hang['hang_overhead_s']}s (bound {HANG_BOUND_S}s)",
@@ -254,6 +264,7 @@ def main(argv: list[str] | None = None) -> int:
             plugin, box, baseline_csv, tmp,
             size=args.workers, duration_s=args.duration,
             seed=args.seed, fault_period_s=args.fault_period,
+            transport=args.transport,
         )
         print(
             f"#   {soak['passes']} passes, {soak['faults_injected']} faults "
@@ -264,6 +275,7 @@ def main(argv: list[str] | None = None) -> int:
 
     bench = {
         "bench": "fleet_soak",
+        "transport": args.transport,
         "units": box.total_tests(),
         "hang_bound": hang,
         "soak": soak,

@@ -1,0 +1,331 @@
+"""Transport scale: async multiplexed dispatch vs threaded pullers at 64 workers.
+
+The async-transport layer's acceptance bar, run as a benchmark so CI pins
+it per commit:
+
+  1. **Baseline** — run the fleet box sequentially (no fleet) for the
+     reference report every later phase must byte-match.
+  2. **Fleet sweep** — spawn a 64-worker loopback fleet as ONE subprocess
+     (``python -m repro.core.remote fleet --count 64``; a single
+     comma-joined announce line names every endpoint), then drive the same
+     box through it twice: once on the ``threaded`` transport (one puller
+     thread per capacity slot — the pre-async baseline) and once on
+     ``async`` (one dispatcher thread plus the shared selectors IO loop,
+     one multiplexed connection per endpoint).  Both reports must be
+     byte-identical to the sequential baseline and to each other, the
+     threaded pass must have spawned >= worker-count client threads, and
+     the async pass must stay within :data:`ASYNC_THREAD_BOUND`.
+  3. **Steal win** — a deliberately imbalanced 2-shard split (every unit
+     hash-assigned to shard 1 sleeps ~10x longer than shard 0's, via a
+     param-dependent sleep table the plugin reads per call) runs twice with
+     a shared result cache: without ``--steal`` the pass is bounded by the
+     slow shard; with it, the drained shard 0 runner claims shard 1's
+     leftovers through cache claim records and the measured wall clock must
+     drop.  Merged reports byte-match the baseline both times.
+
+Results land in a BENCH JSON (``--out``): units/s and client dispatch
+thread count per transport, plus the no-steal/steal wall clocks and the
+stolen-unit count.
+
+Usage: python -m benchmarks.transport_scale [--out BENCH_8.json]
+       [--workers 64]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+from repro.core import registry as reg
+from repro.core.box import Box
+from repro.core.cache import ResultCache
+from repro.core.executor import SweepExecutor, SweepResult
+from repro.core.report import merge_shard_reports, to_csv
+from repro.core.shard import ShardSpec
+
+#: Max client-side dispatch/IO threads the async transport may use for a
+#: whole fleet, however many workers it has (1 dispatcher + 1 shared IO
+#: loop today; the bound leaves headroom, not a thread per endpoint).
+ASYNC_THREAD_BOUND = 4
+
+#: Per-unit sleep for shard 1's units vs shard 0's in the steal phase —
+#: the ~10x imbalance that makes leftovers worth claiming.
+HEAVY_S = 0.25
+LIGHT_S = 0.02
+
+
+def _make_fleet_plugin(root: Path, name: str) -> Path:
+    """64-unit deterministic task: metrics are pure functions of params, so
+    reports byte-compare no matter which worker (or transport) ran what."""
+    d = root / name
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "task.json").write_text(
+        json.dumps(
+            {
+                "name": name,
+                "param_space": {
+                    "a": list(range(1, 17)),
+                    "b": ["w", "x", "y", "z"],
+                },
+                "metrics": ["avg_latency_us", "ops_per_s"],
+            }
+        )
+    )
+    (d / "run.py").write_text(
+        # Injective in params (101 is coprime to every multiplier) so a
+        # demux bug that swapped two responses would flip a metric cell.
+        "import time\n"
+        "def main(ctx, params):\n"
+        "    time.sleep(0.02)\n"
+        "    mult = {'w': 1, 'x': 2, 'y': 3, 'z': 5}[params['b']]\n"
+        "    t = 1e-6 * (101 * params['a'] + mult)\n"
+        "    return {'times_s': [t, 2 * t], 'ops_per_iter': 100.0}\n"
+    )
+    return d
+
+
+def _make_steal_plugin(root: Path, name: str) -> Path:
+    """Like the fleet plugin, but the sleep is a param-dependent table read
+    per call from ``heavy.json`` — written AFTER the shard partition is
+    known, so shard 1's units can be made ~10x heavier than shard 0's
+    without touching the reported metrics (sleep never enters them)."""
+    d = root / name
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "task.json").write_text(
+        json.dumps(
+            {
+                "name": name,
+                "param_space": {"a": list(range(24)), "b": ["s"]},
+                "metrics": ["avg_latency_us", "ops_per_s"],
+            }
+        )
+    )
+    (d / "heavy.json").write_text("[]")
+    (d / "run.py").write_text(
+        "import json, pathlib, time\n"
+        "_HERE = pathlib.Path(__file__).resolve().parent\n"
+        "def main(ctx, params):\n"
+        "    heavy = set(json.loads((_HERE / 'heavy.json').read_text()))\n"
+        f"    time.sleep({HEAVY_S} if params['a'] in heavy else {LIGHT_S})\n"
+        "    t = 1e-6 * (101 * params['a'] + 7)\n"
+        "    return {'times_s': [t, 2 * t], 'ops_per_iter': 100.0}\n"
+    )
+    return d
+
+
+def _box(name: str, space: dict) -> Box:
+    return Box.from_dict(
+        {"name": f"{name}_box", "tasks": [{"task": name, "params": space}]}
+    )
+
+
+def _spawn_fleet(count: int, plugin: Path) -> tuple[subprocess.Popen, list[str]]:
+    """One subprocess serving ``count`` loopback workers; returns it plus
+    the endpoint list parsed from the single comma-joined announce line."""
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.core.remote", "fleet",
+            "--count", str(count), "--capacity", "1",
+            "--plugin-dir", str(plugin),
+        ],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+        text=True,
+    )
+    assert proc.stdout is not None
+    deadline = time.monotonic() + 120
+    while True:
+        line = proc.stdout.readline()
+        if line.startswith("listening on "):
+            endpoints = line[len("listening on "):].strip().split(",")
+            assert len(endpoints) == count, f"announced {len(endpoints)}/{count}"
+            return proc, endpoints
+        if proc.poll() is not None or time.monotonic() > deadline:
+            raise RuntimeError(f"fleet subprocess died before announcing: {line!r}")
+
+
+def phase_fleet(plugin: Path, box: Box, baseline_csv: str, workers: int) -> dict:
+    """Threaded vs async over the same 64-worker loopback fleet."""
+    proc, endpoints = _spawn_fleet(workers, plugin)
+    try:
+        passes: dict[str, dict] = {}
+        csvs: dict[str, str] = {}
+        for transport in ("threaded", "async"):
+            ex = SweepExecutor(
+                platforms=["cpu-host"], workers=workers, iters=1, warmup=0,
+                remote=",".join(endpoints), transport=transport,
+            )
+            t0 = time.monotonic()
+            res = ex.run_box(box)
+            wall = time.monotonic() - t0
+            assert res.stats.errors == 0, (
+                f"{transport} pass had {res.stats.errors} errors"
+            )
+            assert res.csv() == baseline_csv, (
+                f"{transport} fleet report diverged from the sequential baseline"
+            )
+            csvs[transport] = res.csv()
+            passes[transport] = {
+                "wall_s": round(wall, 3),
+                "units_per_s": round(res.stats.total / wall, 1),
+                "dispatch_threads": res.stats.dispatch_threads,
+            }
+        assert csvs["threaded"] == csvs["async"]
+        assert passes["threaded"]["dispatch_threads"] >= workers, (
+            f"threaded transport spawned only "
+            f"{passes['threaded']['dispatch_threads']} pullers for {workers} slots"
+        )
+        assert passes["async"]["dispatch_threads"] <= ASYNC_THREAD_BOUND, (
+            f"async transport used {passes['async']['dispatch_threads']} client "
+            f"threads — bound is {ASYNC_THREAD_BOUND}"
+        )
+        return {
+            "workers": workers,
+            "units": box.total_tests(),
+            "threaded": passes["threaded"],
+            "async": passes["async"],
+            "async_thread_bound": ASYNC_THREAD_BOUND,
+            "identical": True,
+        }
+    finally:
+        proc.terminate()
+        proc.wait(timeout=30)
+
+
+def _run_shard_pair(
+    box: Box, cache_path: Path, steal: bool
+) -> tuple[float, list[SweepResult]]:
+    """Run shards 0/2 and 1/2 concurrently against a shared cache file;
+    wall clock is until BOTH finish (what a real co-scheduled pair pays)."""
+    results: list[SweepResult | None] = [None, None]
+    errors: list[BaseException] = []
+
+    def run(i: int) -> None:
+        try:
+            # NOT max_entries=0: steal coordination lives in the shared
+            # cache file, and an evict-everything flush at the end of the
+            # first-finishing shard would wipe its sibling's view of what
+            # has already been claimed and published.
+            ex = SweepExecutor(
+                platforms=["cpu-host"], iters=1, warmup=0,
+                cache=ResultCache(cache_path), steal=steal,
+            )
+            results[i] = ex.run_box(box, shard=ShardSpec(i, 2))
+        except BaseException as e:  # surface in the main thread
+            errors.append(e)
+
+    threads = [threading.Thread(target=run, args=(i,)) for i in range(2)]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    if errors:
+        raise errors[0]
+    assert all(r is not None for r in results)
+    return wall, results  # type: ignore[return-value]
+
+
+def phase_steal(plugin: Path, box: Box, tmp: Path) -> dict:
+    """Measure the wall-clock win of cache-mediated stealing on an
+    imbalanced 2-shard split."""
+    # Learn the hash partition first, THEN make shard 1's units heavy: the
+    # sleep table never enters the metrics, so skeys (and the partition)
+    # don't move when it changes.
+    probe = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0)
+    mine, foreign = probe._expand_partition(box, probe.platforms, ShardSpec(0, 2))
+    assert mine and foreign, "degenerate hash partition: one shard owns everything"
+    (plugin / "heavy.json").write_text(json.dumps(sorted(u.params["a"] for u in foreign)))
+
+    baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+    assert baseline.stats.errors == 0
+    baseline_csv = baseline.csv()
+
+    walls: dict[str, float] = {}
+    stolen = 0
+    for label, steal in (("nosteal", False), ("steal", True)):
+        wall, results = _run_shard_pair(box, tmp / f"{label}-cache.json", steal)
+        for i, res in enumerate(results):
+            assert res.stats.errors == 0, f"{label} shard {i} had errors"
+        merged = to_csv(merge_shard_reports([r.rows for r in results], box=box))
+        assert merged == baseline_csv, f"{label} merged report diverged from baseline"
+        walls[label] = wall
+        if steal:
+            stolen = sum(r.stats.stolen for r in results)
+    assert stolen > 0, "steal pass claimed nothing despite the imbalance"
+    assert walls["steal"] < walls["nosteal"], (
+        f"stealing did not win: {walls['steal']:.2f}s vs {walls['nosteal']:.2f}s"
+    )
+    return {
+        "units": box.total_tests(),
+        "shard0_units": len(mine),
+        "shard1_units": len(foreign),
+        "heavy_sleep_s": HEAVY_S,
+        "light_sleep_s": LIGHT_S,
+        "nosteal_wall_s": round(walls["nosteal"], 3),
+        "steal_wall_s": round(walls["steal"], 3),
+        "speedup": round(walls["nosteal"] / walls["steal"], 2),
+        "stolen": stolen,
+        "identical": True,
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="benchmarks.transport_scale",
+        description="async multiplexed fleet transport scale + steal win",
+    )
+    p.add_argument("--out", default=None, help="write BENCH JSON here")
+    p.add_argument("--workers", type=int, default=64)
+    args = p.parse_args(argv)
+
+    with tempfile.TemporaryDirectory(prefix="transport-scale-") as tmpdir:
+        tmp = Path(tmpdir)
+        fleet_plugin = _make_fleet_plugin(tmp, "scale")
+        reg.load_plugin_dir(fleet_plugin)
+        fleet_box = _box("scale", {"a": list(range(1, 17)), "b": ["w", "x", "y", "z"]})
+
+        print("# phase 1/3: sequential baseline", flush=True)
+        baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(
+            fleet_box
+        )
+        assert baseline.stats.errors == 0
+
+        print(f"# phase 2/3: {args.workers}-worker loopback fleet sweep", flush=True)
+        fleet = phase_fleet(fleet_plugin, fleet_box, baseline.csv(), args.workers)
+        print(
+            f"#   threaded: {fleet['threaded']['units_per_s']} units/s with "
+            f"{fleet['threaded']['dispatch_threads']} client threads; "
+            f"async: {fleet['async']['units_per_s']} units/s with "
+            f"{fleet['async']['dispatch_threads']} — byte-identical",
+            flush=True,
+        )
+
+        print("# phase 3/3: 2-shard steal win", flush=True)
+        steal_plugin = _make_steal_plugin(tmp, "scale_steal")
+        reg.load_plugin_dir(steal_plugin)
+        steal_box = _box("scale_steal", {"a": list(range(24)), "b": ["s"]})
+        steal = phase_steal(steal_plugin, steal_box, tmp)
+        print(
+            f"#   nosteal={steal['nosteal_wall_s']}s steal={steal['steal_wall_s']}s "
+            f"({steal['speedup']}x, {steal['stolen']} units stolen) — byte-identical",
+            flush=True,
+        )
+
+    bench = {"bench": "transport_scale", "fleet": fleet, "steal": steal}
+    text = json.dumps(bench, indent=1) + "\n"
+    if args.out:
+        Path(args.out).write_text(text)
+    else:
+        sys.stdout.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -35,6 +35,19 @@ directory followed by ``os.replace``, so neither a crash mid-write nor two
 processes flushing the same path concurrently can leave a truncated or
 interleaved JSON file behind.
 
+The cache is also the coordination surface for **work stealing** between
+shard runners (``SweepExecutor(steal=True)``): a runner whose own slice
+drained claims a sibling shard's leftover unit by creating a *claim record*
+— an ``O_EXCL`` exclusive-create file named by the unit's shard key under
+``<cache>.claims/`` — which is a true filesystem compare-and-swap (exactly
+one runner's create succeeds).  The winner executes the unit and
+``publish``es the result (a read-merge-write of that single key, so
+concurrent publishers never clobber each other), the owner sees the claim
+and ``refresh``es the key from disk instead of waiting; if both end up
+executing anyway, the duplicate dedupes through the shared cache-key
+identity exactly like a lost speculation race.  ``clear()`` removes claim
+records with the entries, so a fresh pass starts with a clean steal table.
+
 Thread-safe: the executor calls ``get``/``put`` from worker threads.
 """
 from __future__ import annotations
@@ -426,6 +439,86 @@ class ResultCache:
         with self._lock:
             return {k: dict(v) for k, v in self._entries.items()}
 
+    # -- cross-runner coordination (work stealing) -------------------------
+    def _claims_dir(self) -> Path:
+        return self.path.with_name(self.path.name + ".claims")
+
+    def try_claim(self, key: str, owner: str) -> bool:
+        """Atomically claim a unit for execution; True iff WE won.
+
+        The claim is an ``O_EXCL`` exclusive-create file — a filesystem
+        compare-and-swap, so exactly one of any number of racing runners
+        (threads or processes) gets True.  Claims persist for the life of
+        the cache file (``clear()`` drops them): once a claimed unit's
+        result is published, later runners find it by cache key and never
+        look at the claim again.
+        """
+        d = self._claims_dir()
+        try:
+            d.mkdir(parents=True, exist_ok=True)
+            with open(d / key, "x") as f:
+                json.dump({"owner": str(owner), "claimed_unix": time.time()}, f)
+            return True
+        except FileExistsError:
+            return False
+        except OSError:
+            # Unwritable claims dir (read-only cache mount): stealing is an
+            # optimization — degrade to "someone else has it".
+            return False
+
+    def claim_owner(self, key: str) -> str | None:
+        """Who claimed ``key``, or None if unclaimed (cheap stat + read)."""
+        try:
+            d = json.loads((self._claims_dir() / key).read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+        return str(d.get("owner", "")) or None
+
+    def claimed(self, key: str) -> bool:
+        return (self._claims_dir() / key).exists()
+
+    def refresh(self, key: str) -> dict[str, float] | None:
+        """Re-read ``key`` from the ON-DISK cache (another runner may have
+        published it since we loaded); folds a found entry into memory."""
+        try:
+            d = json.loads(self.path.read_text())
+        except (OSError, json.JSONDecodeError):
+            return None
+        if d.get("version") != CACHE_VERSION:
+            return None
+        entry = (d.get("entries") or {}).get(key)
+        if not isinstance(entry, dict) or "metrics" not in entry:
+            return None
+        with self._lock:
+            self._entries.setdefault(key, entry)
+            self.hits += 1
+        return dict(entry["metrics"])
+
+    def publish(self, key: str) -> None:
+        """Write ONE key's in-memory entry through to disk, read-merge-write.
+
+        Unlike ``flush`` (which rewrites the whole file from this process's
+        memory and would last-writer-win away entries other runners wrote),
+        this merges the single key into whatever is on disk right now —
+        concurrent publishers of different keys both survive.  The write
+        itself is the same atomic mkstemp+replace as every other writer.
+        (Two publishers racing inside the read->replace window can still
+        drop one entry; that costs the owner a duplicate execution on its
+        next miss, never a wrong report — same dedupe law as speculation.)
+        """
+        with self._lock:
+            entry = self._entries.get(key)
+        if entry is None:
+            return
+        try:
+            d = json.loads(self.path.read_text())
+            if d.get("version") != CACHE_VERSION or not isinstance(d.get("entries"), dict):
+                d = {"version": CACHE_VERSION, "entries": {}}
+        except (OSError, json.JSONDecodeError):
+            d = {"version": CACHE_VERSION, "entries": {}}
+        d["entries"][key] = entry
+        _atomic_write_text(self.path, json.dumps(d, indent=1, default=str))
+
     # -- persistence -------------------------------------------------------
     def _trim(self) -> int:
         """Apply the eviction policy (caller holds the lock); returns drops."""
@@ -469,7 +562,9 @@ class ResultCache:
     def clear(self) -> None:
         """Erase the cached RESULTS.  The cost sidecar deliberately
         survives: it is aggregate scheduling evidence, not results, and
-        outliving eviction/clearing is its whole purpose."""
+        outliving eviction/clearing is its whole purpose.  Claim records go
+        with the entries — a stale claim against a cleared result would
+        silently disable stealing for that unit on the next pass."""
         with self._lock:
             had_entries = bool(self._entries)
             self._entries.clear()
@@ -477,6 +572,13 @@ class ResultCache:
             # cache that never touched disk must not create an empty file.
             if had_entries or self.path.exists():
                 self._dirty = True
+        d = self._claims_dir()
+        if d.is_dir():
+            for f in d.iterdir():
+                try:
+                    f.unlink()
+                except OSError:
+                    pass
         self.flush()
 
     def __len__(self) -> int:

@@ -47,6 +47,9 @@ class SweepConfig:
     shard_plan: bool = False
     remote: str | None = None
     registry: str | None = None
+    transport: str = "async"
+    max_inflight: int = 0
+    steal: bool = False
     cache_path: str | None = None
     no_cache: bool = False
     cache_max_entries: int | None = None
@@ -68,6 +71,9 @@ class SweepConfig:
             shard_plan=getattr(ns, "shard_plan", False),
             remote=ns.remote,
             registry=getattr(ns, "registry", None),
+            transport=getattr(ns, "transport", "async"),
+            max_inflight=getattr(ns, "max_inflight", 0),
+            steal=getattr(ns, "steal", False),
             cache_path=ns.cache_path,
             no_cache=ns.no_cache,
             cache_max_entries=ns.cache_max_entries,
@@ -147,6 +153,24 @@ def add_sweep_args(
         "events (mutually exclusive with --remote)",
     )
     g.add_argument(
+        "--transport", choices=("threaded", "async"), default="async",
+        help="fleet wire strategy: async (default) multiplexes every unit "
+        "over one persistent connection per worker on a single IO loop; "
+        "threaded keeps one puller thread + connection per in-flight unit",
+    )
+    g.add_argument(
+        "--max-inflight", type=int, default=0, metavar="N",
+        help="async transport: cap in-flight units per worker at N instead "
+        "of the worker's advertised capacity (0 = advertised)",
+    )
+    g.add_argument(
+        "--steal", action="store_true",
+        help="after draining this shard's slice, claim sibling shards' "
+        "unfinished units through the shared --cache (exclusive claim "
+        "records keep the merged report byte-identical); needs --shard "
+        "and a shared cache file",
+    )
+    g.add_argument(
         "--cache", "--cache-file", dest="cache_path", default=None,
         metavar="PATH", help="persistent result cache file",
     )
@@ -189,6 +213,12 @@ def validate_sweep(
             error(str(e))
     if cfg.shard_plan and shard is None:
         error("--shard-plan needs --shard I/N[@W] for the shard count/weights")
+    if cfg.steal and shard is None:
+        error("--steal coordinates between shards: it needs --shard I/N "
+              "(and every shard runner pointing at one shared --cache file)")
+    if cfg.steal and cfg.no_cache:
+        error("--steal coordinates through the shared result cache; it "
+              "cannot work with --no-cache")
     if cfg.remote and cfg.registry:
         error("--remote and --registry are mutually exclusive: an explicit "
               "endpoint list or a discovered fleet, not both")
@@ -268,6 +298,9 @@ def make_executor(
         weighted_shard=cfg.weighted_shard,
         schedule=cfg.schedule,
         straggler_factor=cfg.straggler_factor,
+        transport=cfg.transport,
+        max_inflight=cfg.max_inflight,
+        steal=cfg.steal,
     )
 
 

@@ -116,6 +116,13 @@ class SweepStats:
     # Fleet endpoints excluded at startup by the health sidecar's
     # consecutive-failure streak (cross-run straggler blacklisting).
     blacklisted: int = 0
+    # Sibling shards' leftover units this runner claimed and executed
+    # through the shared cache (--steal; see ResultCache.try_claim).
+    stolen: int = 0
+    # Client-side dispatch/puller threads the scheduler created for this
+    # sweep (monotonic count): O(sum of sink capacities) on the threaded
+    # transport, O(1) dispatcher (+ the shared async IO loop) on async.
+    dispatch_threads: int = 0
 
 
 @dataclass
@@ -171,6 +178,9 @@ class SweepExecutor:
         straggler_factor: float = DEFAULT_STRAGGLER_FACTOR,
         min_time_s: float = 0.0,
         fleet_registry: str | None = None,
+        transport: str = "async",
+        max_inflight: int = 0,
+        steal: bool = False,
     ):
         if pool not in ("thread", "process"):
             raise ValueError(f"pool must be 'thread' or 'process', got {pool!r}")
@@ -178,6 +188,10 @@ class SweepExecutor:
             raise ValueError(f"schedule must be 'static' or 'dynamic', got {schedule!r}")
         if straggler_factor <= 0:
             raise ValueError(f"straggler_factor must be > 0, got {straggler_factor}")
+        if transport not in ("threaded", "async"):
+            raise ValueError(f"transport must be 'threaded' or 'async', got {transport!r}")
+        if max_inflight < 0:
+            raise ValueError(f"max_inflight must be >= 0, got {max_inflight}")
         self._platforms_explicit = platforms is not None
         self.platforms = [resolve(p) for p in (platforms or ["default"])]
         if len({p.name for p in self.platforms}) != len(self.platforms):
@@ -211,6 +225,28 @@ class SweepExecutor:
         # "static": the original up-front LPT plan into a fixed pool.
         self.schedule = schedule
         self.straggler_factor = float(straggler_factor)
+        # Fleet-sink wire strategy.  "async" (default): callback sinks over
+        # the shared repro.core.aiotransport event loop — one dispatcher
+        # thread and one persistent multiplexed connection per endpoint.
+        # "threaded": the original one-puller-thread-per-capacity-slot path
+        # (kept as a fallback and as the benchmark baseline).
+        self.transport = transport
+        # Per-endpoint in-flight admission override for async sinks; 0 uses
+        # each worker's advertised capacity.  Values above capacity queue
+        # server-side — note the deadline caveat: a unit's clock starts at
+        # dispatch, so deep overcommit can expire units that never ran.
+        self.max_inflight = int(max_inflight)
+        # Cache-mediated work stealing: after draining its own shard slice,
+        # this runner claims sibling shards' unfinished units via exclusive
+        # claim records in the shared ResultCache (no-op without a cache or
+        # without sharding; results publish under the unit's cache key, so
+        # the owning shard's report picks them up as hits — byte-identical
+        # merge preserved because first completed claim wins).
+        self.steal = bool(steal)
+        # endpoint -> {"capacity", "throughput"} advertised via registry
+        # heartbeats; consulted before ever pinging a worker (zero startup
+        # pings for registry fleets), kept fresh by the FleetWatcher tap.
+        self._advertised: dict[str, dict[str, Any]] = {}
         # Contexts persist across boxes so prepare is shared; cleaned explicitly.
         self._contexts: dict[tuple[str, str], TaskContext] = {}
         self._prep: dict[tuple[str, str], dict[str, Any]] = {}
@@ -298,8 +334,25 @@ class SweepExecutor:
                 members = remote_mod.fleet_members(self.fleet_registry)
             except remote_mod.RemoteExecutionError:
                 return []
+            for m in members:
+                self._advertise(m)
             return [m["endpoint"] for m in members if m.get("status") == "alive"]
         return []
+
+    def _advertise(self, row: dict[str, Any]) -> None:
+        """Record a registry fleet row's heartbeat-carried capacity and
+        throughput so discovery never needs to ping the worker itself."""
+        ep = row.get("endpoint")
+        cap = row.get("capacity")
+        if not ep or not cap:
+            return
+        try:
+            self._advertised[str(ep)] = {
+                "capacity": max(1, int(cap)),
+                "throughput": row.get("throughput"),
+            }
+        except (TypeError, ValueError):
+            pass
 
     def _remote_endpoint(self, unit: _Unit) -> str | None:
         """Worker endpoint for this unit, or None for local execution.
@@ -356,6 +409,30 @@ class SweepExecutor:
             float(elapsed) if elapsed is not None else None,
         )
 
+    def _cache_store(
+        self,
+        ckey: str,
+        vals: dict[str, float],
+        *,
+        task: str,
+        params: dict[str, Any],
+        platform: str,
+        elapsed_s: float | None,
+    ) -> None:
+        """``cache.put`` plus, when stealing, an immediate single-key publish.
+
+        Claim/refresh coordination between shard runners happens through the
+        cache file on DISK, but a plain put only reaches it at the end-of-run
+        flush.  A steal-enabled run therefore writes each completed unit
+        through immediately — otherwise siblings claim and re-execute work
+        its owner already finished (correct, but zero wall-clock win).
+        """
+        self.cache.put(
+            ckey, vals, task=task, params=params, platform=platform, elapsed_s=elapsed_s
+        )
+        if self.steal:
+            self.cache.publish(ckey)
+
     def _run_unit(self, unit: _Unit, endpoint: str | None = None) -> tuple[TestResult, bool]:
         """Execute (or cache-hit) one unit; returns (result, was_cached).
 
@@ -365,6 +442,13 @@ class SweepExecutor:
         """
         if self.cache is not None and unit.ckey is not None:
             hit = self.cache.get(unit.ckey)
+            if hit is None and self.steal and unit.skey is not None and self.cache.claimed(unit.skey):
+                # A sibling runner claimed this unit for stealing: its result
+                # may already be published on disk.  If not, execute anyway —
+                # first completed claim wins, and byte-identical metrics make
+                # the duplicate execution harmless (same dedupe law as
+                # speculation).
+                hit = self.cache.refresh(unit.ckey)
             if hit is not None:
                 return (
                     TestResult(
@@ -381,7 +465,7 @@ class SweepExecutor:
                 # caller before this line and are observed by dynamic sinks.
                 self.cache.health.observe_success(endpoint, elapsed)
             if self.cache is not None and unit.ckey is not None:
-                self.cache.put(
+                self._cache_store(
                     unit.ckey,
                     result.metrics,
                     task=unit.task_name,
@@ -405,7 +489,7 @@ class SweepExecutor:
                 {"task": task.name, "params": dict(unit.params), "metrics": dict(vals)}
             )
         if self.cache is not None and unit.ckey is not None:
-            self.cache.put(
+            self._cache_store(
                 unit.ckey,
                 vals,
                 task=task.name,
@@ -471,9 +555,16 @@ class SweepExecutor:
         return units
 
     def _endpoint_capacity(self, endpoint: str, fallback: int = 1) -> int:
-        """A worker's advertised concurrency (ping), else ``fallback``."""
+        """A worker's advertised concurrency, else ``fallback``.
+
+        Heartbeat-advertised capacity (registry fleets) answers without any
+        network round trip; only workers outside a registry get pinged.
+        """
         from repro.core import remote as remote_mod
 
+        adv = self._advertised.get(endpoint)
+        if adv is not None:
+            return adv["capacity"]
         info = remote_mod.get_transport(endpoint).info()
         if info is not None:
             try:
@@ -508,7 +599,12 @@ class SweepExecutor:
         evidence: list[dict[str, Any]] = []
         for i in range(count):
             if i < len(endpoints):
-                info = remote_mod.get_transport(endpoints[i]).info() or {}
+                # Heartbeat-advertised evidence first (registry fleets carry
+                # capacity AND measured throughput in every beat); ping only
+                # hand-listed workers that never advertised.
+                info = self._advertised.get(endpoints[i])
+                if info is None:
+                    info = remote_mod.get_transport(endpoints[i]).info() or {}
                 throughput = info.get("throughput") or {}
                 evidence.append(
                     {"capacity": info.get("capacity", 1), "ewma_s": throughput.get("ewma_s")}
@@ -548,20 +644,33 @@ class SweepExecutor:
     def _expand_units(
         self, box: Box, platforms: list[Platform], shard: ShardSpec | None = None
     ) -> list[_Unit]:
+        return self._expand_partition(box, platforms, shard)[0]
+
+    def _expand_partition(
+        self, box: Box, platforms: list[Platform], shard: ShardSpec | None = None
+    ) -> tuple[list[_Unit], list[_Unit]]:
+        """(mine, foreign): this shard's slice plus every other shard's.
+
+        ``foreign`` is the steal candidate pool — units some sibling runner
+        owns, reachable here only through the shared cache's claim records.
+        Unsharded runs own everything, so ``foreign`` is empty.
+        """
         units = self._expand_candidates(box, platforms)
         if shard is None:
-            return units
+            return units, []
         shard = self._resolve_shard(shard)
         owner = self._shard_owner_map(units, shard)
         if owner is None:
-            units = [u for u in units if shard_of(u.skey, shard.count) == shard.index]
+            mine = [u for u in units if shard_of(u.skey, shard.count) == shard.index]
+            foreign = [u for u in units if shard_of(u.skey, shard.count) != shard.index]
         else:
-            units = [u for u in units if owner[u.skey] == shard.index]
+            mine = [u for u in units if owner[u.skey] == shard.index]
+            foreign = [u for u in units if owner[u.skey] != shard.index]
         # Reindex: ``index`` is the position in THIS run's canonical row
         # assembly, which for a shard is its kept subsequence of the grid.
-        for i, u in enumerate(units):
+        for i, u in enumerate(mine):
             u.index = i
-        return units
+        return mine, foreign
 
     def shard_plan(self, box: Box, shard: ShardSpec) -> list[dict[str, Any]]:
         """Dry-run preview: per-shard unit count and estimated cost share.
@@ -607,7 +716,7 @@ class SweepExecutor:
 
     def run_box(self, box: Box, shard: ShardSpec | None = None) -> SweepResult:
         platforms = self._box_platforms(box)
-        units = self._expand_units(box, platforms, shard)
+        units, foreign = self._expand_partition(box, platforms, shard)
         out = SweepResult(box=box.name, platforms=[p.name for p in platforms])
         out.stats.total = len(units)
         ordered: list[TestResult | None] = [None] * len(units)
@@ -689,6 +798,8 @@ class SweepExecutor:
                         out.stats.cached += was_cached
             else:
                 self._run_process_pool(units, ordered, out, record_error)
+            if self.steal and shard is not None and foreign:
+                self._steal_leftovers(foreign, shard, out)
         finally:
             # Persist whatever was measured even when fail_fast aborts the
             # sweep mid-way — the re-run then resumes from the cache.
@@ -720,6 +831,46 @@ class SweepExecutor:
                 out.rows.extend(rows)
         return out
 
+    # -- cache-mediated work stealing --------------------------------------
+    def _steal_leftovers(self, foreign: list[_Unit], shard: ShardSpec, out: SweepResult) -> None:
+        """Drained early: claim and run sibling shards' unfinished units.
+
+        Coordination is entirely through the shared :class:`ResultCache`
+        (see its work-stealing note): an O_EXCL claim record keyed by the
+        unit's endpoint-free ``skey`` elects exactly one stealer, the result
+        publishes to disk under ``ckey``, and the owning shard picks it up
+        as a cache hit.  Stolen results never enter THIS runner's report
+        rows — merged output stays byte-identical to an unsharded run.
+        Everything here is best-effort: a failed steal just leaves the unit
+        for its owner.
+        """
+        import os
+
+        if self.cache is None:
+            return
+        owner_id = f"shard-{shard.index}-{shard.count}-pid{os.getpid()}"
+        model = CostModel(self.cache)
+        costs = model.estimate_many(foreign, lookup="skey")
+        # Heaviest first, cost ties from the BACK of the sibling's queue:
+        # owners drain their slice front-to-back in grid order, so tail-end
+        # steals (the classic stealing-deque rule) converge toward the
+        # owner instead of duplicating the unit it is executing right now.
+        for u in sorted(reversed(foreign), key=lambda x: -costs.get(x.skey or "", 1.0)):
+            if u.skey is None or u.ckey is None:
+                continue
+            if self.cache.get(u.ckey) is not None:
+                continue  # already measured (shared dedupe)
+            if self.cache.refresh(u.ckey) is not None:
+                continue  # its owner (or another stealer) published it
+            if not self.cache.try_claim(u.skey, owner_id):
+                continue  # lost the claim race
+            try:
+                self._run_unit(u)
+            except Exception:  # noqa: BLE001 - owner still runs it
+                continue
+            self.cache.publish(u.ckey)
+            out.stats.stolen += 1
+
     # -- dynamic (pull-based) scheduling -----------------------------------
     def _run_unit_process(self, unit: _Unit, proc_pool: ProcessPoolExecutor) -> tuple[TestResult, bool]:
         """A dynamic local sink's unit path under ``pool="process"``."""
@@ -737,7 +888,7 @@ class SweepExecutor:
             raise _ChildFailure(res["error"], res.get("traceback", ""))
         vals = res["metrics"]
         if self.cache is not None and unit.ckey is not None:
-            self.cache.put(
+            self._cache_store(
                 unit.ckey,
                 vals,
                 task=unit.task_name,
@@ -753,8 +904,16 @@ class SweepExecutor:
         Transport-level failures (``WorkerUnreachable``: dead, hung past
         deadline, corrupt wire) feed the health sidecar's failure streak;
         clean task errors do NOT — the endpoint answered, it is healthy.
+
+        On the default ``transport="async"`` the sink is callback-based:
+        units go out as id-tagged frames on the shared
+        :mod:`repro.core.aiotransport` loop's one persistent connection to
+        this worker, and completion (the same cache-put/health/ctx-log
+        bookkeeping as the threaded path) runs on the loop thread.  The
+        sink's capacity is the per-endpoint in-flight admission bound —
+        ``max_inflight`` when set, else the worker's advertised capacity.
         """
-        from repro.core.remote import WorkerUnreachable
+        from repro.core.remote import RemoteExecutionError, WorkerUnreachable
 
         health = self.cache.health if self.cache is not None else None
 
@@ -766,7 +925,81 @@ class SweepExecutor:
                     health.observe_failure(_ep)
                 raise
 
-        return Sink(name=ep, capacity=self._endpoint_capacity(ep), run=run)
+        capacity = self._endpoint_capacity(ep)
+        if self.transport != "async":
+            return Sink(name=ep, capacity=capacity, run=run)
+
+        def submit(u, done, _ep=ep):
+            if self.cache is not None and u.ckey is not None:
+                hit = self.cache.get(u.ckey)
+                if hit is not None:
+                    done(
+                        result=TestResult(
+                            u.task_name, dict(u.params), hit, platform=u.platform.name
+                        ),
+                        was_cached=True,
+                    )
+                    return
+            from repro.core.aiotransport import get_async_transport
+
+            def on_done(resp, exc, _u=u):
+                try:
+                    if exc is not None:
+                        if isinstance(exc, WorkerUnreachable) and health is not None:
+                            health.observe_failure(_ep)
+                        done(error=exc)
+                        return
+                    if not resp.get("ok"):
+                        done(
+                            error=RemoteExecutionError(
+                                f"worker {_ep} failed: {resp.get('error', 'unknown error')}"
+                            )
+                        )
+                        return
+                    vals = {k: float(v) for k, v in resp["metrics"].items()}
+                    ctx = self._context(_u.platform, _u.task_name)
+                    with self._task_lock(_u.platform.name, _u.task_name):
+                        ctx.log.append(
+                            {
+                                "task": _u.task_name,
+                                "params": dict(_u.params),
+                                "metrics": dict(vals),
+                            }
+                        )
+                    elapsed = resp.get("elapsed_s")
+                    elapsed = float(elapsed) if elapsed is not None else None
+                    if health is not None:
+                        health.observe_success(_ep, elapsed)
+                    if self.cache is not None and _u.ckey is not None:
+                        self._cache_store(
+                            _u.ckey,
+                            vals,
+                            task=_u.task_name,
+                            params=_u.params,
+                            platform=_u.platform.name,
+                            elapsed_s=elapsed,
+                        )
+                    done(
+                        result=TestResult(
+                            _u.task_name, dict(_u.params), vals, platform=_u.platform.name
+                        )
+                    )
+                except Exception as e:  # noqa: BLE001 - bookkeeping bug -> unit error
+                    done(error=e)
+
+            get_async_transport().submit(
+                _ep,
+                {"op": "run", "payload": _unit_payload(u, self, want_samples=True)},
+                timeout=self._unit_deadline(u),
+                callback=on_done,
+            )
+
+        return Sink(
+            name=ep,
+            capacity=self.max_inflight or capacity,
+            run=run,
+            submit=submit,
+        )
 
     def _dynamic_sinks(
         self, units: list[_Unit], stats: SweepStats | None = None
@@ -865,11 +1098,27 @@ class SweepExecutor:
                 # re-enqueued within the heartbeat detection bound.
                 from repro.runtime.elastic import FleetWatcher
 
+                def observe(members: list[dict]) -> None:
+                    # Keep the advertised capacity/throughput map fresh from
+                    # heartbeat payloads: a worker joining mid-sweep becomes
+                    # a sink without a single startup ping.
+                    for m in members:
+                        self._advertise(m)
+
                 watcher = FleetWatcher(
-                    self.fleet_registry, scheduler, make_sink=self._fleet_sink
+                    self.fleet_registry,
+                    scheduler,
+                    make_sink=self._fleet_sink,
+                    observe=observe,
                 )
                 watcher.start()
             outcomes = scheduler.run(items)
+            # Client-thread economics of this sweep: the scheduler's own
+            # dispatch/puller threads, plus the one shared async IO loop
+            # when any sink multiplexed through it.
+            out.stats.dispatch_threads = scheduler.threads_started + int(
+                any(s.submit is not None for s in scheduler.sinks)
+            )
         finally:
             if watcher is not None:
                 watcher.stop()
@@ -899,7 +1148,7 @@ class SweepExecutor:
                     # overwritten the entry with its own measurement.
                     # Re-assert the winner so the cache agrees with the
                     # emitted row.
-                    self.cache.put(
+                    self._cache_store(
                         unit.ckey,
                         oc.result.metrics,
                         task=unit.task_name,
@@ -970,7 +1219,7 @@ class SweepExecutor:
                     unit.task_name, dict(unit.params), vals, platform=unit.platform.name
                 )
                 if self.cache is not None and unit.ckey is not None:
-                    self.cache.put(
+                    self._cache_store(
                         unit.ckey,
                         vals,
                         task=unit.task_name,
@@ -1011,6 +1260,11 @@ class SweepExecutor:
 
 # -- process-pool worker (module level: must be picklable by spawn) ----------
 _CHILD_CONTEXTS: dict[tuple[str, str], TaskContext] = {}
+# Guards the context get-or-create ONLY (task.run stays outside): a spawn
+# child is single-threaded, but the `fleet` CLI runs N WorkerServers in one
+# process, all dispatching concurrently into this function with N separate
+# per-server lock tables — without this, racers double-prepare a context.
+_CHILD_LOCK = threading.Lock()
 
 
 def _unit_payload(unit: _Unit, ex: SweepExecutor, want_samples: bool = False) -> dict[str, Any]:
@@ -1051,25 +1305,27 @@ def _subprocess_run_unit(payload: dict[str, Any]) -> dict[str, Any]:
         platform = Platform(**payload["platform"])
         task = registry.get(payload["task"])
         key = (platform.name, task.name)
-        ctx = _CHILD_CONTEXTS.get(key)
-        if ctx is None:
-            ctx = TaskContext(
-                platform=platform.describe(),
-                iters=payload["iters"],
-                warmup=payload["warmup"],
-                min_time_s=float(payload.get("min_time_s", 0.0)),
-            )
-            task.prepare(ctx)
-            _CHILD_CONTEXTS[key] = ctx
-        else:
-            # Long-lived workers reuse the prepared context across client
-            # runs; the measurement knobs are per-request (and part of the
-            # client's cache identity), so refresh them every time.  Same-key
-            # requests are serialized by the worker's per-(platform, task)
-            # locks, so this mutation cannot race a running unit.
-            ctx.iters = payload["iters"]
-            ctx.warmup = payload["warmup"]
-            ctx.min_time_s = float(payload.get("min_time_s", 0.0))
+        with _CHILD_LOCK:
+            ctx = _CHILD_CONTEXTS.get(key)
+            if ctx is None:
+                ctx = TaskContext(
+                    platform=platform.describe(),
+                    iters=payload["iters"],
+                    warmup=payload["warmup"],
+                    min_time_s=float(payload.get("min_time_s", 0.0)),
+                )
+                task.prepare(ctx)
+                _CHILD_CONTEXTS[key] = ctx
+            else:
+                # Long-lived workers reuse the prepared context across client
+                # runs; the measurement knobs are per-request (and part of the
+                # client's cache identity), so refresh them every time.
+                # Same-key requests are serialized by the worker's
+                # per-(platform, task) locks, so this mutation cannot race a
+                # running unit.
+                ctx.iters = payload["iters"]
+                ctx.warmup = payload["warmup"]
+                ctx.min_time_s = float(payload.get("min_time_s", 0.0))
         # Cost evidence measures only the repeatable per-unit work, matching
         # the in-process path (one-time bootstrap/prepare stays out).
         t0 = time.perf_counter()

@@ -50,6 +50,21 @@ or ``{"ok": false, "error": ..., "traceback": ...}``; the membership pair
 ``register`` / ``heartbeat`` (plus ``deregister`` / ``fleet``) served by a
 registry; ``{"op": "fault", ...}`` arms test-only fault injection on
 workers started with ``--allow-faults`` (see :mod:`repro.core.faults`).
+
+**Request-id framing (multiplexing):** a request may carry an ``"id"``
+field (any JSON string).  Id-tagged requests are dispatched concurrently —
+each on its own handler thread, still bounded by the worker's capacity
+slots — and the response frame echoes the id (``{"id": ..., "ok": ...}``),
+serialized onto the connection under a per-connection write lock.
+Responses therefore return in COMPLETION order, not request order, and one
+connection can interleave hundreds of in-flight units; clients demux by id
+(:mod:`repro.core.aiotransport` drives this from a single ``selectors``
+event loop).  Requests WITHOUT an id keep the legacy contract: in-order,
+one at a time per connection — :class:`RemoteTransport`, registry clients,
+and pre-existing workers interoperate unchanged.  All sockets (both
+accepted and dialed) set ``TCP_NODELAY``: frames are small newline-JSON
+messages, and Nagle + delayed-ACK otherwise adds ~40 ms stalls per round
+trip that dominate short units.
 """
 from __future__ import annotations
 
@@ -191,7 +206,66 @@ class JsonLineHandler(socketserver.StreamRequestHandler):
     error response instead of killing the connection thread silently —
     which would leave the client blocked on a reply that never comes until
     the full request timeout expired.
+
+    Requests carrying an ``"id"`` field are *multiplexed*: each dispatches
+    on its own thread and its response (id echoed back) is written under a
+    per-connection write lock whenever it completes — out of order is
+    expected, the id is the demux key.  Id-less requests keep the legacy
+    serial in-order path.
     """
+
+    def setup(self) -> None:
+        super().setup()
+        try:
+            # Small newline-JSON frames: Nagle + delayed-ACK would add
+            # ~40 ms per round trip, dominating short units.
+            self.connection.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+        self._wlock = threading.Lock()
+        self._conn_dead = False
+
+    def _dispatch(self, req: dict[str, Any]) -> dict[str, Any]:
+        try:
+            return self.server.dispatch(req)  # type: ignore[attr-defined]
+        except Exception as e:  # noqa: BLE001 - serialize, keep serving
+            return {
+                "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc(),
+            }
+
+    def _write_response(self, resp: Any, rid: Any = None) -> bool:
+        """Serialize one response frame; False = connection is done for."""
+        raw = resp.pop("_raw_bytes", None) if isinstance(resp, dict) else None
+        if isinstance(resp, dict) and rid is not None:
+            resp = {**resp, "id": rid}
+        with self._wlock:
+            if self._conn_dead:
+                return False
+            try:
+                if raw is not None:
+                    # Injected wire fault: emit the broken bytes verbatim
+                    # and drop the connection (repro.core.faults "partial").
+                    self.wfile.write(raw if isinstance(raw, bytes) else str(raw).encode())
+                    self.wfile.flush()
+                    self._conn_dead = True
+                    try:
+                        self.connection.shutdown(socket.SHUT_RDWR)
+                    except OSError:
+                        pass
+                    return False
+                self.wfile.write((json.dumps(resp, default=str) + "\n").encode())
+                self.wfile.flush()
+                return True
+            except (OSError, ValueError):
+                # Client went away mid-write; late multiplexed responses
+                # simply have nowhere to go.
+                self._conn_dead = True
+                return False
+
+    def _respond_threaded(self, req: dict[str, Any], rid: Any) -> None:
+        self._write_response(self._dispatch(req), rid)
 
     def handle(self) -> None:
         for line in self.rfile:
@@ -201,25 +275,25 @@ class JsonLineHandler(socketserver.StreamRequestHandler):
             try:
                 req = json.loads(line)
             except json.JSONDecodeError as e:
-                resp = {"ok": False, "error": f"bad request JSON: {e}"}
-            else:
-                try:
-                    resp = self.server.dispatch(req)  # type: ignore[attr-defined]
-                except Exception as e:  # noqa: BLE001 - serialize, keep serving
-                    resp = {
-                        "ok": False,
-                        "error": f"{type(e).__name__}: {e}",
-                        "traceback": traceback.format_exc(),
-                    }
-            raw = resp.pop("_raw_bytes", None) if isinstance(resp, dict) else None
-            if raw is not None:
-                # Injected wire fault: emit the broken bytes verbatim and
-                # drop the connection (see repro.core.faults "partial").
-                self.wfile.write(raw if isinstance(raw, bytes) else str(raw).encode())
-                self.wfile.flush()
+                if not self._write_response({"ok": False, "error": f"bad request JSON: {e}"}):
+                    return
+                continue
+            rid = req.get("id") if isinstance(req, dict) else None
+            if rid is not None:
+                # Multiplexed request: dispatch concurrently, reply whenever
+                # done.  Execution concurrency is still bounded by the
+                # server's capacity slots inside dispatch().
+                threading.Thread(
+                    target=self._respond_threaded, args=(req, rid), daemon=True,
+                    name="mux-dispatch",
+                ).start()
+                continue
+            if not self._write_response(self._dispatch(req)):
                 return
-            self.wfile.write((json.dumps(resp, default=str) + "\n").encode())
-            self.wfile.flush()
+        # EOF from client: mark dead so straggler multiplexed responses
+        # don't write into a torn-down connection.
+        with self._wlock:
+            self._conn_dead = True
 
 
 class WorkerServer(socketserver.ThreadingTCPServer):
@@ -355,8 +429,12 @@ class WorkerServer(socketserver.ThreadingTCPServer):
                         )
                         registered = True
                     else:
+                        # Beats carry capacity AND measured throughput, so
+                        # runners size sinks / auto-weights straight from the
+                        # registry view — zero startup pings per member.
                         heartbeat(
-                            self.register_endpoint, self.endpoint, capacity=self.capacity
+                            self.register_endpoint, self.endpoint,
+                            capacity=self.capacity, throughput=self.throughput(),
                         )
                 except RemoteExecutionError:
                     registered = False  # re-register once the registry answers
@@ -470,6 +548,12 @@ class _Conn:
     def __init__(self, host: str, port: int):
         self.sock = socket.create_connection((host, port), timeout=CONNECT_TIMEOUT_S)
         self.sock.settimeout(REQUEST_TIMEOUT_S)
+        try:
+            # Request frames are tiny; without this, Nagle + delayed-ACK
+            # stalls every short unit's round trip by ~40 ms.
+            self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
         self.rfile = self.sock.makefile("rb")
 
     def close(self) -> None:
@@ -689,13 +773,18 @@ def heartbeat(
     registry_endpoint: str,
     worker_endpoint: str,
     capacity: int | None = None,
+    throughput: dict[str, Any] | None = None,
     timeout: float = 10.0,
 ) -> dict[str, Any]:
     """One liveness beat.  Unknown endpoints are re-admitted (registry
-    restarts heal on the next beat wave)."""
+    restarts heal on the next beat wave).  ``capacity``/``throughput`` ride
+    along so the registry's fleet view advertises what a ping would —
+    discovery then needs zero startup round trips per member."""
     req: dict[str, Any] = {"op": "heartbeat", "endpoint": worker_endpoint}
     if capacity is not None:
         req["capacity"] = int(capacity)
+    if throughput is not None:
+        req["throughput"] = dict(throughput)
     resp = get_transport(registry_endpoint).request(req, timeout=timeout, connect_retries=1)
     if not resp.get("ok"):
         raise RemoteExecutionError(
@@ -866,6 +955,12 @@ class LocalWorker:
                 t = _TRANSPORTS.pop(self.endpoint, None)
             if t is not None:
                 t.close()
+            # The async transport (if this process ever started it) holds a
+            # persistent connection to the worker; drop its state so the
+            # endpoint's port can be reused by a fresh worker cleanly.
+            aio = sys.modules.get("repro.core.aiotransport")
+            if aio is not None:
+                aio.get_async_transport().drop(self.endpoint)
         if self._proc is not None:
             self._proc.terminate()
             try:
@@ -910,6 +1005,21 @@ def main(argv: list[str] | None = None) -> int:
         "--plugin-dir", action="append", default=[], metavar="DIR",
         help="plugin task directory to preload (repeatable)",
     )
+    fl = sub.add_parser(
+        "fleet",
+        help="serve N workers from ONE process (loopback transport-scale "
+        "tests: contexts are shared per (platform, task), and a 'kill' "
+        "fault would take the whole fleet down)",
+    )
+    fl.add_argument("--count", type=int, default=4, metavar="N")
+    fl.add_argument("--host", default="127.0.0.1")
+    fl.add_argument("--capacity", type=int, default=1)
+    fl.add_argument("--register", default=None, metavar="HOST:PORT")
+    fl.add_argument(
+        "--heartbeat-interval", type=float, default=HEARTBEAT_INTERVAL_S, metavar="SECONDS"
+    )
+    fl.add_argument("--allow-faults", action="store_true")
+    fl.add_argument("--plugin-dir", action="append", default=[], metavar="DIR")
     pg = sub.add_parser("ping", help="check a worker endpoint")
     pg.add_argument("endpoint")
     pg.add_argument("--timeout", type=float, default=10.0)
@@ -933,6 +1043,35 @@ def main(argv: list[str] | None = None) -> int:
             pass
         finally:
             server.server_close()
+        return 0
+    if args.cmd == "fleet":
+        if args.count < 1:
+            p.error(f"--count must be >= 1, got {args.count}")
+        servers = [
+            WorkerServer(
+                args.host, 0,
+                plugin_dirs=args.plugin_dir,
+                capacity=args.capacity,
+                register=args.register,
+                heartbeat_interval_s=args.heartbeat_interval,
+                allow_faults=args.allow_faults,
+            )
+            for _ in range(args.count)
+        ]
+        for server in servers:
+            server.serve_in_thread()
+        # One comma-joined announce line: parse_fleet-compatible, and a
+        # spawner only has to wait for a single line however large N is.
+        print("listening on " + ",".join(s.endpoint for s in servers), flush=True)
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            for server in servers:
+                server.shutdown()
+                server.server_close()
         return 0
     if args.cmd == "ping":
         try:

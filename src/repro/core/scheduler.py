@@ -53,14 +53,25 @@ DEFAULT_MIN_STRAGGLER_S = 0.25
 class Sink:
     """One pull-capable execution endpoint (local slots or a remote worker).
 
-    ``run`` executes one unit and returns ``(result, was_cached)``; it is
-    called from up to ``capacity`` puller threads at once and may raise to
-    report a unit failure.
+    Two driving modes:
+
+    * **threaded** (``submit is None``): ``run`` executes one unit and
+      returns ``(result, was_cached)``; it is called from up to
+      ``capacity`` puller threads at once and may raise to report a unit
+      failure.
+    * **async** (``submit`` set): no puller threads at all — the
+      scheduler's single dispatcher thread calls ``submit(unit, done)``
+      whenever the sink has a free in-flight slot (at most ``capacity``
+      outstanding), and the sink completes the unit later by calling
+      ``done(result=..., was_cached=...)`` or ``done(error=...)`` exactly
+      once, from any thread (typically a multiplexed transport's event
+      loop).  ``run`` is ignored in this mode (pass a stub).
     """
 
     name: str
     capacity: int
     run: Callable[[Any], tuple[Any, bool]]
+    submit: Callable[[Any, Callable[..., None]], None] | None = None
 
 
 @dataclass
@@ -169,6 +180,14 @@ class FleetScheduler:
         self._dead: set[int] = set()  # sinks removed from the live set
         self._running = False
         self._threads: list[threading.Thread] = []
+        # Async sinks: in-flight attempt count per sink (admission gate for
+        # the dispatcher) + the single dispatcher thread driving them all.
+        self._inflight: list[int] = [0] * len(self.sinks)
+        self._dispatcher_started = False
+        # Dispatch/puller threads ever created (monotonic — pruning dead
+        # sinks' threads does not un-count them): the "client-side thread
+        # budget" number the transport-scale benchmark asserts on.
+        self.threads_started = 0
 
     # -- queue (all helpers assume self._cv is held) ------------------------
     def _push_wave_locked(self, t: _Tracked, sink_ids: Sequence[int]) -> None:
@@ -235,6 +254,62 @@ class FleetScheduler:
                     t, sid, result=result, was_cached=bool(was_cached),
                     elapsed=time.monotonic() - t0,
                 )
+
+    # -- async sinks ---------------------------------------------------------
+    def _dispatcher(self) -> None:
+        """The single thread driving EVERY async sink.
+
+        Claims work for any async sink with a free in-flight slot, then
+        calls ``sink.submit`` OUTSIDE the lock (a submit that completes
+        synchronously — e.g. a cache hit — re-enters ``_finish``, which
+        takes the lock).  Completion callbacks free the slot and notify,
+        waking this thread to claim the next unit.
+        """
+        while True:
+            batch: list[tuple[int, _Tracked]] = []
+            with self._cv:
+                while not self._stop:
+                    for sid, sink in enumerate(self.sinks):
+                        if sink.submit is None or sid in self._dead:
+                            continue
+                        while self._inflight[sid] < sink.capacity:
+                            t = self._claim_locked(sid)
+                            if t is None:
+                                break
+                            self._inflight[sid] += 1
+                            batch.append((sid, t))
+                    if batch:
+                        break
+                    self._cv.wait()
+                if not batch:
+                    return  # stopping
+            for sid, t in batch:
+                self._submit_async(sid, t)
+
+    def _submit_async(self, sid: int, t: _Tracked) -> None:
+        sink = self.sinks[sid]
+        t0 = time.monotonic()
+        fired = [False]
+
+        def done(result: Any = None, was_cached: bool = False,
+                 error: BaseException | None = None) -> None:
+            with self._cv:
+                if fired[0]:
+                    return  # a buggy sink calling done twice must not corrupt counts
+                fired[0] = True
+                self._inflight[sid] -= 1
+            if error is not None:
+                self._finish(t, sid, error=error)
+            else:
+                self._finish(
+                    t, sid, result=result, was_cached=bool(was_cached),
+                    elapsed=time.monotonic() - t0,
+                )
+
+        try:
+            sink.submit(t.item.unit, done)
+        except BaseException as e:  # noqa: BLE001 - reported per unit
+            done(error=e)
 
     def _finish(
         self,
@@ -347,7 +422,20 @@ class FleetScheduler:
         return match
 
     def _spawn_pullers(self, sid: int) -> None:
+        """Start the sink's driving threads: ``capacity`` pullers for a
+        threaded sink, or (once, shared by all async sinks) the single
+        dispatcher thread."""
         sink = self.sinks[sid]
+        if sink.submit is not None:
+            if not self._dispatcher_started:
+                self._dispatcher_started = True
+                th = threading.Thread(
+                    target=self._dispatcher, daemon=True, name="sink-dispatcher"
+                )
+                th.start()
+                self._threads.append(th)
+                self.threads_started += 1
+            return
         for slot in range(sink.capacity):
             th = threading.Thread(
                 target=self._puller, args=(sid,), daemon=True,
@@ -355,6 +443,7 @@ class FleetScheduler:
             )
             th.start()
             self._threads.append(th)
+            self.threads_started += 1
 
     def add_sink(self, sink: Sink) -> int:
         """Grow the fleet mid-run (a worker registered): dynamic units'
@@ -366,6 +455,7 @@ class FleetScheduler:
             sid = len(self.sinks)
             self.sinks.append(sink)
             self._heaps.append([])
+            self._inflight.append(0)
             for t in self._tracked:
                 if t.done or not t.dynamic:
                     continue
@@ -427,11 +517,34 @@ class FleetScheduler:
                     redispatched.append(t.item.unit)
                     self._push_wave_locked(t, targets)
             self._cv.notify_all()
+        # Prune threads that have already exited (this dead sink's pullers
+        # unblock on the notify above and die; EARLIER dead sinks' threads
+        # are certainly done) instead of accumulating every thread ever
+        # started for the life of the sweep.  is_alive() is non-blocking,
+        # so a long-lived elastic run stays O(live sinks), not O(churn).
+        self._threads = [th for th in self._threads if th.is_alive()]
         return redispatched
 
     def live_sinks(self) -> list[str]:
         with self._cv:
             return [s.name for sid, s in enumerate(self.sinks) if sid not in self._dead]
+
+    def close(self, timeout_s: float = 2.0) -> None:
+        """Stop claiming and join worker threads within a TOTAL bound.
+
+        Threads stuck inside a sink's ``run`` (a wedged remote attempt)
+        stay behind as daemons — their late results are discarded by
+        ``t.done`` — so shutdown cost is bounded by ``timeout_s`` however
+        large the fleet got, not by thread count x per-thread timeout.
+        """
+        with self._cv:
+            self._stop = True
+            self._running = False
+            self._cv.notify_all()
+        deadline = time.monotonic() + max(0.0, timeout_s)
+        for th in self._threads:
+            th.join(timeout=max(0.0, deadline - time.monotonic()))
+        self._threads = [th for th in self._threads if th.is_alive()]
 
     # -- entry point ---------------------------------------------------------
     def run(self, items: Sequence[WorkItem]) -> list[Outcome]:
@@ -473,12 +586,7 @@ class FleetScheduler:
                     self._cv.wait(timeout=self.poll_s)
                     self._maybe_speculate_locked()
         finally:
-            with self._cv:
-                self._stop = True
-                self._running = False
-                self._cv.notify_all()
-        for th in self._threads:
-            th.join(timeout=0.1)
+            self.close()
         return [t.outcome for t in self._tracked]
 
 

@@ -105,11 +105,17 @@ class FleetWatcher:
         scheduler: FleetScheduler,
         make_sink: Callable[[str], Sink],
         poll_s: float = HEARTBEAT_INTERVAL_S / 2,
+        observe: Callable[[list[dict]], None] | None = None,
     ):
         self.registry_endpoint = registry_endpoint
         self.scheduler = scheduler
         self.make_sink = make_sink
         self.poll_s = float(poll_s)
+        # Optional tap on every fetched fleet view (full member rows, before
+        # the join/leave delta is applied).  The executor uses it to keep its
+        # advertised capacity/throughput map fresh from heartbeat payloads so
+        # joining workers never need a startup ping.
+        self.observe = observe
         # Seed from the scheduler's initial sinks (built from the same
         # registry view moments ago); endpoints we've marked dead stay in
         # the map so a stale 'suspect' row doesn't re-kill them.
@@ -125,6 +131,11 @@ class FleetWatcher:
             members = fleet_members(self.registry_endpoint)
         except RemoteExecutionError:
             return  # transient outage: keep the last applied view
+        if self.observe is not None:
+            try:
+                self.observe(members)
+            except Exception:  # an observer bug must not stall membership
+                pass
         status = {m["endpoint"]: m["status"] for m in members}
         for ep, st in status.items():
             if st != "alive":

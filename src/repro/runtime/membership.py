@@ -57,6 +57,10 @@ class WorkerRecord:
     registered_unix: float = 0.0
     last_seen: float = 0.0  # monotonic, registry clock
     beats: int = 0
+    # Ping-equivalent measured-throughput payload, refreshed on every beat:
+    # discovery (FleetWatcher, --registry startup, @auto weights) reads it
+    # from the fleet view instead of pinging each member.
+    throughput: dict[str, Any] | None = None
 
 
 class MembershipRegistry:
@@ -110,7 +114,12 @@ class MembershipRegistry:
             "suspect_beats": self.suspect_beats,
         }
 
-    def heartbeat(self, endpoint: str, capacity: int | None = None) -> dict[str, Any]:
+    def heartbeat(
+        self,
+        endpoint: str,
+        capacity: int | None = None,
+        throughput: dict[str, Any] | None = None,
+    ) -> dict[str, Any]:
         with self._lock:
             rec = self._workers.get(endpoint)
             known = rec is not None
@@ -125,6 +134,8 @@ class MembershipRegistry:
             rec.beats += 1
             if capacity is not None:
                 rec.capacity = max(1, int(capacity))
+            if throughput is not None:
+                rec.throughput = dict(throughput)
         return {"ok": True, "op": "heartbeat", "known": known}
 
     def deregister(self, endpoint: str) -> dict[str, Any]:
@@ -159,6 +170,7 @@ class MembershipRegistry:
                         "age_s": now - r.last_seen,
                         "beats": r.beats,
                         "meta": dict(r.meta),
+                        "throughput": dict(r.throughput) if r.throughput else None,
                     }
                 )
         return out
@@ -189,8 +201,13 @@ class MembershipRegistry:
             if not ep:
                 return {"ok": False, "error": "heartbeat needs an 'endpoint'"}
             cap = req.get("capacity")
+            thr = req.get("throughput")
             try:
-                return self.heartbeat(str(ep), capacity=int(cap) if cap is not None else None)
+                return self.heartbeat(
+                    str(ep),
+                    capacity=int(cap) if cap is not None else None,
+                    throughput=dict(thr) if isinstance(thr, dict) else None,
+                )
             except ValueError as e:
                 return {"ok": False, "error": str(e)}
         if op == "deregister":

@@ -1,0 +1,598 @@
+"""Async multiplexed transport + cache-mediated work stealing conformance.
+
+Four pillars, matching the PR's contract:
+
+  1. *Multiplexing* — one persistent connection per worker carries dozens
+     of id-tagged units concurrently; responses demux by request id (the
+     hammer test proves it with injective per-unit metrics), deadlines and
+     connection loss surface as ``WorkerUnreachable`` without killing the
+     loop, and seeded slow/partial faults recover through resubmission to
+     unit-for-unit equality with sequential execution.
+  2. *Scheduler async sinks* — callback sinks are driven by ONE dispatcher
+     thread regardless of fleet capacity (``threads_started`` is the
+     benchmark's assert metric), dead sinks' threads are pruned, and
+     ``close()`` joins within a total bound.
+  3. *Work stealing* — exclusive claim records in the shared ResultCache
+     elect one stealer per unit; a drained shard runs sibling leftovers and
+     publishes them, the owner picks them up as hits, and the merged report
+     stays byte-identical to the unsharded run.
+  4. *Advertised capacity* — registry heartbeats carry capacity/throughput,
+     so fleet discovery and ``@auto`` weights need zero startup pings.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import socket
+import threading
+import time
+from pathlib import Path
+
+import pytest
+from test_shard import make_plugin, plugin_box
+
+from repro.core import config as config_mod
+from repro.core import registry as reg
+from repro.core import remote as remote_mod
+from repro.core.aiotransport import AsyncFleetTransport
+from repro.core.cache import ResultCache
+from repro.core.executor import SweepExecutor, _unit_payload
+from repro.core.faults import FaultSpec, inject
+from repro.core.remote import LocalWorker, WorkerServer, WorkerUnreachable
+from repro.core.report import to_csv
+from repro.core.scheduler import FleetScheduler, Sink, WorkItem
+from repro.core.shard import ShardSpec
+from repro.core import merge_shard_reports
+from repro.runtime.elastic import FleetWatcher
+from repro.runtime.membership import MembershipRegistry, MembershipServer
+
+
+# -- fixtures ----------------------------------------------------------------
+def make_wide_plugin(root: Path, name: str, n_a: int = 16) -> Path:
+    """A 64-unit plugin task whose metrics are INJECTIVE in params — any
+    response demuxed to the wrong request id produces a visible mismatch."""
+    d = root / name
+    d.mkdir(parents=True, exist_ok=True)
+    (d / "task.json").write_text(
+        json.dumps(
+            {
+                "name": name,
+                "param_space": {"a": list(range(1, n_a + 1)), "b": ["w", "x", "y", "z"]},
+                "metrics": ["avg_latency_us", "ops_per_s"],
+            }
+        )
+    )
+    (d / "run.py").write_text(
+        "def main(ctx, params):\n"
+        "    mult = {'w': 1, 'x': 2, 'y': 3, 'z': 5}[params['b']]\n"
+        "    t = 1e-6 * (101 * params['a'] + mult)\n"
+        "    return {'times_s': [t, 2 * t], 'ops_per_iter': 100.0}\n"
+    )
+    return d
+
+
+def _hammer_env(tmp_path, capacity: int = 64):
+    """(server, aio, payloads, expected) over a 64-unit injective task."""
+    from repro.core import Box
+
+    d = make_wide_plugin(tmp_path, "ham")
+    reg.load_plugin_dir(d)
+    box = Box.from_dict(
+        {
+            "name": "ham_box",
+            "tasks": [
+                {
+                    "task": "ham",
+                    "params": {"a": list(range(1, 17)), "b": ["w", "x", "y", "z"]},
+                }
+            ],
+        }
+    )
+    ex = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0)
+    units = ex._expand_candidates(box, ex.platforms)
+    assert len(units) == 64
+    baseline = {}
+    for u in units:
+        result, _ = ex._run_unit(u)
+        baseline[u.index] = result.metrics
+    payloads = {u.index: _unit_payload(u, ex, want_samples=False) for u in units}
+    srv = WorkerServer("127.0.0.1", 0, capacity=capacity, allow_faults=True,
+                       plugin_dirs=[d])
+    srv.serve_in_thread()
+    return srv, payloads, baseline
+
+
+# -- 1. multiplexing ----------------------------------------------------------
+def test_async_transport_ping_and_concurrent_demux():
+    srv = WorkerServer("127.0.0.1", 0)
+    srv.serve_in_thread()
+    aio = AsyncFleetTransport()
+    try:
+        assert aio.request(srv.endpoint, {"op": "ping"}, timeout=10)["ok"]
+        results: dict[int, dict] = {}
+        done = threading.Event()
+        lock = threading.Lock()
+
+        def cb(i):
+            def f(resp, exc):
+                with lock:
+                    results[i] = resp if exc is None else exc
+                    if len(results) == 32:
+                        done.set()
+            return f
+
+        for i in range(32):
+            aio.submit(srv.endpoint, {"op": "ping"}, timeout=10, callback=cb(i))
+        assert done.wait(10)
+        assert all(isinstance(r, dict) and r["ok"] for r in results.values())
+        assert len(aio._endpoints) == 1  # every request shared one connection
+    finally:
+        aio.close()
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_async_transport_unreachable_endpoint_fails_bounded():
+    aio = AsyncFleetTransport()
+    try:
+        t0 = time.monotonic()
+        with pytest.raises(WorkerUnreachable):
+            aio.request("127.0.0.1:9", {"op": "ping"}, timeout=30)
+        assert time.monotonic() - t0 < 10.0  # connect retries, not the timeout
+    finally:
+        aio.close()
+
+
+def test_async_deadline_expires_but_connection_survives(tmp_path):
+    """A hung unit fails by deadline; the SAME connection keeps serving."""
+    srv, payloads, _ = _hammer_env(tmp_path)
+    aio = AsyncFleetTransport()
+    try:
+        inject(srv.endpoint, FaultSpec("hang", seconds=120))
+        with pytest.raises(WorkerUnreachable, match="deadline"):
+            aio.request(
+                srv.endpoint, {"op": "run", "payload": payloads[0]}, timeout=0.5
+            )
+        # late reply (if any) is dropped by id; next request just works
+        assert aio.request(srv.endpoint, {"op": "ping"}, timeout=10)["ok"]
+        assert len(aio._endpoints) == 1
+    finally:
+        aio.close()
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_async_corrupt_frame_fails_pending_then_redials(tmp_path):
+    srv, payloads, baseline = _hammer_env(tmp_path)
+    aio = AsyncFleetTransport()
+    try:
+        inject(srv.endpoint, FaultSpec("partial", units=1))
+        with pytest.raises(WorkerUnreachable):
+            aio.request(
+                srv.endpoint, {"op": "run", "payload": payloads[0]}, timeout=30
+            )
+        resp = aio.request(
+            srv.endpoint, {"op": "run", "payload": payloads[0]}, timeout=30
+        )
+        assert resp["ok"] and resp["metrics"] == baseline[0]
+    finally:
+        aio.close()
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_hammer_64_units_in_flight_on_one_connection(tmp_path):
+    """>=64 concurrent units over ONE multiplexed connection, out-of-order
+    completion demuxed by request id back to injective per-unit metrics."""
+    srv, payloads, baseline = _hammer_env(tmp_path)
+    aio = AsyncFleetTransport()
+    try:
+        # Every unit stalls 0.3 s server-side, so all 64 are in flight at
+        # once before the first response comes back.
+        inject(srv.endpoint, FaultSpec("slow", seconds=0.3, units=64))
+        lock = threading.Lock()
+        results: dict[int, dict] = {}
+        outstanding = [0]
+        peak = [0]
+        done = threading.Event()
+
+        def cb(idx):
+            def f(resp, exc):
+                with lock:
+                    peak[0] = max(peak[0], outstanding[0])
+                    outstanding[0] -= 1
+                    results[idx] = exc if exc is not None else resp
+                    if len(results) == len(payloads):
+                        done.set()
+            return f
+
+        for idx, payload in payloads.items():
+            with lock:
+                outstanding[0] += 1
+            aio.submit(
+                srv.endpoint, {"op": "run", "payload": payload},
+                timeout=60, callback=cb(idx),
+            )
+        assert done.wait(60)
+        assert peak[0] >= 64, f"only {peak[0]} units were ever in flight together"
+        assert len(aio._endpoints) == 1
+        for idx, resp in results.items():
+            assert isinstance(resp, dict) and resp["ok"], f"unit {idx}: {resp}"
+            assert resp["metrics"] == baseline[idx], f"unit {idx} demuxed wrong"
+    finally:
+        aio.close()
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_hammer_recovers_from_slow_and_partial_faults(tmp_path):
+    """Seeded slow + wire-corruption faults: resubmitting every
+    WorkerUnreachable converges to unit-for-unit equality with sequential."""
+    srv, payloads, baseline = _hammer_env(tmp_path)
+    aio = AsyncFleetTransport()
+    try:
+        inject(srv.endpoint, FaultSpec("partial", units=2))
+        inject(srv.endpoint, FaultSpec("slow", seconds=0.05, units=10))
+        lock = threading.Lock()
+        results: dict[int, dict] = {}
+        failures = [0]
+        done = threading.Event()
+
+        def submit(idx):
+            aio.submit(
+                srv.endpoint, {"op": "run", "payload": payloads[idx]},
+                timeout=60, callback=cb(idx),
+            )
+
+        def cb(idx):
+            def f(resp, exc):
+                if exc is not None:
+                    with lock:
+                        failures[0] += 1
+                    submit(idx)  # resubmit until it lands
+                    return
+                with lock:
+                    results[idx] = resp
+                    if len(results) == len(payloads):
+                        done.set()
+            return f
+
+        for idx in payloads:
+            submit(idx)
+        assert done.wait(120)
+        assert failures[0] >= 1  # the partial fault really tore connections
+        for idx, resp in results.items():
+            assert resp["ok"] and resp["metrics"] == baseline[idx]
+    finally:
+        aio.close()
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_async_fleet_report_byte_identical_to_sequential(tmp_path):
+    d = make_plugin(tmp_path, "abi", 2)
+    reg.load_plugin_dir(d)
+    box = plugin_box("abi")
+    baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+    with LocalWorker(plugin_dirs=[d]) as w1, LocalWorker(plugin_dirs=[d]) as w2:
+        ex = SweepExecutor(
+            platforms=["cpu-host"], workers=2, iters=1, warmup=0,
+            remote=f"{w1.endpoint},{w2.endpoint}",
+        )
+        assert ex.transport == "async"  # fleet default
+        res = ex.run_box(box)
+    assert res.stats.errors == 0
+    assert res.csv() == baseline.csv()
+    # one dispatcher + the shared IO loop, NOT one thread per capacity slot
+    assert 1 <= res.stats.dispatch_threads <= 2
+
+
+def test_max_inflight_caps_async_admission(tmp_path):
+    d = make_plugin(tmp_path, "mif", 2)
+    reg.load_plugin_dir(d)
+    box = plugin_box("mif")
+    baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+    with LocalWorker(plugin_dirs=[d], capacity=4) as w:
+        ex = SweepExecutor(
+            platforms=["cpu-host"], workers=2, iters=1, warmup=0,
+            remote=w.endpoint, max_inflight=2,
+        )
+        sink = ex._fleet_sink(w.endpoint)
+        assert sink.capacity == 2  # override wins over advertised 4
+        res = ex.run_box(box)
+    assert res.stats.errors == 0
+    assert res.csv() == baseline.csv()
+
+
+# -- TCP_NODELAY (satellite) --------------------------------------------------
+def test_tcp_nodelay_on_client_and_accepted_sockets():
+    seen: list[int] = []
+
+    class RecordingServer(WorkerServer):
+        def finish_request(self, request, client_address):
+            try:
+                super().finish_request(request, client_address)
+            finally:
+                try:
+                    seen.append(
+                        request.getsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY)
+                    )
+                except OSError:
+                    pass
+
+    srv = RecordingServer("127.0.0.1", 0)
+    srv.serve_in_thread()
+    try:
+        host, port = remote_mod.parse_endpoint(srv.endpoint)
+        conn = remote_mod._Conn(host, port)
+        try:
+            assert conn.sock.getsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY) != 0
+            conn.sock.sendall(b'{"op": "ping"}\n')
+            assert json.loads(conn.rfile.readline())["ok"]
+        finally:
+            # makefile() dup'd the fd: close BOTH so the server sees EOF
+            conn.rfile.close()
+            conn.close()
+        deadline = time.monotonic() + 5
+        while not seen and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert seen and seen[0] != 0  # server set NODELAY on the accepted socket
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+# -- 2. scheduler async sinks -------------------------------------------------
+def _no_run(unit):
+    raise AssertionError("run() must not be called on an async sink")
+
+
+def _async_echo_sink(name: str, capacity: int, delay_s: float = 0.01) -> Sink:
+    """Completes each unit from a timer thread, like a transport loop would."""
+
+    def submit(unit, done):
+        threading.Timer(delay_s, lambda: done(result=f"ran-{unit}")).start()
+
+    return Sink(name=name, capacity=capacity, run=_no_run, submit=submit)
+
+
+def test_scheduler_drives_async_sinks_with_one_dispatcher_thread():
+    sched = FleetScheduler(
+        [_async_echo_sink("a", 8), _async_echo_sink("b", 8)]
+    )
+    outcomes = sched.run([WorkItem(i) for i in range(40)])
+    assert [o.result for o in outcomes] == [f"ran-{i}" for i in range(40)]
+    assert all(o.error is None for o in outcomes)
+    # 16 capacity slots across 2 sinks, ONE dispatcher thread total
+    assert sched.threads_started == 1
+
+
+def test_scheduler_async_sink_error_retries_on_other_sink():
+    def failing_submit(unit, done):
+        threading.Timer(0.01, lambda: done(error=RuntimeError("boom"))).start()
+
+    bad = Sink(name="bad", capacity=2, run=lambda u: None, submit=failing_submit)
+    good = _async_echo_sink("good", 2)
+    sched = FleetScheduler([bad, good])
+    outcomes = sched.run([WorkItem(i) for i in range(6)])
+    assert all(o.error is None for o in outcomes)
+    assert all(o.sink == "good" for o in outcomes)
+
+
+def test_scheduler_mark_dead_prunes_finished_threads():
+    def run_ok(u):
+        time.sleep(0.005)
+        return u, False
+
+    sinks = [Sink(name=f"s{i}", capacity=2, run=run_ok) for i in range(3)]
+    sched = FleetScheduler(sinks)
+    outcomes = sched.run([WorkItem(i) for i in range(12)])
+    assert all(o.error is None for o in outcomes)
+    assert sched.threads_started == 6  # 3 sinks x 2 pullers over the run
+    # every puller exited (run -> close joined them) and mark_dead prunes
+    # the corpses instead of accumulating threads for the sweep's lifetime
+    sched.mark_dead("s0")
+    assert len(sched._threads) == 0
+
+
+def test_scheduler_close_joins_within_total_bound():
+    def wedge(u):
+        time.sleep(60)
+        return u, False
+
+    sched = FleetScheduler([Sink(name=f"w{i}", capacity=4, run=wedge) for i in range(4)])
+
+    def run():
+        sched.run([WorkItem(i) for i in range(16)])
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    time.sleep(0.2)  # let pullers claim and wedge
+    t0 = time.monotonic()
+    sched.close(timeout_s=1.0)
+    # 16 wedged threads, ONE shared deadline — not 16 x per-thread timeouts
+    assert time.monotonic() - t0 < 3.0
+
+
+# -- 3. cache-mediated work stealing ------------------------------------------
+def test_claim_is_exclusive_across_threads(tmp_path):
+    cache = ResultCache(tmp_path / "c.json")
+    wins: list[str] = []
+    barrier = threading.Barrier(8)
+
+    def racer(name):
+        barrier.wait()
+        if cache.try_claim("unit-1", name):
+            wins.append(name)
+
+    threads = [threading.Thread(target=racer, args=(f"r{i}",)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(wins) == 1  # O_EXCL create: exactly one winner
+    assert cache.claimed("unit-1")
+    assert cache.claim_owner("unit-1") == wins[0]
+    assert not cache.try_claim("unit-1", "latecomer")
+    # clear() erases claims too — a stale claim would silently disable
+    # stealing on the next pass
+    cache.clear()
+    assert not cache.claimed("unit-1")
+    assert cache.try_claim("unit-1", "fresh")
+
+
+def test_publish_and_refresh_cross_instance(tmp_path):
+    path = tmp_path / "c.json"
+    a = ResultCache(path)
+    b = ResultCache(path)
+    a.put("k1", {"m": 1.5}, task="t", params={}, platform="p")
+    assert b.get("k1") is None  # b's memory predates the put
+    a.publish("k1")
+    assert b.refresh("k1") == {"m": 1.5}  # disk re-read folds it in
+    assert b.get("k1") == {"m": 1.5}  # and it stays in memory
+    assert b.refresh("missing") is None
+
+
+def test_drained_shard_steals_sibling_leftovers(tmp_path):
+    d = make_plugin(tmp_path, "stl", 2)
+    reg.load_plugin_dir(d)
+    box = plugin_box("stl")
+    baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+    path = tmp_path / "shared.json"
+    # Shard 0 finishes first (runs alone) and steals ALL of shard 1's units.
+    ex0 = SweepExecutor(
+        platforms=["cpu-host"], iters=1, warmup=0,
+        cache=ResultCache(path), steal=True,
+    )
+    res0 = ex0.run_box(box, shard=ShardSpec(0, 2))
+    assert res0.stats.errors == 0
+    assert res0.stats.stolen > 0
+    # Shard 1 arrives late: every one of its units was stolen + published.
+    ex1 = SweepExecutor(
+        platforms=["cpu-host"], iters=1, warmup=0,
+        cache=ResultCache(path), steal=True,
+    )
+    res1 = ex1.run_box(box, shard=ShardSpec(1, 2))
+    assert res1.stats.errors == 0
+    assert res1.stats.executed == 0  # all hits through claims + publish
+    assert res1.stats.cached == res0.stats.stolen
+    merged = merge_shard_reports([res0.rows, res1.rows], box=box)
+    assert to_csv(merged) == baseline.csv()
+
+
+def test_steal_skips_already_claimed_units(tmp_path):
+    d = make_plugin(tmp_path, "stc", 2)
+    reg.load_plugin_dir(d)
+    box = plugin_box("stc")
+    path = tmp_path / "shared.json"
+    cache = ResultCache(path)
+    ex = SweepExecutor(
+        platforms=["cpu-host"], iters=1, warmup=0, cache=cache, steal=True
+    )
+    # Pre-claim every foreign unit as if another stealer got there first.
+    _, foreign = ex._expand_partition(box, ex.platforms, ShardSpec(0, 2))
+    assert foreign
+    for u in foreign:
+        assert cache.try_claim(u.skey, "someone-else")
+    res = ex.run_box(box, shard=ShardSpec(0, 2))
+    assert res.stats.errors == 0
+    assert res.stats.stolen == 0  # lost every claim race, stole nothing
+
+
+# -- 4. advertised capacity (zero-ping discovery) -----------------------------
+def test_heartbeat_throughput_lands_in_fleet_view():
+    registry = MembershipRegistry(heartbeat_interval_s=0.2)
+    registry.register("w:7001", capacity=2)
+    registry.handle(
+        {"op": "heartbeat", "endpoint": "w:7001", "capacity": 4,
+         "throughput": {"ewma_s": 0.25, "units": 10}}
+    )
+    rows = registry.members()
+    assert rows[0]["capacity"] == 4
+    assert rows[0]["throughput"] == {"ewma_s": 0.25, "units": 10}
+
+
+def test_registry_discovery_needs_zero_startup_pings(tmp_path):
+    """Capacity comes from heartbeat-advertised records — even for an
+    endpoint that answers NO pings (nothing listens on it)."""
+    srv = MembershipServer(
+        "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=60.0)
+    )
+    srv.serve_in_thread()
+    try:
+        dead = "127.0.0.1:9"  # discard port: a ping would hang then fail
+        srv.registry.register(dead, capacity=1)
+        srv.registry.heartbeat(dead, capacity=5, throughput={"ewma_s": 0.5})
+        ex = SweepExecutor(
+            platforms=["cpu-host"], workers=2, iters=1, warmup=0,
+            fleet_registry=srv.endpoint,
+        )
+        t0 = time.monotonic()
+        assert ex._remote_endpoints() == [dead]
+        assert ex._endpoint_capacity(dead) == 5
+        weights = ex._auto_weights(1)
+        assert time.monotonic() - t0 < 2.0, "discovery pinged the dead worker"
+        assert len(weights) == 1
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_fleet_watcher_observe_tap_sees_member_rows():
+    srv = MembershipServer(
+        "127.0.0.1", 0, registry=MembershipRegistry(heartbeat_interval_s=60.0)
+    )
+    srv.serve_in_thread()
+    try:
+        srv.registry.register("w:7001", capacity=3)
+        seen: list[list[dict]] = []
+        sched = FleetScheduler([Sink(name="local", capacity=1, run=lambda u: (u, False))])
+        watcher = FleetWatcher(
+            srv.endpoint, sched,
+            make_sink=lambda ep: Sink(name=ep, capacity=1, run=lambda u: (u, False)),
+            observe=seen.append,
+        )
+        watcher.poll_once()
+        assert seen and seen[0][0]["endpoint"] == "w:7001"
+        assert seen[0][0]["capacity"] == 3
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+# -- config surface -----------------------------------------------------------
+def test_transport_flags_thread_through_config():
+    p = argparse.ArgumentParser()
+    config_mod.add_sweep_args(p)
+    ns = p.parse_args(
+        ["--transport", "threaded", "--max-inflight", "7",
+         "--steal", "--shard", "0/2", "--cache", "c.json"]
+    )
+    cfg = config_mod.SweepConfig.from_args(ns)
+    assert (cfg.transport, cfg.max_inflight, cfg.steal) == ("threaded", 7, True)
+    ex = config_mod.make_executor(cfg, cache=None)
+    assert (ex.transport, ex.max_inflight, ex.steal) == ("threaded", 7, True)
+    errors: list[str] = []
+    config_mod.validate_sweep(cfg, errors.append, ping_remote=False)
+    assert errors == []
+
+
+def test_steal_flag_requires_shard_and_cache():
+    errors: list[str] = []
+    config_mod.validate_sweep(
+        config_mod.SweepConfig(steal=True), errors.append, ping_remote=False
+    )
+    assert any("--shard" in e for e in errors)
+    errors.clear()
+    config_mod.validate_sweep(
+        config_mod.SweepConfig(steal=True, shard="0/2", no_cache=True),
+        errors.append, ping_remote=False,
+    )
+    assert any("--no-cache" in e for e in errors)
+
+
+def test_executor_rejects_bad_transport_knobs():
+    with pytest.raises(ValueError, match="transport"):
+        SweepExecutor(transport="carrier-pigeon")
+    with pytest.raises(ValueError, match="max_inflight"):
+        SweepExecutor(max_inflight=-1)
