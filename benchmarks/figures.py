@@ -169,10 +169,12 @@ FIGURES: dict[str, dict] = {
             # Fused-vs-unfused comparison rows: the same pushdown plan with
             # compaction routed through the block_compact kernel (impl of
             # the rows above defaults to the unfused jnp nonzero+gather).
+            # Scale 1.0 runs here too: the HBM-streaming compaction path
+            # lifts the old VMEM bound on the kernel rows' capacity.
             {
                 "task": "pushdown",
                 "params": {
-                    "scale": ["0.01", "0.1"],
+                    "scale": ["0.01", "0.1", "1.0"],
                     "selectivity": [0.01, 0.1, 0.5],
                     "plan": ["pushdown"],
                     "impl": ["kernel"],

@@ -169,6 +169,23 @@ class AsyncFleetTransport:
             raise box["exc"]
         return box["resp"]
 
+    def prewarm(self, endpoints: list[str]) -> None:
+        """Start dialing every endpoint now, all concurrently, through the
+        one event loop.
+
+        Without this the first request to each endpoint pays its own dial;
+        a caller that pings N workers serially at cold start pays N round
+        trips of connect latency back-to-back.  Prewarming turns the
+        fleet-wide cold start into ONE dial wave: every socket is opened
+        non-blocking in the same loop pass and the handshakes overlap.
+        Idempotent — endpoints already connected (or mid-dial) are left
+        alone, and requests submitted while a dial is in flight just join
+        that endpoint's backlog as usual.
+        """
+        for ep in endpoints:
+            parse_endpoint(ep)
+        self._post(("prewarm", list(endpoints)))
+
     def drop(self, endpoint: str) -> None:
         """Close the endpoint's connection and fail its pending requests
         (worker shut down; a later submit re-dials from scratch)."""
@@ -222,6 +239,13 @@ class AsyncFleetTransport:
                 op, arg = self._inbox.popleft()
             if op == "submit":
                 self._handle_submit(arg)
+            elif op == "prewarm":
+                for endpoint in arg:
+                    es = self._endpoints.get(endpoint)
+                    if es is None:
+                        es = self._endpoints[endpoint] = _Endpoint(endpoint)
+                    if es.state == "idle":
+                        self._start_connect(es)
             elif op == "drop":
                 es = self._endpoints.get(arg)
                 if es is not None:

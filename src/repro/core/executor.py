@@ -554,6 +554,60 @@ class SweepExecutor:
                     idx += 1
         return units
 
+    def _prewarm_fleet(self, endpoints: list[str], timeout: float = 30.0) -> None:
+        """Dial the whole fleet and learn every capacity in ONE wave.
+
+        Without this, fleet cold start is serial: each ``_fleet_sink``
+        calls :meth:`_endpoint_capacity`, whose fallback ping opens a
+        connection and blocks for the round trip — N workers cost N
+        back-to-back dials before the first unit moves.  On the async
+        transport this method instead (1) prewarms every endpoint socket
+        concurrently through the one event loop and (2) issues all the
+        capacity pings as concurrent async requests, recording answers in
+        the advertised map so the per-sink lookups below are pure dict
+        hits.  Endpoints that fail to answer are simply not advertised —
+        they keep the old per-sink fallback path and its failure
+        semantics.  No-op on the threaded transport and for endpoints
+        that already advertised (registry fleets heartbeat capacity).
+        """
+        if self.transport != "async":
+            return
+        todo = [ep for ep in endpoints if ep not in self._advertised]
+        if not todo:
+            return
+        from repro.core.aiotransport import get_async_transport
+
+        aio = get_async_transport()
+        aio.prewarm(list(endpoints))
+        lock = threading.Lock()
+        done = threading.Event()
+        answers: dict[str, dict[str, Any]] = {}
+        remaining = len(todo)
+
+        def on_pong(resp, exc, _ep):
+            nonlocal remaining
+            with lock:
+                if exc is None and resp is not None and resp.get("ok"):
+                    answers[_ep] = resp
+                remaining -= 1
+                if remaining == 0:
+                    done.set()
+
+        for ep in todo:
+            aio.submit(
+                ep, {"op": "ping"}, timeout=timeout,
+                callback=lambda r, e, _ep=ep: on_pong(r, e, _ep),
+            )
+        done.wait(timeout + 5.0)  # bounded: the loop enforces each deadline
+        for ep, resp in answers.items():
+            self._advertise(
+                {
+                    "endpoint": ep,
+                    "capacity": resp.get("capacity"),
+                    "throughput": resp.get("throughput"),
+                }
+            )
+
     def _endpoint_capacity(self, endpoint: str, fallback: int = 1) -> int:
         """A worker's advertised concurrency, else ``fallback``.
 
@@ -596,6 +650,7 @@ class SweepExecutor:
 
         model = CostModel(self.cache)
         endpoints = self._remote_endpoints()
+        self._prewarm_fleet(endpoints[:count])
         evidence: list[dict[str, Any]] = []
         for i in range(count):
             if i < len(endpoints):
@@ -1043,6 +1098,9 @@ class SweepExecutor:
                     if stats is not None:
                         stats.blacklisted = len(endpoints) - len(healthy)
                     endpoints = healthy
+            # One concurrent dial+ping wave before the per-sink capacity
+            # lookups: fleet-wide cold start stops being serial round trips.
+            self._prewarm_fleet(endpoints)
             sinks = [self._fleet_sink(ep) for ep in endpoints]
             items = [WorkItem(u, costs.get(u.skey or "", 1.0), None) for u in units]
             return sinks, items, None

@@ -40,7 +40,8 @@ def filter_mask(table: Table, *preds: Callable[[Table], jax.Array]) -> jax.Array
 
 
 def compact(
-    table: Table, mask: jax.Array, max_rows: int, use_pallas: bool = False
+    table: Table, mask: jax.Array, max_rows: int, use_pallas: bool = False,
+    stream: str = "auto",
 ) -> tuple[Table, jax.Array]:
     """Gather qualifying rows into a fixed-size buffer (static shapes).
 
@@ -53,13 +54,17 @@ def compact(
     ``nonzero`` + one gather per column; only 1-D columns whose values are
     exactly representable in f32 survive the kernel's column matrix, so the
     caller selects the scanned columns first (the pushdown plan does).
+    ``stream`` passes through to the kernel wrapper: ``"auto"`` keeps small
+    capacities on the VMEM-resident kernel and switches to the HBM-streaming
+    kernel once the output buffer would blow the VMEM budget, so
+    ``max_rows`` is memory-bounded rather than VMEM-bounded.
     """
     if use_pallas:
         from repro.kernels import ops as kops
 
         names = table.names
         colmat = jnp.stack([table[n].astype(jnp.float32) for n in names])
-        packed, cnt = kops.block_compact(colmat, mask, max_rows)
+        packed, cnt = kops.block_compact(colmat, mask, max_rows, stream=stream)
         out = Table(
             {n: packed[i].astype(table[n].dtype) for i, n in enumerate(names)}
         )

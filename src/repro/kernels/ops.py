@@ -16,6 +16,11 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.block_compact import SUB as _COMPACT_SUB
 from repro.kernels.block_compact import block_compact as _compact_kernel
+from repro.kernels.block_compact import (
+    stream_chunk as _stream_chunk,
+    stream_finalize as _stream_finalize,
+    stream_init as _stream_init,
+)
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
 from repro.kernels.filter_scan import filter_agg as _filter_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
@@ -113,7 +118,7 @@ def filter_agg(cols, lo, hi, lo2, hi2, *, block_n: int = 16384, use_pallas: bool
     if cols_p.shape != cols.shape:
         # padded rows must fail the predicate: fill filter cols with +inf
         pad = cols_p.shape[1] - cols.shape[1]
-        filler = jnp.full((4, pad), jnp.finfo(jnp.float32).max, cols.dtype)
+        filler = jnp.full((cols.shape[0], pad), jnp.finfo(jnp.float32).max, cols.dtype)
         cols_p = jnp.concatenate([cols, filler], axis=1)
     return _filter_kernel(cols_p, lo, hi, lo2, hi2, block_n=block_n, interpret=_interpret())
 
@@ -186,18 +191,39 @@ def group_filter_agg_multi(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("cap", "block_n", "use_pallas"))
-def block_compact(cols, mask, cap: int, *, block_n: int = 65536, use_pallas: bool = True):
+#: VMEM the resident block_compact may spend on its [C, cap + SUB] output
+#: before ``stream="auto"`` switches to the HBM-streaming variant.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cap", "block_n", "stream", "chunk_n", "use_pallas")
+)
+def block_compact(
+    cols, mask, cap: int, *,
+    block_n: int = 65536,
+    stream: str = "auto",
+    chunk_n: int = 1 << 21,
+    use_pallas: bool = True,
+):
     """Compact the masked rows of a [C, N] block into a [C, cap] buffer.
 
     Returns (out, count): ``out[:, j]`` is the j-th qualifying row for
     ``j < min(count, cap)``, zero beyond; ``count`` is the total mask
     population.  One fused pass instead of ``nonzero`` + per-column gather.
+
+    ``stream`` picks the kernel variant: ``"never"`` is the VMEM-resident
+    kernel (cap bounded by :data:`VMEM_BUDGET_BYTES`), ``"always"`` the
+    HBM-streaming kernel (cap bounded by HBM), and ``"auto"`` (default)
+    streams exactly when the resident output would blow the budget — so
+    callers never lose the small-cap fast path.  Streamed inputs longer
+    than ``chunk_n`` rows are split across kernel invocations with the
+    offset/count state carried between calls (the chunked driver).
     """
     if not use_pallas:
         return ref.block_compact_ref(cols, mask, cap)
     mask = (mask.reshape(1, -1) != 0).astype(jnp.int32)
-    n = cols.shape[1]
+    c, n = cols.shape
     # Blocks must hold whole sub-tiles; pad the tail with mask=0 rows.
     bn = min(-(-block_n // _COMPACT_SUB) * _COMPACT_SUB,
              -(-n // _COMPACT_SUB) * _COMPACT_SUB)
@@ -205,4 +231,22 @@ def block_compact(cols, mask, cap: int, *, block_n: int = 65536, use_pallas: boo
     if target != n:
         cols = jnp.pad(cols, ((0, 0), (0, target - n)))
         mask = jnp.pad(mask, ((0, 0), (0, target - n)))
-    return _compact_kernel(cols, mask, cap, block_n=bn, interpret=_interpret())
+    if stream == "auto":
+        resident_bytes = c * (cap + _COMPACT_SUB) * 4
+        stream = "always" if resident_bytes > VMEM_BUDGET_BYTES else "never"
+    if stream == "never":
+        return _compact_kernel(cols, mask, cap, block_n=bn, interpret=_interpret())
+    if stream != "always":
+        raise ValueError(f"stream must be auto/always/never, got {stream!r}")
+    # Chunked driver: one streaming-kernel invocation per chunk_n rows, the
+    # (out, state, carry) triple threaded through input_output_aliases so
+    # every chunk lands in one HBM allocation.
+    cn = max(bn, (chunk_n // bn) * bn)
+    state = _stream_init(c, cap)
+    for s in range(0, target, cn):
+        e = min(s + cn, target)
+        state = _stream_chunk(
+            state, cols[:, s:e], mask[:, s:e], cap,
+            block_n=bn, interpret=_interpret(),
+        )
+    return _stream_finalize(state, cap)

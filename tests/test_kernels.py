@@ -292,3 +292,121 @@ def test_block_compact_keeps_zero_valued_rows():
     # row 0 qualifies and is all-zero in col 0; it still occupies slot 0
     assert int(cnt) == int(ecnt)
     assert float(out[1, 0]) == 0.0 and float(out[1, 1]) == 3.0
+
+
+# ---------------------------------------------------------------------------
+# block_compact streaming variant: HBM-resident output, double-buffered DMA.
+def _stream_case(n, sel, cap, seed, c=4, **kw):
+    k = jax.random.fold_in(KEY, seed)
+    cols = jax.random.normal(k, (c, n), jnp.float32)
+    mask = jax.random.uniform(jax.random.fold_in(k, 1), (1, n)) < sel
+    out, cnt = block_compact_stream(
+        cols, mask.astype(jnp.int32), cap, interpret=True, **kw
+    )
+    exp, ecnt = ref.block_compact_ref(cols, mask, cap)
+    assert int(cnt) == int(ecnt), (n, sel, cap)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    return cols, mask
+
+
+from repro.kernels.block_compact import (  # noqa: E402 - grouped with its tests
+    SUB,
+    block_compact_stream,
+    stream_chunk,
+    stream_finalize,
+    stream_init,
+)
+
+
+def test_stream_matches_oracle_below_and_above_vmem_bound():
+    """Bit-for-bit oracle equality on both sides of the resident kernel's
+    capacity ceiling (VMEM_BUDGET_BYTES / 16 rows at 4 columns)."""
+    bound = ops.VMEM_BUDGET_BYTES // 16
+    _stream_case(65536, 0.4, bound // 4, seed=11, block_n=8192)
+    _stream_case(65536, 0.4, bound * 2, seed=12, block_n=8192)
+
+
+def test_stream_runs_at_4m_cap():
+    """The acceptance bar: cap >= 4M rows (output far past the 8 MB VMEM
+    budget) streams byte-identically to the oracle."""
+    cap = 4 * 1024 * 1024
+    assert 4 * (cap + SUB) * 4 > ops.VMEM_BUDGET_BYTES
+    _stream_case(65536, 0.9, cap, seed=13, block_n=16384)
+
+
+def test_stream_overflow_clamps_at_cap_boundary():
+    """Counts past cap are dropped exactly like nonzero(size=cap): sweep
+    caps straddling the qualifying count, including mid-sub-tile caps."""
+    n = 16384
+    for cap in (100, SUB, SUB + 1, 3 * SUB - 7, 8000):
+        _stream_case(n, 0.5, cap, seed=cap, block_n=4096)
+
+
+def test_stream_ragged_carry_flush():
+    """Counts engineered to straddle SUB-tile slots: the carry buffer must
+    flush exactly when it fills and the epilogue must place the ragged
+    tail at the right offset."""
+    n = 8192
+    for count in (SUB - 1, SUB, SUB + 1, 2 * SUB - 1, 2 * SUB + 3, 5 * SUB):
+        cols = jax.random.normal(jax.random.fold_in(KEY, count), (4, n), jnp.float32)
+        mask = (jnp.arange(n) < count).astype(jnp.int32).reshape(1, -1)
+        out, cnt = block_compact_stream(cols, mask, 4096, block_n=2048, interpret=True)
+        exp, ecnt = ref.block_compact_ref(cols, mask, 4096)
+        assert int(cnt) == int(ecnt) == count
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_stream_empty_and_all_pass_blocks():
+    """Whole grid blocks with zero qualifiers (no emission at all) and
+    all-qualifier blocks (an emission every sub-tile), plus alternating
+    full/empty blocks."""
+    n = 8192
+    _stream_case(n, 0.0, 2048, seed=21, block_n=2048)
+    _stream_case(n, 1.0, n, seed=22, block_n=2048)
+    cols = jax.random.normal(jax.random.fold_in(KEY, 23), (4, n), jnp.float32)
+    mask = ((jnp.arange(n) // 2048) % 2 == 0).astype(jnp.int32).reshape(1, -1)
+    out, cnt = block_compact_stream(cols, mask, n, block_n=2048, interpret=True)
+    exp, ecnt = ref.block_compact_ref(cols, mask, n)
+    assert int(cnt) == int(ecnt) == n // 2
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_stream_chunked_driver_equals_single_call():
+    """stream_init/chunk/finalize across 4 chunks == one-shot call == the
+    dispatcher's chunked path (chunk_n smaller than the input)."""
+    n, cap = 8192, 3000
+    k = jax.random.fold_in(KEY, 31)
+    cols = jax.random.normal(k, (4, n), jnp.float32)
+    mask = (jax.random.uniform(jax.random.fold_in(k, 1), (1, n)) < 0.6).astype(jnp.int32)
+    state = stream_init(4, cap)
+    for i in range(4):
+        sl = slice(i * 2048, (i + 1) * 2048)
+        state = stream_chunk(
+            state, cols[:, sl], mask[:, sl], cap, block_n=1024, interpret=True
+        )
+    out_c, cnt_c = stream_finalize(state, cap)
+    out_s, cnt_s = block_compact_stream(cols, mask, cap, block_n=1024, interpret=True)
+    out_d, cnt_d = ops.block_compact(
+        cols, mask, cap, stream="always", chunk_n=2048, block_n=1024
+    )
+    exp, ecnt = ref.block_compact_ref(cols, mask, cap)
+    assert int(cnt_c) == int(cnt_s) == int(cnt_d) == int(ecnt)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(exp))
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(exp))
+    np.testing.assert_array_equal(np.asarray(out_d), np.asarray(exp))
+
+
+def test_auto_dispatch_streams_past_vmem_budget():
+    """stream='auto' routes small caps to the resident kernel and big caps
+    to the streaming kernel; both agree with the oracle."""
+    n = 4096
+    k = jax.random.fold_in(KEY, 41)
+    cols = jax.random.normal(k, (4, n), jnp.float32)
+    mask = (jax.random.uniform(jax.random.fold_in(k, 1), (1, n)) < 0.5).astype(jnp.int32)
+    small = 1024  # resident route
+    big = ops.VMEM_BUDGET_BYTES // 16 + SUB  # first cap past the budget
+    for cap in (small, big):
+        out, cnt = ops.block_compact(cols, mask, cap, block_n=2048)
+        exp, ecnt = ref.block_compact_ref(cols, mask, cap)
+        assert int(cnt) == int(ecnt)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))

@@ -304,6 +304,49 @@ def test_max_inflight_caps_async_admission(tmp_path):
     assert res.csv() == baseline.csv()
 
 
+def test_fleet_cold_start_connects_concurrently(monkeypatch):
+    """64-endpoint cold start is ONE dial+ping wave through the event loop:
+    single-digit wall time, every capacity learned, and ZERO serial
+    per-sink fallback pings afterwards."""
+    from repro.core.aiotransport import get_async_transport
+
+    servers = [WorkerServer("127.0.0.1", 0, capacity=2) for _ in range(64)]
+    for s in servers:
+        s.serve_in_thread()
+    eps = [s.endpoint for s in servers]
+    try:
+        ex = SweepExecutor(
+            platforms=["cpu-host"], workers=2, iters=1, warmup=0,
+            remote=",".join(eps),
+        )
+        assert ex.transport == "async"
+        serial_pings: list[str] = []
+        orig = remote_mod.get_transport
+
+        def counting(ep):
+            serial_pings.append(ep)
+            return orig(ep)
+
+        monkeypatch.setattr(remote_mod, "get_transport", counting)
+        t0 = time.monotonic()
+        ex._prewarm_fleet(eps)
+        sinks = [ex._fleet_sink(ep) for ep in eps]
+        wall = time.monotonic() - t0
+        assert wall < 10.0, f"cold start took {wall:.1f}s for 64 endpoints"
+        assert [s.capacity for s in sinks] == [2] * 64  # pings all landed
+        assert serial_pings == []  # capacity lookups were pure dict hits
+        aio = get_async_transport()
+        connected = [ep for ep in eps if ep in aio._endpoints]
+        assert len(connected) == 64  # every socket opened through one loop
+        # idempotent: a second wave has nothing left to ask
+        ex._prewarm_fleet(eps)
+        assert serial_pings == []
+    finally:
+        for s in servers:
+            s.shutdown()
+            s.server_close()
+
+
 # -- TCP_NODELAY (satellite) --------------------------------------------------
 def test_tcp_nodelay_on_client_and_accepted_sockets():
     seen: list[int] = []
