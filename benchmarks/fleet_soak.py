@@ -20,12 +20,22 @@ per commit:
      byte-diffed against the baseline; any divergence or task error fails
      the benchmark.
 
-Results land in a BENCH JSON (``--out``): passes completed, per-mode fault
-counts, respawns, redispatch/blacklist totals, and the measured hang
-detection overhead.
+  4. **Control plane** — a 3-replica :class:`RegistryReplicas` membership
+     plane serves discovery while passes run: kill+restart cycles on 0, 1,
+     and 2 replicas, a full blackout (all 3 down, restarted EMPTY — they
+     must re-converge from worker re-admission), then seeded worker chaos
+     combined with seeded :class:`RegistryChaos`.  Every pass must stay
+     byte-identical with ZERO re-dispatches attributable to the registry
+     outages: losing the control plane defers joins/leaves, it never
+     un-schedules placed work.
+
+Results land in a BENCH JSON (``--out``); the control-plane phase also
+writes its own report (``--control-out``, the BENCH_10 artifact: wall time
++ re-dispatch counts per replica-kill count, byte-diffed against baseline).
 
 Usage: python -m benchmarks.fleet_soak [--out BENCH_7.json] [--workers 4]
        [--duration 60] [--seed 7] [--fault-period 1.0]
+       [--control-out BENCH_10.json] [--control-duration 15]
 """
 from __future__ import annotations
 
@@ -37,11 +47,19 @@ import time
 from collections import Counter
 from pathlib import Path
 
+import threading
+
 from repro.core import registry as reg
 from repro.core.box import Box
 from repro.core.cache import ResultCache
 from repro.core.executor import SweepExecutor
-from repro.core.faults import FaultSpec, FaultyFleet, inject
+from repro.core.faults import (
+    FaultSpec,
+    FaultyFleet,
+    RegistryChaos,
+    RegistryReplicas,
+    inject,
+)
 from repro.core.remote import LocalWorker, wait_members
 from repro.runtime.membership import MembershipRegistry, MembershipServer
 
@@ -221,6 +239,135 @@ def phase_soak(
         srv.server_close()
 
 
+def phase_control_plane(
+    plugin: Path,
+    box: Box,
+    baseline_csv: str,
+    tmp: Path,
+    size: int,
+    seed: int,
+    chaos_duration_s: float,
+    transport: str,
+    passes_per_case: int = 3,
+) -> dict:
+    """Sweep passes while the REGISTRY replicas (not the workers) misbehave.
+
+    A 3-replica plane serves membership while a disruptor thread cycles
+    kill+restart on 0, 1, and 2 replicas mid-pass, then a full blackout
+    (all 3 down at once, restarted empty), then seeded worker chaos AND
+    seeded registry chaos together.  The invariant everywhere: reports stay
+    byte-identical to the fault-free baseline with zero re-dispatches
+    attributable to the control plane — losing registries defers
+    joins/leaves, it never un-schedules work already placed on sinks.
+    """
+    REPLICAS = 3
+    with RegistryReplicas(REPLICAS, heartbeat_interval_s=BEAT_S) as plane:
+        with FaultyFleet(
+            size, register=plane.register, plugin_dirs=[plugin], seed=seed,
+            heartbeat_interval_s=BEAT_S,
+        ) as fleet:
+            cache = ResultCache(tmp / "control-cache.json", max_entries=0)
+            ex = _fleet_executor(plane.register, cache, workers=size, transport=transport)
+            ex.run_box(box)  # seed cost evidence
+            cache.clear()
+
+            def run_passes(n: int) -> dict:
+                t0 = time.monotonic()
+                redispatched = poll_failures = 0
+                for i in range(n):
+                    res = ex.run_box(box)
+                    assert res.stats.errors == 0, (
+                        f"pass {i} had {res.stats.errors} task errors"
+                    )
+                    assert res.csv() == baseline_csv, (
+                        f"pass {i} report diverged from the fault-free baseline"
+                    )
+                    redispatched += res.stats.redispatched
+                    poll_failures = max(
+                        poll_failures, res.stats.registry_poll_failures
+                    )
+                    cache.clear()
+                return {
+                    "passes": n,
+                    "wall_s": round(time.monotonic() - t0, 3),
+                    "redispatched": redispatched,
+                    "registry_poll_failures": poll_failures,
+                }
+
+            cases = []
+            for kills in (0, 1, 2, REPLICAS):
+                blackout = kills == REPLICAS
+                stop = threading.Event()
+
+                def disrupt(k=kills) -> None:
+                    # Cycle: down for ~a suspect window, then back, repeat —
+                    # every pass overlaps at least one kill or one recovery.
+                    while not stop.is_set():
+                        stop.wait(0.4)
+                        if stop.is_set() or k == 0:
+                            continue
+                        for i in range(k):
+                            plane.kill(i)
+                        stop.wait(1.5)
+                        for i in range(k):
+                            plane.restart(i)
+
+                t = threading.Thread(target=disrupt, daemon=True, name="registry-disruptor")
+                t.start()
+                try:
+                    case = run_passes(passes_per_case)
+                finally:
+                    stop.set()
+                    t.join(timeout=10.0)
+                    for i in range(REPLICAS):
+                        plane.repair(i)
+                # Give the healed plane one settle window, then require the
+                # full fleet visible again before the next case.
+                wait_members(plane.register, count=size, timeout=60)
+                assert case["redispatched"] == 0, (
+                    f"{kills} replica kills caused {case['redispatched']} "
+                    f"re-dispatches — registry loss must never un-schedule work"
+                )
+                case["kills"] = kills
+                case["blackout"] = blackout
+                cases.append(case)
+
+            # Finale: worker chaos AND control-plane chaos, same seeds.
+            chaos = RegistryChaos(plane, seed=seed, max_sleep_s=1.5, min_up=1)
+            fleet.start(period_s=1.0)
+            chaos.start(period_s=0.7)
+            passes = 0
+            redispatched = 0
+            t0 = time.monotonic()
+            while time.monotonic() - t0 < chaos_duration_s or passes == 0:
+                res = ex.run_box(box)
+                assert res.stats.errors == 0
+                assert res.csv() == baseline_csv, (
+                    f"chaos pass {passes} diverged from the fault-free baseline"
+                )
+                redispatched += res.stats.redispatched
+                passes += 1
+                cache.clear()
+            worker_events = fleet.stop()
+            registry_events = chaos.stop()
+        return {
+            "replicas": REPLICAS,
+            "workers": size,
+            "seed": seed,
+            "kill_cases": cases,
+            "chaos": {
+                "duration_s": round(time.monotonic() - t0, 1),
+                "passes": passes,
+                "worker_faults": len(worker_events),
+                "registry_faults": dict(
+                    sorted(Counter(e.spec.mode for e in registry_events).items())
+                ),
+                "redispatched": redispatched,
+                "identical": True,
+            },
+        }
+
+
 def main(argv: list[str] | None = None) -> int:
     p = argparse.ArgumentParser(
         prog="benchmarks.fleet_soak", description="elastic-fleet fault-injection soak"
@@ -234,6 +381,14 @@ def main(argv: list[str] | None = None) -> int:
         "--transport", choices=("threaded", "async"), default="async",
         help="fleet sink wire strategy the soak drives (default: async)",
     )
+    p.add_argument(
+        "--control-out", default=None, metavar="PATH",
+        help="also write the control-plane phase's own BENCH JSON here",
+    )
+    p.add_argument(
+        "--control-duration", type=float, default=15.0, metavar="SECONDS",
+        help="length of the combined worker+registry chaos sub-phase",
+    )
     args = p.parse_args(argv)
 
     with tempfile.TemporaryDirectory(prefix="fleet-soak-") as tmpdir:
@@ -242,12 +397,12 @@ def main(argv: list[str] | None = None) -> int:
         reg.load_plugin_dir(plugin)
         box = _box("soak")
 
-        print("# phase 1/3: sequential baseline", flush=True)
+        print("# phase 1/4: sequential baseline", flush=True)
         baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
         assert baseline.stats.errors == 0
         baseline_csv = baseline.csv()
 
-        print("# phase 2/3: hang detection bound", flush=True)
+        print("# phase 2/4: hang detection bound", flush=True)
         hang = phase_hang_bound(plugin, box, baseline_csv, tmp, args.transport)
         print(
             f"#   clean={hang['clean_pass_s']}s hung={hang['hang_pass_s']}s "
@@ -256,7 +411,7 @@ def main(argv: list[str] | None = None) -> int:
         )
 
         print(
-            f"# phase 3/3: {args.duration:.0f}s soak, {args.workers} workers, "
+            f"# phase 3/4: {args.duration:.0f}s soak, {args.workers} workers, "
             f"seed {args.seed}",
             flush=True,
         )
@@ -273,18 +428,58 @@ def main(argv: list[str] | None = None) -> int:
             flush=True,
         )
 
+        print(
+            f"# phase 4/4: control-plane chaos (3 registry replicas, "
+            f"{args.control_duration:.0f}s combined chaos)",
+            flush=True,
+        )
+        control = phase_control_plane(
+            plugin, box, baseline_csv, tmp,
+            size=args.workers, seed=args.seed,
+            chaos_duration_s=args.control_duration,
+            transport=args.transport,
+        )
+        for case in control["kill_cases"]:
+            print(
+                f"#   kills={case['kills']}: {case['passes']} passes in "
+                f"{case['wall_s']}s, {case['redispatched']} redispatches, "
+                f"max dark-poll streak {case['registry_poll_failures']}",
+                flush=True,
+            )
+        print(
+            f"#   chaos: {control['chaos']['passes']} passes, "
+            f"{control['chaos']['worker_faults']} worker faults + "
+            f"{control['chaos']['registry_faults']} registry faults — "
+            f"all byte-identical",
+            flush=True,
+        )
+
     bench = {
         "bench": "fleet_soak",
         "transport": args.transport,
         "units": box.total_tests(),
         "hang_bound": hang,
         "soak": soak,
+        "control_plane": control,
     }
     text = json.dumps(bench, indent=1) + "\n"
     if args.out:
         Path(args.out).write_text(text)
     else:
         sys.stdout.write(text)
+    if args.control_out:
+        Path(args.control_out).write_text(
+            json.dumps(
+                {
+                    "bench": "fleet_soak_control_plane",
+                    "transport": args.transport,
+                    "units": box.total_tests(),
+                    **control,
+                },
+                indent=1,
+            )
+            + "\n"
+        )
     return 0
 
 

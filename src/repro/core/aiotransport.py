@@ -169,6 +169,51 @@ class AsyncFleetTransport:
             raise box["exc"]
         return box["resp"]
 
+    def request_many(
+        self,
+        requests: "list[tuple[str, dict[str, Any]]]",
+        timeout: float | None = None,
+    ) -> "list[tuple[dict[str, Any] | None, Exception | None]]":
+        """One concurrent wave of requests; block until every slot settles.
+
+        ``requests`` is ``[(endpoint, obj), ...]``; the return value is a
+        same-order list of ``(resp, exc)`` pairs — exactly one of the two is
+        non-``None`` per slot.  All requests ride the shared loop thread, so
+        a wave over N registry replicas costs one round trip, not N, and a
+        dead replica burns its own deadline without delaying the others.
+        Synchronous submit errors (a malformed endpoint) land in that slot's
+        ``exc`` instead of aborting the wave.
+        """
+        if not requests:
+            return []
+        results: list[tuple[dict[str, Any] | None, Exception | None]] = [
+            (None, None)
+        ] * len(requests)
+        remaining = len(requests)
+        lock = threading.Lock()
+        done = threading.Event()
+
+        def settle(i: int, resp: dict[str, Any] | None, exc: Exception | None) -> None:
+            nonlocal remaining
+            with lock:
+                results[i] = (resp, exc)
+                remaining -= 1
+                if remaining == 0:
+                    done.set()
+
+        for i, (endpoint, obj) in enumerate(requests):
+            try:
+                self.submit(
+                    endpoint,
+                    obj,
+                    timeout=timeout,
+                    callback=lambda r, e, _i=i: settle(_i, r, e),
+                )
+            except Exception as exc:  # malformed endpoint: settle the slot
+                settle(i, None, exc)
+        done.wait()  # bounded: the loop enforces every deadline
+        return results
+
     def prewarm(self, endpoints: list[str]) -> None:
         """Start dialing every endpoint now, all concurrently, through the
         one event loop.

@@ -146,11 +146,13 @@ def add_sweep_args(
         "its own sink, and @auto shard weights calibrate from their pings",
     )
     g.add_argument(
-        "--registry", default=None, metavar="HOST:PORT",
-        help="discover the worker fleet from a repro.runtime.membership "
-        "registry instead of --remote's endpoint list: sinks are the "
-        "registry's alive members and grow/shrink mid-sweep on membership "
-        "events (mutually exclusive with --remote)",
+        "--registry", default=None, metavar="HOST:PORT[,HOST:PORT...]",
+        help="discover the worker fleet from repro.runtime.membership "
+        "registry replica(s) instead of --remote's endpoint list: sinks "
+        "are the replicas' merged alive members and grow/shrink mid-sweep "
+        "on membership events; with several replicas every poll queries "
+        "all of them and fails over within the same tick (mutually "
+        "exclusive with --remote)",
     )
     g.add_argument(
         "--transport", choices=("threaded", "async"), default="async",
@@ -241,13 +243,20 @@ def validate_sweep(
         from repro.core import remote as remote_mod
 
         try:
-            remote_mod.parse_endpoint(cfg.registry)
+            replicas = remote_mod.parse_fleet(cfg.registry)
         except ValueError as e:
             error(str(e))
-        if ping_remote and not cfg.shard_plan:
+            replicas = []
+        if replicas and ping_remote and not cfg.shard_plan:
+            # ANY answering replica is enough — the plane is replicated and
+            # consumers fail over per poll; demanding all of them up front
+            # would turn one down replica into a sweep that can't start.
             try:
-                if not remote_mod.wait_ready(cfg.registry):
-                    error(f"membership registry {cfg.registry} is not answering")
+                if remote_mod.wait_any_ready(replicas) is None:
+                    error(
+                        f"no membership registry replica answering "
+                        f"(tried: {', '.join(replicas)})"
+                    )
             except remote_mod.RemoteExecutionError as e:
                 error(str(e))
     return shard

@@ -123,6 +123,10 @@ class SweepStats:
     # sweep (monotonic count): O(sum of sink capacities) on the threaded
     # transport, O(1) dispatcher (+ the shared async IO loop) on async.
     dispatch_threads: int = 0
+    # Consecutive membership polls at sweep end where NO registry replica
+    # answered — non-zero means the sweep finished under a dark control
+    # plane (results are still complete; joins/leaves were deferred).
+    registry_poll_failures: int = 0
 
 
 @dataclass
@@ -309,30 +313,35 @@ class SweepExecutor:
         """The STABLE name of the executor-wide fleet for cache identity.
 
         An explicit ``remote`` fleet is identified by its endpoint list; a
-        registry-discovered fleet by the registry's own endpoint — worker
-        endpoints there are ephemeral (workers join/leave, ports churn), so
-        folding them into cache keys would orphan every entry on the next
-        membership change.  ``None`` means purely local execution.
+        registry-discovered fleet by the registry's own replica list —
+        worker endpoints there are ephemeral (workers join/leave, ports
+        churn), so folding them into cache keys would orphan every entry on
+        the next membership change.  The replica list is sorted so the
+        identity is independent of listing order AND of which replica
+        happens to answer a given poll.  ``None`` means purely local
+        execution.
         """
         if self.remote is not None:
             return self.remote
         if self.fleet_registry is not None:
-            return f"registry://{self.fleet_registry}"
+            from repro.core.remote import parse_fleet
+
+            return "registry://" + ",".join(sorted(parse_fleet(self.fleet_registry)))
         return None
 
     def _remote_endpoints(self) -> list[str]:
         """The executor-wide worker fleet: the parsed ``remote`` list, or
-        the registry's CURRENT alive members (empty when neither is set —
-        and also when the registry is unreachable, which static paths treat
-        as "no fleet" while dynamic paths keep watching for joins)."""
+        the registry replicas' CURRENT merged alive members (empty when
+        neither is set — and also when no replica answers, which static
+        paths treat as "no fleet" while dynamic paths keep watching for
+        joins)."""
         from repro.core import remote as remote_mod
 
         if self.remote is not None:
             return remote_mod.parse_fleet(self.remote)
         if self.fleet_registry is not None:
-            try:
-                members = remote_mod.fleet_members(self.fleet_registry)
-            except remote_mod.RemoteExecutionError:
+            members, answered = remote_mod.fleet_view(self.fleet_registry)
+            if not answered:
                 return []
             for m in members:
                 self._advertise(m)
@@ -1083,8 +1092,17 @@ class SweepExecutor:
         endpoints = self._remote_endpoints()
         if not endpoints and self.fleet_registry is not None:
             # Elastic fleet with nobody home yet: give workers one grace
-            # window to register before declaring the fleet empty.
-            remote_mod.wait_members(self.fleet_registry, count=1, timeout=30.0)
+            # window to register before declaring the fleet empty.  The
+            # required wait's failure message carries the partial view
+            # (who registered, who is missing, which replicas answered).
+            try:
+                remote_mod.wait_members(
+                    self.fleet_registry, count=1, timeout=30.0, required=True
+                )
+            except remote_mod.RemoteExecutionError as e:
+                raise RemoteFleetEmpty(
+                    f"registry {self.fleet_registry} has no alive workers: {e}"
+                ) from e
             endpoints = self._remote_endpoints()
             if not endpoints:
                 raise RemoteFleetEmpty(
@@ -1180,6 +1198,7 @@ class SweepExecutor:
         finally:
             if watcher is not None:
                 watcher.stop()
+                out.stats.registry_poll_failures = watcher.poll_failures
             if proc_pool is not None:
                 # Don't wait: a wedged child (the reason its unit was
                 # speculated) must not block the sweep's return.

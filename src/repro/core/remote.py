@@ -101,6 +101,11 @@ CONNECT_BACKOFF_S = 0.2
 UNIT_DEADLINE_FACTOR = 10.0
 #: ...but never tighter than this floor (measurement noise headroom).
 MIN_UNIT_DEADLINE_S = 5.0
+#: Deadline for registry control-plane ops (fleet polls, beats, syncs):
+#: these are tiny table lookups — anything slower is a dead/partitioned
+#: replica, and waiting the full request ceiling on it would stall the
+#: beat wave / poll tick that the other replicas are ready to answer.
+REGISTRY_OP_TIMEOUT_S = 5.0
 
 
 class RemoteExecutionError(RuntimeError):
@@ -407,37 +412,98 @@ class WorkerServer(socketserver.ThreadingTCPServer):
 
     # -- membership ----------------------------------------------------------
     def start_heartbeat(self) -> threading.Thread | None:
-        """Register with the configured registry and beat until shutdown.
+        """Register with every configured registry replica and beat until
+        shutdown.
 
-        Registration retries forever in the background (the registry may
-        come up after the worker); a beat answered with an error or lost to
-        a transient outage is simply retried next interval — the registry
-        re-admits unknown endpoints on heartbeat, so a registry restart
-        heals without worker involvement.
+        ``register`` may name several replicas (``a:7170,b:7170,c:7170``);
+        each beat wave fans out to ALL of them through the async mux client,
+        so one dead replica burns its own deadline on the loop thread without
+        delaying the beats the live replicas are owed.  Per replica, a failed
+        beat drops back to the register op with jittered exponential backoff
+        — capped well inside the suspect window, so a replica that restarts
+        empty re-admits this worker before its time-based warmup gate opens
+        and a poller could see a stale view.  The daemon thread itself never
+        dies to a transport error: a full registry outage just means every
+        replica sits in backoff until one answers again.
         """
         if not self.register_endpoint or self._hb_thread is not None:
             return self._hb_thread
+        replicas = parse_fleet(self.register_endpoint)
 
         def loop() -> None:
-            registered = False
+            # Import here, not at module top: aiotransport imports remote.
+            from repro.core.aiotransport import get_async_transport
+
+            aio = get_async_transport()
+            interval = self.heartbeat_interval_s
+            # A beat must settle (or fail) well before the suspect bound;
+            # backoff after failures never exceeds (SUSPECT_BEATS-1) beats =
+            # 2 intervals + jitter, so recovery beats land inside a restarted
+            # replica's warmup window (suspect_beats x interval).
+            beat_timeout = max(2.0, 2.0 * interval)
+            backoff_cap = 2.0 * interval
+            lock = threading.Lock()
+            state = {
+                ep: {"registered": False, "failures": 0, "next_at": 0.0, "inflight": False}
+                for ep in replicas
+            }
+
+            def settle(ep: str, resp: dict[str, Any] | None, exc: Exception | None) -> None:
+                ok = exc is None and isinstance(resp, dict) and bool(resp.get("ok"))
+                with lock:
+                    st = state[ep]
+                    st["inflight"] = False
+                    if ok:
+                        st["registered"] = True
+                        st["failures"] = 0
+                        st["next_at"] = 0.0
+                    else:
+                        st["registered"] = False  # re-register once it answers
+                        st["failures"] = int(st["failures"]) + 1
+                        backoff = min(
+                            backoff_cap,
+                            interval * (2.0 ** min(int(st["failures"]) - 1, 3)),
+                        )
+                        st["next_at"] = (
+                            time.monotonic() + backoff + random.uniform(0.0, interval / 2.0)
+                        )
+
             while not self._hb_stop.is_set():
                 try:
-                    if not registered:
-                        register(
-                            self.register_endpoint, self.endpoint,
-                            capacity=self.capacity, meta={"pid": os.getpid()},
-                        )
-                        registered = True
-                    else:
-                        # Beats carry capacity AND measured throughput, so
-                        # runners size sinks / auto-weights straight from the
-                        # registry view — zero startup pings per member.
-                        heartbeat(
-                            self.register_endpoint, self.endpoint,
-                            capacity=self.capacity, throughput=self.throughput(),
-                        )
-                except RemoteExecutionError:
-                    registered = False  # re-register once the registry answers
+                    now = time.monotonic()
+                    for ep in replicas:
+                        with lock:
+                            st = state[ep]
+                            if st["inflight"] or now < float(st["next_at"]):
+                                continue
+                            st["inflight"] = True
+                            if not st["registered"]:
+                                req: dict[str, Any] = {
+                                    "op": "register",
+                                    "endpoint": self.endpoint,
+                                    "capacity": self.capacity,
+                                    "meta": {"pid": os.getpid()},
+                                }
+                            else:
+                                # Beats carry capacity AND measured throughput,
+                                # so runners size sinks / auto-weights straight
+                                # from the registry view — zero startup pings
+                                # per member.
+                                req = {
+                                    "op": "heartbeat",
+                                    "endpoint": self.endpoint,
+                                    "capacity": self.capacity,
+                                    "throughput": self.throughput(),
+                                }
+                        try:
+                            aio.submit(
+                                ep, req, timeout=beat_timeout,
+                                callback=lambda r, e, _ep=ep: settle(_ep, r, e),
+                            )
+                        except Exception as exc:
+                            settle(ep, None, exc)
+                except Exception:
+                    pass  # the beat daemon must outlive any one bad wave
                 self._hb_stop.wait(self.heartbeat_interval_s)
 
         self._hb_thread = threading.Thread(target=loop, daemon=True, name="worker-heartbeat")
@@ -450,10 +516,11 @@ class WorkerServer(socketserver.ThreadingTCPServer):
             self._hb_thread.join(timeout=2.0)
             self._hb_thread = None
         if deregister_worker and self.register_endpoint:
-            try:
-                deregister(self.register_endpoint, self.endpoint)
-            except RemoteExecutionError:
-                pass  # registry gone; the failure detector reaps us anyway
+            for ep in parse_fleet(self.register_endpoint):
+                try:
+                    deregister(ep, self.endpoint)
+                except RemoteExecutionError:
+                    pass  # replica gone; its failure detector reaps us anyway
 
     def server_close(self) -> None:  # type: ignore[override]
         self.stop_heartbeat()
@@ -816,19 +883,135 @@ def fleet_members(registry_endpoint: str, timeout: float = 10.0) -> list[dict[st
     return list(resp.get("workers", []))
 
 
+def _fresher_row(a: dict[str, Any], b: dict[str, Any]) -> dict[str, Any]:
+    """Last-beat-wins between two replicas' rows for the SAME worker: the
+    smaller ``age_s`` (most recently heard beat) is authoritative; on an
+    exact tie the larger beat count breaks it (a replica that missed beats
+    mid-partition reports the same age after re-admission but fewer beats)."""
+    try:
+        age_a, age_b = float(a.get("age_s", 0.0)), float(b.get("age_s", 0.0))
+    except (TypeError, ValueError):
+        return a
+    if age_a != age_b:
+        return a if age_a < age_b else b
+    return a if int(a.get("beats", 0) or 0) >= int(b.get("beats", 0) or 0) else b
+
+
+def merge_member_rows(views: Sequence[Sequence[dict[str, Any]]]) -> list[dict[str, Any]]:
+    """Merge several replicas' fleet views into one quorum view.
+
+    Per worker endpoint the freshest row wins (:func:`_fresher_row`), so a
+    replica that was partitioned and still carries stale ``suspect`` rows
+    cannot override a peer that heard the worker beat this interval.  Output
+    is sorted by endpoint — byte-stable regardless of which replicas
+    answered or in what order."""
+    merged: dict[str, dict[str, Any]] = {}
+    for view in views:
+        for row in view:
+            ep = str(row.get("endpoint", ""))
+            if not ep:
+                continue
+            cur = merged.get(ep)
+            merged[ep] = row if cur is None else _fresher_row(cur, row)
+    return [merged[ep] for ep in sorted(merged)]
+
+
+def fleet_view(
+    registry_endpoints: "str | Sequence[str]",
+    timeout: float = REGISTRY_OP_TIMEOUT_S,
+) -> tuple[list[dict[str, Any]], list[str]]:
+    """Query EVERY registry replica in one concurrent wave and merge.
+
+    Returns ``(merged_members, answered_replicas)``.  Failover is free: the
+    wave rides the async mux client, so losing replica 1 costs nothing —
+    replica 2's answer was already in flight in the same tick.  A replica
+    that answers with an error payload (e.g. restarted and still warming up)
+    counts as unanswered; zero answered replicas yields ``([], [])`` and the
+    CALLER decides whether a dark control plane means "empty fleet" or
+    "keep the last view" (the watcher keeps it — no flapping)."""
+    replicas = parse_fleet(registry_endpoints)
+    if not replicas:
+        return [], []
+    from repro.core.aiotransport import get_async_transport
+
+    results = get_async_transport().request_many(
+        [(ep, {"op": "fleet"}) for ep in replicas], timeout=timeout
+    )
+    views: list[list[dict[str, Any]]] = []
+    answered: list[str] = []
+    for ep, (resp, _exc) in zip(replicas, results):
+        if isinstance(resp, dict) and resp.get("ok"):
+            views.append(list(resp.get("workers", [])))
+            answered.append(ep)
+    return merge_member_rows(views), answered
+
+
 def wait_members(
-    registry_endpoint: str, count: int = 1, timeout: float = 30.0
+    registry_endpoint: "str | Sequence[str]",
+    count: int = 1,
+    timeout: float = 30.0,
+    required: bool = False,
 ) -> list[dict[str, Any]]:
-    """Poll the registry until >= ``count`` workers are alive (or timeout);
-    returns whatever the final view holds."""
+    """Poll the registry replicas until >= ``count`` workers are alive.
+
+    On timeout the default returns whatever the final merged view holds
+    (possibly short); ``required=True`` instead raises with the partial
+    view spelled out — who IS alive, who is registered-but-not-alive and in
+    what state, and which replicas answered — so a fleet cold-start failure
+    is diagnosable from the message alone."""
+    replicas = parse_fleet(registry_endpoint)
+    deadline = time.monotonic() + timeout
+    members: list[dict[str, Any]] = []
+    answered: list[str] = []
+    while True:
+        members, answered = fleet_view(replicas)
+        alive = [m for m in members if m.get("status") == "alive"]
+        if len(alive) >= count:
+            return alive
+        if time.monotonic() >= deadline:
+            break
+        time.sleep(0.1)
+    if not required:
+        return [m for m in members if m.get("status") == "alive"]
+    alive = [m for m in members if m.get("status") == "alive"]
+    others = [m for m in members if m.get("status") != "alive"]
+    silent = [ep for ep in replicas if ep not in answered]
+    parts = [
+        f"needed {count} alive worker(s), saw {len(alive)} after {timeout:g}s",
+        "alive: " + (", ".join(str(m.get("endpoint")) for m in alive) or "none"),
+    ]
+    if others:
+        parts.append(
+            "registered but not alive: "
+            + ", ".join(f"{m.get('endpoint')} ({m.get('status')})" for m in others)
+        )
+    parts.append(f"replicas answered: {len(answered)}/{len(replicas)}")
+    if silent:
+        parts.append("silent replicas: " + ", ".join(silent))
+    raise RemoteExecutionError("; ".join(parts))
+
+
+def wait_any_ready(
+    registry_endpoints: "str | Sequence[str]", timeout: float = 30.0
+) -> str | None:
+    """Poll the replica list until ANY replica answers ping ok; returns that
+    replica's endpoint, or ``None`` if the whole plane stayed dark."""
+    replicas = parse_fleet(registry_endpoints)
+    if not replicas:
+        return None
     deadline = time.monotonic() + timeout
     while True:
-        try:
-            members = [m for m in fleet_members(registry_endpoint) if m["status"] == "alive"]
-        except RemoteExecutionError:
-            members = []
-        if len(members) >= count or time.monotonic() >= deadline:
-            return members
+        for ep in replicas:
+            try:
+                resp = get_transport(ep).request(
+                    {"op": "ping"}, timeout=REGISTRY_OP_TIMEOUT_S, connect_retries=1
+                )
+            except RemoteExecutionError:
+                continue
+            if resp.get("ok"):
+                return ep
+        if time.monotonic() >= deadline:
+            return None
         time.sleep(0.1)
 
 
@@ -989,9 +1172,11 @@ def main(argv: list[str] | None = None) -> int:
         "(NAT or multi-homed hosts)",
     )
     w.add_argument(
-        "--register", default=None, metavar="HOST:PORT",
-        help="membership registry to join (repro.runtime.membership); the "
-        "worker registers, heartbeats, and deregisters on shutdown",
+        "--register", default=None, metavar="HOST:PORT[,HOST:PORT...]",
+        help="membership registry replica(s) to join (repro.runtime."
+        "membership); the worker registers with, heartbeats to, and "
+        "deregisters from EVERY replica — one replica outage never blocks "
+        "the beat wave",
     )
     w.add_argument(
         "--heartbeat-interval", type=float, default=HEARTBEAT_INTERVAL_S,
@@ -1014,7 +1199,7 @@ def main(argv: list[str] | None = None) -> int:
     fl.add_argument("--count", type=int, default=4, metavar="N")
     fl.add_argument("--host", default="127.0.0.1")
     fl.add_argument("--capacity", type=int, default=1)
-    fl.add_argument("--register", default=None, metavar="HOST:PORT")
+    fl.add_argument("--register", default=None, metavar="HOST:PORT[,HOST:PORT...]")
     fl.add_argument(
         "--heartbeat-interval", type=float, default=HEARTBEAT_INTERVAL_S, metavar="SECONDS"
     )
@@ -1098,7 +1283,10 @@ __all__ = [
     "get_transport",
     "wait_ready",
     "wait_members",
+    "wait_any_ready",
     "fleet_members",
+    "fleet_view",
+    "merge_member_rows",
     "register",
     "heartbeat",
     "deregister",
@@ -1109,4 +1297,5 @@ __all__ = [
     "samples_from_wire",
     "HEARTBEAT_INTERVAL_S",
     "REQUEST_TIMEOUT_S",
+    "REGISTRY_OP_TIMEOUT_S",
 ]

@@ -29,11 +29,18 @@ runtime into transport code.
 """
 from __future__ import annotations
 
+import logging
 import threading
 from typing import Any, Callable
 
-from repro.core.remote import HEARTBEAT_INTERVAL_S, RemoteExecutionError, fleet_members
+from repro.core.remote import HEARTBEAT_INTERVAL_S, fleet_view, parse_fleet
 from repro.core.scheduler import FleetScheduler, Sink
+
+logger = logging.getLogger(__name__)
+
+#: Consecutive all-replica poll failures before the watcher logs a warning
+#: (one warning per dark spell, not one per tick).
+DARK_POLLS_WARN = 5
 
 
 # -- device elasticity (jax mesh) ---------------------------------------------
@@ -83,7 +90,12 @@ def fit_batch(global_batch: int, n_data: int) -> int:
 class FleetWatcher:
     """Mirror a membership registry's view into a running scheduler.
 
-    Polls ``fleet`` on the registry every ``poll_s`` and applies the delta:
+    ``registry_endpoint`` may name several replicas
+    (``a:7170,b:7170,c:7170``): every poll queries ALL of them in one
+    concurrent wave and computes the delta against the merged last-beat-wins
+    quorum view, so losing replica 1 costs nothing — replica 2's answer was
+    already in flight in the same tick.  Polls ``fleet`` every ``poll_s``
+    and applies the delta:
 
     * an **alive** endpoint not yet in the sink set -> ``make_sink(ep)`` +
       ``scheduler.add_sink`` (dynamic-eligibility units become claimable
@@ -95,8 +107,13 @@ class FleetWatcher:
       later simply joins again as a fresh sink.
 
     A transient registry outage changes nothing: the last applied view
-    stands until the registry answers again (no flapping the whole fleet
-    dead on one lost poll).
+    stands until some replica answers again (no flapping the whole fleet
+    dead on one lost poll).  Dark polls ARE counted though —
+    ``poll_failures`` holds the consecutive all-replica failure streak
+    (``dark_polls`` the lifetime total), a warning is logged once the
+    streak hits :data:`DARK_POLLS_WARN`, and the executor copies the final
+    streak into ``SweepStats.registry_poll_failures`` so a sweep that
+    finished with a dark control plane says so in its stats.
     """
 
     def __init__(
@@ -107,10 +124,14 @@ class FleetWatcher:
         poll_s: float = HEARTBEAT_INTERVAL_S / 2,
         observe: Callable[[list[dict]], None] | None = None,
     ):
-        self.registry_endpoint = registry_endpoint
+        self.replicas = parse_fleet(registry_endpoint)
+        # Canonical comma-joined form kept for callers that log/compare it.
+        self.registry_endpoint = ",".join(self.replicas)
         self.scheduler = scheduler
         self.make_sink = make_sink
         self.poll_s = float(poll_s)
+        self.poll_failures = 0  # consecutive polls with ZERO replicas answering
+        self.dark_polls = 0  # lifetime total of such polls
         # Optional tap on every fetched fleet view (full member rows, before
         # the join/leave delta is applied).  The executor uses it to keep its
         # advertised capacity/throughput map fresh from heartbeat payloads so
@@ -126,11 +147,22 @@ class FleetWatcher:
         self.left: list[str] = []
 
     def poll_once(self) -> None:
-        """Fetch the registry view and apply one membership delta."""
-        try:
-            members = fleet_members(self.registry_endpoint)
-        except RemoteExecutionError:
-            return  # transient outage: keep the last applied view
+        """Fetch the merged quorum view and apply one membership delta."""
+        members, answered = fleet_view(self.replicas, timeout=max(2.0, self.poll_s))
+        if not answered:
+            # Transient outage of EVERY replica: keep the last applied view,
+            # but count it — a sweep must be able to report that it finished
+            # under a dark control plane.
+            self.poll_failures += 1
+            self.dark_polls += 1
+            if self.poll_failures == DARK_POLLS_WARN:
+                logger.warning(
+                    "membership registry dark: %d consecutive polls with no "
+                    "replica answering (%s); keeping the last fleet view",
+                    self.poll_failures, self.registry_endpoint,
+                )
+            return
+        self.poll_failures = 0
         if self.observe is not None:
             try:
                 self.observe(members)
@@ -178,6 +210,7 @@ class FleetWatcher:
 
 
 __all__ = [
+    "DARK_POLLS_WARN",
     "FleetWatcher",
     "fit_batch",
     "plan_mesh",

@@ -1,0 +1,467 @@
+"""Replicated membership plane conformance: quorum, sync, failover, chaos.
+
+The control plane's contract, per layer:
+
+  1. *Merge laws* — anti-entropy records are last-beat-wins per worker,
+     relative-age encoded (no clock agreement between replicas), junk and
+     already-dead records are skipped, and two synced replicas answer
+     ``fleet`` **byte-identically** under a shared clock.
+  2. *Warm-up* — a restarted replica refuses ``fleet`` (consumers treat it
+     as unreachable and merge the others) until a sync with a ready peer
+     lands or a full suspect window passes; transitions are clock-driven.
+  3. *Fan-out* — workers beat every replica; a replica outage never kills
+     the beat daemon, and beats resume (re-registering) on recovery.
+  4. *Failover* — ``fleet_view`` merges whatever subset of replicas answers
+     in one concurrent wave; the FleetWatcher keeps its last view over a
+     fully dark plane and counts the dark polls into ``SweepStats``.
+  5. *Restart under fire* — a threaded hammer beats N workers through a
+     kill+restart cycle: the merged view must never flap through
+     ``suspect`` and must re-converge to all-alive.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import pytest
+from test_fleet import FakeClock, _instant_sink
+from test_shard import make_plugin, plugin_box
+
+from repro.core import config as config_mod
+from repro.core import registry as reg
+from repro.core import remote as remote_mod
+from repro.core.aiotransport import get_async_transport
+from repro.core.cache import ResultCache
+from repro.core.executor import SweepExecutor
+from repro.core.faults import FaultSpec, RegistryChaos, RegistryReplicas
+from repro.core.remote import (
+    LocalWorker,
+    RemoteExecutionError,
+    WorkerServer,
+    fleet_view,
+    merge_member_rows,
+    wait_members,
+)
+from repro.core.scheduler import FleetScheduler
+from repro.runtime.elastic import DARK_POLLS_WARN, FleetWatcher
+from repro.runtime.membership import (
+    MembershipServer,
+    ReplicatedRegistry,
+)
+
+
+def _replica(clock=None, peers=(), warmup=False, interval=1.0):
+    kwargs = {"heartbeat_interval_s": interval}
+    if clock is not None:
+        kwargs["now"] = clock
+    return ReplicatedRegistry(peers=peers, warmup=warmup, **kwargs)
+
+
+# -- 1. merge laws ------------------------------------------------------------
+def test_merge_adopts_strictly_fresher_records_only():
+    clock = FakeClock()
+    r = _replica(clock)
+    r.register("w:7001", capacity=1)
+    clock.t += 5.0
+    # Peer heard the worker 1s ago (fresher than our 5s-old evidence).
+    adopted = r.merge_records(
+        [{"endpoint": "w:7001", "age_s": 1.0, "beats": 9, "capacity": 4}]
+    )
+    assert adopted == 1
+    m = r.members()[0]
+    assert (m["age_s"], m["beats"], m["capacity"]) == (1.0, 9, 4)
+    # A staler record (or an equally fresh one) never overwrites.
+    assert r.merge_records([{"endpoint": "w:7001", "age_s": 3.0, "beats": 99}]) == 0
+    assert r.merge_records([{"endpoint": "w:7001", "age_s": 1.0, "beats": 99}]) == 0
+    assert r.members()[0]["beats"] == 9
+
+
+def test_merge_skips_dead_and_junk_records():
+    clock = FakeClock()
+    r = _replica(clock)  # dead bound = 10 beats x 1s
+    assert r.merge_records(
+        [
+            {"endpoint": "w:7001", "age_s": 11.0},  # sender would prune this
+            {"endpoint": "not-an-endpoint"},  # junk endpoint
+            {"endpoint": "w:7002", "age_s": "wat"},  # junk age
+            {},  # no endpoint at all
+        ]
+    ) == 0
+    assert r.members() == []
+
+
+def test_synced_replicas_answer_fleet_byte_identically_over_the_wire():
+    """Acceptance: one shared (injected) clock, real wire sync — the two
+    replicas' ``fleet`` payloads must be byte-equal, ages included."""
+    clock = FakeClock()
+    a_srv = MembershipServer("127.0.0.1", 0, registry=_replica(clock))
+    b_srv = MembershipServer("127.0.0.1", 0, registry=_replica(clock))
+    a_srv.registry.peers = [b_srv.endpoint]
+    b_srv.registry.peers = [a_srv.endpoint]
+    # Serve WITHOUT the background sync daemon: the test drives sync_once()
+    # itself so the merge round is deterministic.
+    ta = threading.Thread(target=a_srv.serve_forever, daemon=True)
+    tb = threading.Thread(target=b_srv.serve_forever, daemon=True)
+    ta.start()
+    tb.start()
+    try:
+        remote_mod.register(a_srv.endpoint, "10.0.0.1:7177", capacity=2)
+        clock.t += 0.5
+        remote_mod.heartbeat(a_srv.endpoint, "10.0.0.1:7177", capacity=2)
+        assert a_srv.registry.sync_once() >= 0  # push-pull: b pulls our table
+        fa = json.dumps(remote_mod.fleet_members(a_srv.endpoint), sort_keys=True)
+        fb = json.dumps(remote_mod.fleet_members(b_srv.endpoint), sort_keys=True)
+        assert fa == fb
+        assert json.loads(fa)[0]["endpoint"] == "10.0.0.1:7177"
+    finally:
+        for srv in (a_srv, b_srv):
+            srv.shutdown()
+            srv.server_close()
+
+
+def test_restarted_replica_converges_in_one_sync_round():
+    clock = FakeClock()
+    a = _replica(clock)
+    a.register("w:7001", capacity=3)
+    a.heartbeat("w:7001")
+    # The restarted peer starts empty; one merge of a's export converges it.
+    b = _replica(clock, peers=["unused:1"], warmup=True)
+    assert not b.ready  # warming up, no sync yet
+    assert b.merge_records(a.export_records()) == 1
+    assert [
+        (m["endpoint"], m["capacity"], m["beats"]) for m in b.members()
+    ] == [("w:7001", 3, 1)]
+    # members() are identical under the shared clock
+    assert a.members() == b.members()
+
+
+def test_failure_detector_transitions_stay_clock_driven_after_merge():
+    """A merged record obeys the SAME alive/suspect/dead bounds as a
+    directly-registered one — replication must not skew detection."""
+    clock = FakeClock()
+    a = _replica(clock)
+    b = _replica(clock)
+    a.register("w:7001")
+    b.merge_records(a.export_records())
+    for bump, status in ((3.0, "alive"), (0.5, "suspect")):
+        clock.t += bump
+        assert [m["status"] for m in a.members()] == [status]
+        assert a.members() == b.members()
+    clock.t += 7.0  # past dead_beats x interval: pruned everywhere
+    assert a.members() == b.members() == []
+
+
+# -- 2. warm-up gating --------------------------------------------------------
+def test_warming_replica_refuses_fleet_until_peer_sync_or_window():
+    clock = FakeClock()
+    r = _replica(clock, peers=["unused:1"], warmup=True, interval=1.0)
+    assert r.handle({"op": "fleet"})["ok"] is False  # gated
+    # register/heartbeat/sync are always served during warmup
+    assert r.handle({"op": "register", "endpoint": "w:7001"})["ok"] is True
+    assert r.handle({"op": "heartbeat", "endpoint": "w:7001"})["ok"] is True
+    # a sync FROM a ready peer opens the gate immediately
+    assert r.handle({"op": "sync", "workers": [], "ready": True})["ok"] is True
+    assert r.handle({"op": "fleet"})["ok"] is True
+
+
+def test_warming_replica_opens_after_a_full_suspect_window():
+    clock = FakeClock()
+    r = _replica(clock, peers=["unused:1"], warmup=True, interval=1.0)
+    assert not r.ready
+    clock.t += 3.0  # suspect_beats x interval: every live worker has beaten us
+    assert r.ready
+    assert r.handle({"op": "fleet"})["ok"] is True
+
+
+# -- merged-view client helpers ----------------------------------------------
+def test_merge_member_rows_keeps_freshest_row_per_endpoint():
+    merged = merge_member_rows(
+        [
+            [{"endpoint": "w:7001", "age_s": 2.0, "beats": 5, "status": "suspect"}],
+            [{"endpoint": "w:7001", "age_s": 0.1, "beats": 7, "status": "alive"},
+             {"endpoint": "w:7002", "age_s": 0.2, "beats": 1, "status": "alive"}],
+        ]
+    )
+    assert [(m["endpoint"], m["status"]) for m in merged] == [
+        ("w:7001", "alive"),
+        ("w:7002", "alive"),
+    ]
+    # age tie -> larger beat count wins (re-admitted record has fewer)
+    merged = merge_member_rows(
+        [
+            [{"endpoint": "w:7001", "age_s": 1.0, "beats": 2}],
+            [{"endpoint": "w:7001", "age_s": 1.0, "beats": 8}],
+        ]
+    )
+    assert merged[0]["beats"] == 8
+
+
+def test_fleet_view_merges_answering_replicas_and_reports_who_answered():
+    with RegistryReplicas(2, heartbeat_interval_s=0.5) as plane:
+        remote_mod.register(plane.endpoints[0], "10.0.0.1:7177")
+        remote_mod.register(plane.endpoints[1], "10.0.0.2:7177")
+        members, answered = fleet_view(plane.register)
+        assert answered == plane.endpoints
+        assert [m["endpoint"] for m in members] == ["10.0.0.1:7177", "10.0.0.2:7177"]
+        # one replica down: same merged view from the survivor + sync'd state
+        plane.kill(0)
+        members, answered = fleet_view(plane.register)
+        assert answered == [plane.endpoints[1]]
+        assert "10.0.0.2:7177" in [m["endpoint"] for m in members]
+    assert fleet_view([]) == ([], [])
+
+
+def test_request_many_settles_every_slot_in_order():
+    srv = MembershipServer("127.0.0.1", 0)
+    srv.serve_in_thread()
+    try:
+        results = get_async_transport().request_many(
+            [
+                (srv.endpoint, {"op": "ping"}),
+                ("not an endpoint", {"op": "ping"}),  # sync submit error
+                ("127.0.0.1:1", {"op": "ping"}),  # nothing listens
+            ],
+            timeout=5.0,
+        )
+        assert results[0][0]["ok"] is True and results[0][1] is None
+        assert results[1][0] is None and isinstance(results[1][1], ValueError)
+        assert results[2][0] is None and isinstance(results[2][1], Exception)
+    finally:
+        srv.shutdown()
+        srv.server_close()
+
+
+def test_wait_members_required_reports_the_partial_view():
+    with RegistryReplicas(2, heartbeat_interval_s=0.5) as plane:
+        remote_mod.register(plane.endpoints[0], "10.0.0.1:7177")
+        dark = "127.0.0.1:1"
+        with pytest.raises(RemoteExecutionError) as err:
+            wait_members(
+                plane.register + "," + dark, count=3, timeout=0.5, required=True
+            )
+    msg = str(err.value)
+    assert "needed 3 alive worker(s), saw 1" in msg
+    assert "10.0.0.1:7177" in msg
+    assert "replicas answered: 2/3" in msg
+    assert f"silent replicas: {dark}" in msg
+
+
+# -- 3. worker heartbeat fan-out ----------------------------------------------
+def test_worker_beats_every_replica_and_survives_an_outage():
+    """Satellite bugfix: the beat daemon must outlive a registry outage and
+    resume (re-registering) when the replica returns."""
+    with RegistryReplicas(2, heartbeat_interval_s=0.1) as plane:
+        w = WorkerServer(
+            "127.0.0.1", 0, capacity=2, register=plane.register,
+            heartbeat_interval_s=0.1,
+        )
+        w.serve_in_thread()
+        hb = w.start_heartbeat()
+        try:
+            # both replicas hear the worker directly (not only via sync)
+            for ep in plane.endpoints:
+                deadline = time.monotonic() + 10
+                while time.monotonic() < deadline:
+                    rows = plane.servers[plane.endpoints.index(ep)].registry.members()
+                    if any(r["endpoint"] == w.endpoint and r["beats"] >= 2 for r in rows):
+                        break
+                    time.sleep(0.05)
+                else:
+                    pytest.fail(f"replica {ep} never heard 2 beats directly")
+            # kill replica 0: the daemon must keep beating replica 1
+            plane.kill(0)
+            time.sleep(0.5)
+            assert hb.is_alive(), "heartbeat daemon died on a registry outage"
+            alive, answered = fleet_view(plane.register)
+            assert [m["endpoint"] for m in alive] == [w.endpoint]
+            # restart replica 0 EMPTY: the worker must re-register into it
+            plane.restart(0)
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                if any(
+                    r["endpoint"] == w.endpoint
+                    for r in plane.servers[0].registry.members()
+                ):
+                    break
+                time.sleep(0.05)
+            else:
+                pytest.fail("worker never re-registered with the restarted replica")
+            assert hb.is_alive()
+        finally:
+            w.shutdown()
+            w.server_close()
+
+
+# -- 4. consumer failover -----------------------------------------------------
+def test_fleet_watcher_fails_over_within_one_tick():
+    # Long beat interval (the fake workers never beat — keep them 'alive'
+    # throughout), fast anti-entropy (the property under test is that the
+    # records reach replica 1 via sync alone before replica 0 dies).
+    with RegistryReplicas(2, heartbeat_interval_s=5.0, sync_interval_s=0.3) as plane:
+        remote_mod.register(plane.endpoints[0], "127.0.0.1:7601")
+        sched = FleetScheduler([_instant_sink("127.0.0.1:7601")], poll_s=0.01)
+        watcher = FleetWatcher(plane.register, sched, make_sink=_instant_sink)
+        # a second worker registers at replica 0 only; anti-entropy fans it
+        remote_mod.register(plane.endpoints[0], "127.0.0.1:7602")
+        time.sleep(1.2)
+        # replica 0 — the only one that heard the registrations directly —
+        # dies: the SAME tick's wave has replica 1's synced answer.
+        plane.kill(0)
+        watcher.poll_once()
+        assert watcher.joined == ["127.0.0.1:7602"]
+        assert watcher.left == []
+        assert watcher.poll_failures == 0
+        assert set(sched.live_sinks()) == {"127.0.0.1:7601", "127.0.0.1:7602"}
+
+
+def test_fleet_watcher_counts_dark_polls_and_keeps_last_view(caplog):
+    sched = FleetScheduler([_instant_sink("127.0.0.1:7601")], poll_s=0.01)
+    watcher = FleetWatcher("127.0.0.1:1,127.0.0.1:2", sched, make_sink=_instant_sink)
+    with caplog.at_level("WARNING", logger="repro.runtime.elastic"):
+        for _ in range(DARK_POLLS_WARN + 1):
+            watcher.poll_once()
+    assert watcher.poll_failures == DARK_POLLS_WARN + 1
+    assert watcher.dark_polls == DARK_POLLS_WARN + 1
+    assert sched.live_sinks() == ["127.0.0.1:7601"]  # view kept, no flapping
+    darks = [r for r in caplog.records if "registry dark" in r.getMessage()]
+    assert len(darks) == 1  # one warning per dark spell, not one per tick
+
+
+def test_sweep_stats_expose_registry_poll_failures(tmp_path):
+    d = make_plugin(tmp_path, "rpf", 2)
+    reg.load_plugin_dir(d)
+    box = plugin_box("rpf")
+    with RegistryReplicas(2, heartbeat_interval_s=0.2) as plane:
+        with LocalWorker(
+            plugin_dirs=[d], register=plane.register, heartbeat_interval_s=0.2
+        ):
+            wait_members(plane.register, count=1, timeout=30)
+            ex = SweepExecutor(
+                platforms=["cpu-host"], workers=2, iters=1, warmup=0,
+                fleet_registry=plane.register,
+                cache=ResultCache(tmp_path / "cache.json"),
+            )
+            res = ex.run_box(box)
+            assert res.stats.errors == 0
+            assert res.stats.registry_poll_failures == 0
+    baseline = SweepExecutor(platforms=["cpu-host"], iters=1, warmup=0).run_box(box)
+    assert res.csv() == baseline.csv()
+
+
+def test_registry_ckey_is_stable_across_replica_order_and_failover():
+    a = SweepExecutor(platforms=["cpu-host"], fleet_registry="h2:7170,h1:7170")
+    b = SweepExecutor(platforms=["cpu-host"], fleet_registry="h1:7170,h2:7170")
+    assert a._fleet_identity() == b._fleet_identity() == "registry://h1:7170,h2:7170"
+
+
+def test_config_validates_registry_replica_lists():
+    errors: list[str] = []
+    cfg = config_mod.SweepConfig(registry="h1:7170,h2:7170")
+    config_mod.validate_sweep(cfg, errors.append, ping_remote=False)
+    assert errors == []
+    cfg = config_mod.SweepConfig(registry="h1:7170,nope")
+    config_mod.validate_sweep(cfg, errors.append, ping_remote=False)
+    assert errors and "nope" in errors[0]
+
+
+# -- 5. chaos harness + restart under fire ------------------------------------
+def test_registry_fault_modes_are_known_to_faultspec_but_not_workers():
+    FaultSpec("registry-kill")
+    FaultSpec("registry-partition")
+    with pytest.raises(ValueError):
+        FaultSpec("registry-wat")
+    # workers reject control-plane modes: they are harness-side only
+    w = WorkerServer("127.0.0.1", 0, allow_faults=True)
+    try:
+        resp = w.dispatch({"op": "fault", "mode": "registry-kill"})
+        assert resp["ok"] is False
+    finally:
+        w.server_close()
+
+
+def test_partitioned_replica_heals_with_stale_state_reconciled():
+    with RegistryReplicas(2, heartbeat_interval_s=0.2) as plane:
+        remote_mod.register(plane.endpoints[0], "10.0.0.1:7177", capacity=1)
+        time.sleep(0.5)  # replicate
+        plane.partition(1)
+        # while 1 is away, the worker's state advances on 0
+        for _ in range(3):
+            remote_mod.heartbeat(plane.endpoints[0], "10.0.0.1:7177", capacity=5)
+            time.sleep(0.05)
+        plane.heal(1)
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            rows = plane.servers[1].registry.members()
+            row = next((r for r in rows if r["endpoint"] == "10.0.0.1:7177"), None)
+            if row is not None and row["capacity"] == 5:
+                break  # stale parked record was overwritten by the merge
+            time.sleep(0.05)
+        else:
+            pytest.fail("healed replica kept its stale pre-partition record")
+
+
+def test_registry_chaos_repairs_everything_on_stop():
+    with RegistryReplicas(3, heartbeat_interval_s=0.2) as plane:
+        chaos = RegistryChaos(plane, seed=11, max_sleep_s=0.3, min_up=1)
+        chaos.start(period_s=0.05)
+        time.sleep(1.0)
+        events = chaos.stop()
+        assert plane.up() == [0, 1, 2]
+        assert events, "seeded chaos injected nothing in 1s"
+        assert {e.spec.mode for e in events} <= {"registry-kill", "registry-partition"}
+
+
+def test_hammer_replica_restart_under_concurrent_heartbeats():
+    """Satellite: N fake workers beat concurrently while a replica is killed
+    and restarted — the merged view must re-converge with NO worker ever
+    flapping through ``suspect``."""
+    n_workers = 4
+    interval = 0.25
+    endpoints = [f"127.0.0.1:{7700 + i}" for i in range(n_workers)]
+    flapped: list[tuple[str, str]] = []
+    stop = threading.Event()
+    with RegistryReplicas(3, heartbeat_interval_s=interval) as plane:
+        def beat(worker_ep: str) -> None:
+            while not stop.is_set():
+                for replica in plane.endpoints:
+                    try:
+                        remote_mod.heartbeat(replica, worker_ep, timeout=2.0)
+                    except RemoteExecutionError:
+                        pass  # downed replica: best effort, like the daemon
+                stop.wait(0.1)
+
+        def watch() -> None:
+            while not stop.is_set():
+                members, answered = fleet_view(plane.register, timeout=2.0)
+                if answered:
+                    for m in members:
+                        if m["endpoint"] in endpoints and m["status"] != "alive":
+                            flapped.append((m["endpoint"], m["status"]))
+                stop.wait(0.05)
+
+        threads = [
+            threading.Thread(target=beat, args=(ep,), daemon=True) for ep in endpoints
+        ] + [threading.Thread(target=watch, daemon=True)]
+        for t in threads:
+            t.start()
+        try:
+            wait_members(plane.register, count=n_workers, timeout=30, required=True)
+            plane.kill(0)
+            time.sleep(3 * interval)  # a full suspect window with 0 down
+            plane.restart(0)
+            time.sleep(3 * interval)  # warmup + re-admission window
+        finally:
+            stop.set()
+            for t in threads:
+                t.join(timeout=5.0)
+        assert flapped == [], f"merged view flapped: {flapped[:5]}"
+        members, answered = fleet_view(plane.register)
+        assert len(answered) == 3
+        assert sorted(m["endpoint"] for m in members if m["status"] == "alive") == sorted(
+            endpoints
+        )
+        # the restarted replica itself converged (directly or via sync)
+        assert sorted(
+            r["endpoint"] for r in plane.servers[0].registry.members()
+        ) == sorted(endpoints)
